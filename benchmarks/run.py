@@ -1,0 +1,33 @@
+"""Benchmark driver — one function per paper table/figure + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV lines per benchmark."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig2_improvement, fig5_runtime, future_tree_allreduce,
+                        table1_idle_bw, table2_bandwidth, roofline_report,
+                        perf_hillclimb)
+
+
+def main() -> None:
+    benches = [
+        ("table2_bandwidth", table2_bandwidth.run),
+        ("fig2_improvement", fig2_improvement.run),
+        ("fig5_runtime", fig5_runtime.run),
+        ("table1_idle_bw", table1_idle_bw.run),
+        ("roofline_report", roofline_report.run),
+        ("perf_hillclimb", perf_hillclimb.run),
+        ("future_tree_allreduce", future_tree_allreduce.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.time()
+        rows = fn(csv_print=lambda s: print("  " + str(s)))
+        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        print(f"{name},{us:.0f},rows={len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 1: idle-bandwidth opportunity across GPU architectures,
+recomputed from the hardware DB (links.py) — including the GB300
+no-contention row."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.links import PROFILES, idle_bw_opportunity
+
+PAPER = {"h800": 32, "h100": 14, "a800": 16, "gb200": 22, "gb300": 33}
+
+
+def run(csv_print=print):
+    csv_print("server,nvlink_GBps,contention,idle_bw_opportunity_pct,"
+              "paper_pct")
+    rows = []
+    for name, paper in PAPER.items():
+        p = PROFILES[name]
+        got = idle_bw_opportunity(p) * 100
+        contention = any(l.shares_pcie_switch for l in p.secondary)
+        rows.append((name, got, paper))
+        csv_print(f"{name},{p.primary.raw_GBps:.0f},"
+                  f"{'yes' if contention else 'no'},{got:.0f},{paper}")
+    return rows
+
+
+def main():
+    t0 = time.time()
+    rows = run()
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print(f"table1_idle_bw,{us:.0f},rows={len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

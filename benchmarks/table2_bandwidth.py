@@ -1,0 +1,75 @@
+"""Paper Table 2: end-to-end algorithm bandwidth + load distribution.
+
+Reproduces the full table — NCCL baseline, FlexLink PCIe-only, FlexLink
+PCIe+RDMA — by running Algorithm 1 (Stage 1) against the calibrated timing
+model for every (operator, #GPUs, message size) cell, and reports the
+prediction error against the paper's published improvements.
+
+Calibration discipline: the NVLink path is fitted to the paper's NCCL
+baseline column ONLY; FlexLink numbers are predictions (simulator.py).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.simulator import (FLEXLINK_IMPROVEMENT_PCT,
+                                  NCCL_BASELINE_GBPS, MiB, PathTimingModel)
+from repro.core.topology import Collective
+from repro.core.tuner import initial_tune
+
+ALL_PATHS = ["nvlink", "pcie", "rdma"]
+PCIE_ONLY = ["nvlink", "pcie"]
+
+
+def predict_cell(model, op, n, mib, paths):
+    payload = mib * MiB
+    res = initial_tune(paths, "nvlink",
+                       lambda fr: model.measure(op, n, payload, fr))
+    bw = model.algbw_GBps(op, n, payload, res.fractions())
+    return bw, res
+
+
+def run(csv_print=print) -> List[dict]:
+    model = PathTimingModel("h800")
+    rows = []
+    hdr = ("op,ngpus,MiB,nccl_GBps,flex_pcie_GBps,pcie_impr_pct,pcie_load,"
+           "flex_full_GBps,full_impr_pct,pcie+rdma_load,paper_impr_pct,"
+           "err_pp")
+    csv_print(hdr)
+    for (op, n, mib), paper in FLEXLINK_IMPROVEMENT_PCT.items():
+        payload = mib * MiB
+        nccl = model.nccl_baseline_GBps(op, n, payload)
+        bw_p, res_p = predict_cell(model, op, n, mib, PCIE_ONLY)
+        bw_f, res_f = predict_cell(model, op, n, mib, ALL_PATHS)
+        impr_p = (bw_p / nccl - 1) * 100
+        impr_f = (bw_f / nccl - 1) * 100
+        row = dict(op=op.value, ngpus=n, mib=mib, nccl=nccl,
+                   flex_pcie=bw_p, pcie_impr=impr_p,
+                   pcie_load=res_p.shares["pcie"],
+                   flex_full=bw_f, full_impr=impr_f,
+                   load_pcie=res_f.shares["pcie"],
+                   load_rdma=res_f.shares["rdma"],
+                   paper_impr=paper, err=abs(impr_f - paper))
+        rows.append(row)
+        csv_print(f"{op.value},{n},{mib},{nccl:.1f},{bw_p:.1f},"
+                  f"{impr_p:.1f},{res_p.shares['pcie']}%,"
+                  f"{bw_f:.1f},{impr_f:.1f},"
+                  f"{res_f.shares['pcie']}+{res_f.shares['rdma']}%,"
+                  f"{paper:.0f},{row['err']:.1f}")
+    errs = [r["err"] for r in rows]
+    csv_print(f"# max abs error {max(errs):.1f}pp, "
+              f"mean {sum(errs)/len(errs):.1f}pp")
+    return rows
+
+
+def main():
+    t0 = time.time()
+    rows = run()
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print(f"table2_bandwidth,{us:.0f},cells={len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""FlexLink core: heterogeneous-link collective aggregation (the paper's
+contribution), adapted to TPU/JAX per DESIGN.md."""
+
+from repro.core.links import (LinkKind, LinkSpec, NodeProfile, PROFILES,
+                              idle_bw_opportunity)
+from repro.core.topology import Collective, RingSchedule
+from repro.core.simulator import (PathTimingModel, NCCL_BASELINE_GBPS,
+                                  FLEXLINK_IMPROVEMENT_PCT, MiB)
+from repro.core.tuner import (SHARE_GRID, TuneResult, initial_tune,
+                              initialize_shares)
+from repro.core.balancer import Evaluator, LoadBalancer
+from repro.core.communicator import (CommConfig, FlexCommunicator,
+                                     comm_init_rank, comm_destroy_all)
+from repro.core import collectives

@@ -1,0 +1,132 @@
+"""Stage 2 — runtime fine-grained adjustment (paper §3.2.2).
+
+An *Evaluator* passively records per-path completion times for every
+collective call; a *Load Balancer* is invoked only periodically, analyses the
+most recent window (default 10 calls) for a persistent trend, and — if the
+slow/fast gap exceeds a threshold — moves one small fixed share from the
+slowest to the fastest path, prioritizing the primary link.  Gradualism is
+the point: it must not react to transient spikes (paper Fig. 5).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+from typing import Deque, Dict, List, Mapping, Optional, Sequence
+
+from repro.core.tuner import SHARE_GRID
+
+RUNTIME_WINDOW = 10            # paper: "the last 10 collective calls"
+RUNTIME_GAP_THRESHOLD = 0.15   # relative slow/fast gap that triggers a move
+RUNTIME_STEP = 1               # grid units moved per adjustment (small+fixed)
+INVOKE_PERIOD = 10             # balancer runs every N calls (periodic)
+
+
+@dataclasses.dataclass
+class Adjustment:
+    call_index: int
+    source: str
+    target: str
+    moved: int
+    gap: float
+    shares_after: Dict[str, int]
+
+
+class Evaluator:
+    """Passively monitors path completion times over a sliding window."""
+
+    def __init__(self, window: int = RUNTIME_WINDOW):
+        self.window = window
+        self._history: Deque[Dict[str, float]] = collections.deque(maxlen=window)
+
+    def record(self, timings: Mapping[str, float]) -> None:
+        self._history.append(dict(timings))
+
+    def __len__(self) -> int:
+        return len(self._history)
+
+    def trend(self, active: Sequence[str]) -> Optional[Dict[str, float]]:
+        """Median per-path time over the window; None until window is full.
+
+        The median (not mean) is what makes the balancer ignore transient
+        spikes: a single slow call cannot shift the median of a full window.
+        """
+        if len(self._history) < self.window:
+            return None
+        out: Dict[str, float] = {}
+        for p in active:
+            vals = [h[p] for h in self._history if p in h]
+            if not vals:
+                return None
+            out[p] = statistics.median(vals)
+        return out
+
+
+class LoadBalancer:
+    """Periodically rebalances shares based on the Evaluator's trend."""
+
+    def __init__(self, shares: Mapping[str, int], primary: str, *,
+                 window: int = RUNTIME_WINDOW,
+                 gap_threshold: float = RUNTIME_GAP_THRESHOLD,
+                 step: int = RUNTIME_STEP,
+                 invoke_period: int = INVOKE_PERIOD,
+                 grid: int = SHARE_GRID):
+        self.shares: Dict[str, int] = dict(shares)
+        assert sum(self.shares.values()) == grid
+        self.primary = primary
+        self.grid = grid
+        self.gap_threshold = gap_threshold
+        self.step = step
+        self.invoke_period = invoke_period
+        self.evaluator = Evaluator(window)
+        self.calls = 0
+        self.adjustments: List[Adjustment] = []
+
+    @property
+    def active(self) -> List[str]:
+        return [p for p, s in self.shares.items() if s > 0]
+
+    def fractions(self) -> Dict[str, float]:
+        return {p: s / self.grid for p, s in self.shares.items()}
+
+    def observe(self, timings: Mapping[str, float]) -> Optional[Adjustment]:
+        """Record one collective call; maybe rebalance (periodic).
+
+        Returns the adjustment made, if any.
+        """
+        self.calls += 1
+        self.evaluator.record({p: timings[p] for p in self.active
+                               if p in timings})
+        if self.calls % self.invoke_period != 0:
+            return None
+        return self._maybe_adjust()
+
+    def _maybe_adjust(self) -> Optional[Adjustment]:
+        active = self.active
+        if len(active) < 2:
+            return None
+        trend = self.evaluator.trend(active)
+        if trend is None:
+            return None
+        slow = max(trend, key=trend.get)
+        fast = min(trend, key=trend.get)
+        t_fast = trend[fast]
+        gap = (trend[slow] - t_fast) / t_fast if t_fast > 0 else 0.0
+        if gap <= self.gap_threshold:
+            return None
+        # Move a small fixed share from the slowest to the fastest path,
+        # prioritizing the primary link (paper §3.2.2).
+        target = self.primary if (slow != self.primary and
+                                  self.shares.get(self.primary, 0) >= 0) else fast
+        if target == slow:
+            target = fast
+        moved = min(self.step, self.shares[slow])
+        if moved <= 0:
+            return None
+        self.shares[slow] -= moved
+        self.shares[target] += moved
+        adj = Adjustment(self.calls, slow, target, moved, gap,
+                         dict(self.shares))
+        self.adjustments.append(adj)
+        return adj

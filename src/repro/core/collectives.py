@@ -1,0 +1,432 @@
+"""Multi-path collectives — FlexLink's Communicator data plane, in JAX.
+
+Every collective here runs inside ``shard_map`` and takes an explicit share
+vector (grid units, see ``tuner.SHARE_GRID``) that partitions the payload
+across *routes*:
+
+  primary : the native XLA collective on the target mesh axis — lowers to the
+            axis' ICI links exactly like NCCL's NVLink ring.
+  staged  : an explicit ``ppermute`` ring on the same axis.  On hardware this
+            models the host-staged path: a logically distinct stream of
+            point-to-point transfers with its own channels, chunk grain and
+            (in the ring-all-reduce) explicit per-step reduce — the hot spot
+            the paper's double-buffered pipeline targets.  In the lowered HLO
+            it appears as ``collective-permute`` ops, which the roofline
+            attributes to the secondary path class.
+  ortho   : neighbor-row detour over an *orthogonal* (otherwise idle) mesh
+            axis: ppermute the share one hop along the ortho axis, run the
+            primary-axis collective on the neighbor row (whose model-axis
+            peers hold exactly the guest payload's shards), ppermute back.
+            Correct for ANY ortho-axis sharding of the payload, and the two
+            hops ride idle ortho links — the TPU analogue of FlexLink's
+            "borrow the idle interconnect" move.
+
+Losslessness (the paper's headline property) is enforced by construction —
+all routes move exact bytes, no quantization — and verified bit-exactly
+against single-path references in ``tests/test_collectives.py``.
+
+Honest-adaptation note (also in DESIGN.md): under perfectly uniform SPMD the
+ortho detour cannot reduce the *sum* of bytes crossing the primary axis —
+that conservation holds on any torus.  What it does do is (a) move bytes onto
+links that are idle at that point of the program, letting XLA's async
+scheduler overlap the two streams, and (b) win outright when the workload is
+non-uniform across rows (MoE hot experts, ragged batches), which is what the
+Stage-2 balancer detects at runtime.  The dry-run roofline quantifies (a)
+structurally via the per-axis collective-byte breakdown.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.tuner import SHARE_GRID
+
+#: payload partition granularity (chunks); shares in grid units are mapped
+#: onto this chunk grid.  16 keeps the jit-variant cache small (DESIGN.md §2).
+CHUNK_GRID = 16
+
+
+# ---------------------------------------------------------------------------
+# payload partitioning
+# ---------------------------------------------------------------------------
+
+def quantize_shares(shares: Mapping[str, int], order: Sequence[str],
+                    grid: int = CHUNK_GRID) -> Dict[str, int]:
+    """Map SHARE_GRID-unit shares onto the CHUNK_GRID, preserving the total.
+
+    Largest-remainder rounding; paths with a nonzero share keep at least one
+    chunk only if rounding leaves room (a <1/grid share legitimately rounds
+    to zero — the tuner treats that as path deactivation).
+    """
+    total = sum(shares.get(p, 0) for p in order)
+    if total <= 0:
+        raise ValueError("shares must sum to a positive total")
+    raw = {p: shares.get(p, 0) * grid / total for p in order}
+    out = {p: int(raw[p]) for p in order}
+    rem = grid - sum(out.values())
+    by_frac = sorted(order, key=lambda p: raw[p] - out[p], reverse=True)
+    for p in by_frac[:rem]:
+        out[p] += 1
+    return out
+
+
+def _flatten_pad(x: jax.Array, grid: int) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % grid
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def partition_payload(x: jax.Array, chunk_units: Mapping[str, int],
+                      order: Sequence[str],
+                      grid: int = CHUNK_GRID) -> Tuple[Dict[str, jax.Array], int]:
+    """Split a tensor into per-path flat segments of `units/grid` each."""
+    flat, pad = _flatten_pad(x, grid)
+    unit = flat.shape[0] // grid
+    segs: Dict[str, jax.Array] = {}
+    off = 0
+    for p in order:
+        u = chunk_units.get(p, 0)
+        if u > 0:
+            segs[p] = lax.dynamic_slice_in_dim(flat, off * unit, u * unit)
+        off += u
+    return segs, pad
+
+
+def merge_payload(segs: Mapping[str, jax.Array], order: Sequence[str],
+                  pad: int, shape: Tuple[int, ...],
+                  dtype) -> jax.Array:
+    """Inverse of partition_payload."""
+    parts = [segs[p] for p in order if p in segs]
+    flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    if pad:
+        flat = flat[: flat.shape[0] - pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def partition_columns(x2d: jax.Array, chunk_units: Mapping[str, int],
+                      order: Sequence[str],
+                      grid: int = CHUNK_GRID,
+                      ) -> Tuple[Dict[str, jax.Array], int]:
+    """Split a [lead, F] matrix into per-path column groups.
+
+    Used by collectives whose per-rank structure lives on the leading axis
+    (reduce_scatter, all_to_all): every path's segment keeps the full leading
+    dim, so each sub-collective preserves the rank-chunk layout.
+    Returns ({path: [lead, F_p]}, col_pad).
+    """
+    lead, f = x2d.shape
+    pad = (-f) % grid
+    if pad:
+        x2d = jnp.pad(x2d, ((0, 0), (0, pad)))
+    unit = (f + pad) // grid
+    segs: Dict[str, jax.Array] = {}
+    off = 0
+    for p in order:
+        u = chunk_units.get(p, 0)
+        if u > 0:
+            segs[p] = lax.dynamic_slice_in_dim(x2d, off * unit, u * unit,
+                                               axis=1)
+        off += u
+    return segs, pad
+
+
+def merge_columns(segs: Mapping[str, jax.Array], order: Sequence[str],
+                  pad: int) -> jax.Array:
+    parts = [segs[p] for p in order if p in segs]
+    out = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    if pad:
+        out = out[:, : out.shape[1] - pad]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# staged-path primitives: explicit ppermute rings
+# ---------------------------------------------------------------------------
+
+def _ring_perm(n: int) -> List[Tuple[int, int]]:
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-gather via N-1 ppermute steps; result ordered by rank like
+    ``lax.all_gather(x, axis_name, tiled=False)`` (leading axis = rank)."""
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = _ring_perm(n)
+    chunks = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+    stacked = jnp.stack(chunks)            # entry k holds rank (idx - k) % n
+    order = (idx - jnp.arange(n)) % n      # entry j should hold rank j
+    inv = jnp.argsort(order)
+    return jnp.take(stacked, inv, axis=0)
+
+
+def ring_reduce_scatter(x: jax.Array, axis_name: str,
+                        accumulate=None) -> jax.Array:
+    """Reduce-scatter via the classic N-1 step ring.
+
+    `x` has leading dim divisible by N; returns this rank's reduced chunk.
+    `accumulate(a, b)` is the per-step reduce — defaults to ``a + b`` but the
+    Pallas ``chunk_accumulate`` kernel can be injected (the paper's
+    reduce-sum hot spot).
+    """
+    if accumulate is None:
+        accumulate = lambda a, b: a + b
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    chunks = x.reshape((n, -1) + x.shape[1:])
+    perm = _ring_perm(n)
+    # step s: rank r sends the partial for chunk (r - s - 1) and
+    # receives+reduces the partial for chunk (r - s - 2); after N-1 steps
+    # rank r owns fully reduced chunk r — matching psum_scatter's layout.
+    cur = jnp.take(chunks, (idx - 1) % n, axis=0)
+    for s in range(n - 1):
+        cur = lax.ppermute(cur, axis_name, perm)
+        mine = jnp.take(chunks, (idx - s - 2) % n, axis=0)
+        cur = accumulate(cur, mine)
+    return cur  # fully reduced chunk idx
+
+
+def ring_all_reduce(x: jax.Array, axis_name: str, accumulate=None) -> jax.Array:
+    """All-reduce = ring reduce-scatter + ring all-gather (2(N-1) steps)."""
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    flat, pad = _flatten_pad(x, n)
+    mine = ring_reduce_scatter(flat.reshape(n, -1), axis_name, accumulate)
+    gathered = ring_all_gather(mine, axis_name)        # [n, chunk] by rank
+    # rank r contributed chunk r, so rank order == payload order.
+    flat_out = gathered.reshape(-1)
+    if pad:
+        flat_out = flat_out[:-pad]
+    return flat_out.reshape(x.shape)
+
+
+def tree_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce via recursive doubling: log2(N) butterfly steps.
+
+    The paper's §6 future work for the 8-GPU AllReduce problem: a ring pays
+    2(N-1) sequential steps, which amplifies secondary-path latency; the
+    butterfly pays log2(N), trading 1.7x more wire bytes for 4.7x fewer
+    latency units at N=8.  Requires power-of-two N.
+    """
+    n = lax.axis_size(axis_name)
+    assert n & (n - 1) == 0, "recursive doubling needs power-of-two ranks"
+    k = 0
+    while (1 << k) < n:
+        perm = [(i, i ^ (1 << k)) for i in range(n)]
+        x = x + lax.ppermute(x, axis_name, perm)
+        k += 1
+    return x
+
+
+# ---------------------------------------------------------------------------
+# ortho-route primitives
+# ---------------------------------------------------------------------------
+
+def ortho_all_gather(x: jax.Array, axis_name: str, ortho_name: str) -> jax.Array:
+    """Gather over `axis_name` routing payload via `ortho_name` links.
+
+    Neighbor-row detour: ppermute the share one step along the idle ortho
+    axis, run the primary-axis collective THERE (the neighbor row's model-
+    axis peers hold exactly the corresponding shards of the guest payload),
+    and ppermute the result back.  Correct for ANY sharding across the
+    ortho axis — the operands never mix between ortho rows — and the two
+    permutes ride otherwise-idle ortho links.  (On a torus the primary-axis
+    byte total is conserved — the win is overlap/scheduling, DESIGN.md §2.)
+    """
+    m = lax.axis_size(ortho_name)
+    if m <= 1:
+        return lax.all_gather(x, axis_name)
+    fwd = [(i, (i + 1) % m) for i in range(m)]
+    bwd = [(i, (i - 1) % m) for i in range(m)]
+    guest = lax.ppermute(x, ortho_name, fwd)
+    gathered = lax.all_gather(guest, axis_name)         # [n, ...]
+    return lax.ppermute(gathered, ortho_name, bwd)
+
+
+def ortho_all_reduce(x: jax.Array, axis_name: str, ortho_name: str) -> jax.Array:
+    """All-reduce over `axis_name` via the neighbor-row detour (see
+    ortho_all_gather): permute -> psum on the neighbor row -> permute back.
+    Lossless for any ortho-axis sharding."""
+    m = lax.axis_size(ortho_name)
+    if m <= 1:
+        return lax.psum(x, axis_name)
+    fwd = [(i, (i + 1) % m) for i in range(m)]
+    bwd = [(i, (i - 1) % m) for i in range(m)]
+    guest = lax.ppermute(x, ortho_name, fwd)
+    reduced = lax.psum(guest, axis_name)
+    return lax.ppermute(reduced, ortho_name, bwd)
+
+
+# ---------------------------------------------------------------------------
+# FlexLink multi-path collectives
+# ---------------------------------------------------------------------------
+
+PATH_PRIMARY = "primary"
+PATH_STAGED = "staged"
+PATH_ORTHO = "ortho"
+PATH_ORDER = (PATH_PRIMARY, PATH_STAGED, PATH_ORTHO)
+
+
+def _route_plan(shares: Optional[Mapping[str, int]],
+                ortho_name: Optional[str]) -> Dict[str, int]:
+    if shares is None:
+        return {PATH_PRIMARY: CHUNK_GRID}
+    order = [p for p in PATH_ORDER if not (p == PATH_ORTHO and ortho_name is None)]
+    chunk_units = quantize_shares(shares, order)
+    return {p: u for p, u in chunk_units.items() if u > 0}
+
+
+def flex_all_reduce(x: jax.Array, axis_name: str, *,
+                    shares: Optional[Mapping[str, int]] = None,
+                    ortho_name: Optional[str] = None,
+                    accumulate=None) -> jax.Array:
+    """Share-partitioned multi-path all-reduce (lossless)."""
+    plan = _route_plan(shares, ortho_name)
+    if set(plan) == {PATH_PRIMARY}:
+        return lax.psum(x, axis_name)
+    segs, pad = partition_payload(x, plan, PATH_ORDER)
+    out: Dict[str, jax.Array] = {}
+    if PATH_PRIMARY in segs:
+        out[PATH_PRIMARY] = lax.psum(segs[PATH_PRIMARY], axis_name)
+    if PATH_STAGED in segs:
+        out[PATH_STAGED] = ring_all_reduce(segs[PATH_STAGED], axis_name,
+                                           accumulate)
+    if PATH_ORTHO in segs:
+        out[PATH_ORTHO] = ortho_all_reduce(segs[PATH_ORTHO], axis_name,
+                                           ortho_name)
+    return merge_payload(out, PATH_ORDER, pad, x.shape, x.dtype)
+
+
+def flex_all_gather(x: jax.Array, axis_name: str, *,
+                    shares: Optional[Mapping[str, int]] = None,
+                    ortho_name: Optional[str] = None,
+                    tiled: bool = False) -> jax.Array:
+    """Share-partitioned multi-path all-gather.
+
+    Returns rank-major stacked result ``[n, *x.shape]`` (or tiled along axis
+    0 when ``tiled=True``), identical to ``lax.all_gather``.
+    """
+    n = lax.axis_size(axis_name)
+    plan = _route_plan(shares, ortho_name)
+    if set(plan) == {PATH_PRIMARY}:
+        g = lax.all_gather(x, axis_name)
+    else:
+        segs, pad = partition_payload(x, plan, PATH_ORDER)
+        out: Dict[str, jax.Array] = {}
+        if PATH_PRIMARY in segs:
+            out[PATH_PRIMARY] = lax.all_gather(segs[PATH_PRIMARY], axis_name)
+        if PATH_STAGED in segs:
+            out[PATH_STAGED] = ring_all_gather(segs[PATH_STAGED], axis_name)
+        if PATH_ORTHO in segs:
+            out[PATH_ORTHO] = ortho_all_gather(segs[PATH_ORTHO], axis_name,
+                                               ortho_name)
+        # each out[p] is [n, seg_len]; concatenate per-rank then unpad+reshape
+        per_rank = jnp.concatenate(
+            [out[p] for p in PATH_ORDER if p in out], axis=1)
+        if pad:
+            per_rank = per_rank[:, :-pad]
+        g = per_rank.reshape((n,) + x.shape)
+    if tiled:
+        g = g.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else g.reshape(-1)
+    return g
+
+
+def flex_reduce_scatter(x: jax.Array, axis_name: str, *,
+                        shares: Optional[Mapping[str, int]] = None,
+                        ortho_name: Optional[str] = None,
+                        accumulate=None) -> jax.Array:
+    """Share-partitioned reduce-scatter over leading dim (len divisible by n)."""
+    n = lax.axis_size(axis_name)
+    assert x.shape[0] % n == 0, "leading dim must divide the axis size"
+    plan = _route_plan(shares, ortho_name)
+    if set(plan) == {PATH_PRIMARY}:
+        return lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
+    # Partition along the *feature* (trailing) payload so every path scatters
+    # the same rank-chunk structure on the leading axis.
+    lead = x.shape[0]
+    feat = x.reshape(lead, -1)
+    segs, pad = partition_columns(feat, plan, PATH_ORDER)
+    out: Dict[str, jax.Array] = {}
+    for p, seg in segs.items():                              # seg: [lead, f_p]
+        if p == PATH_PRIMARY:
+            out[p] = lax.psum_scatter(seg, axis_name, scatter_dimension=0,
+                                      tiled=True)
+        elif p == PATH_STAGED:
+            out[p] = ring_reduce_scatter(seg, axis_name, accumulate)
+        else:
+            red_full = ortho_all_reduce(seg, axis_name, ortho_name)
+            idx = lax.axis_index(axis_name)
+            out[p] = lax.dynamic_slice_in_dim(red_full, idx * (lead // n),
+                                              lead // n, axis=0)
+    merged = merge_columns(out, PATH_ORDER, pad)            # [lead/n, F]
+    return merged.reshape((lead // n,) + x.shape[1:])
+
+
+def flex_all_to_all(x: jax.Array, axis_name: str, *,
+                    split_axis: int = 0, concat_axis: int = 0,
+                    shares: Optional[Mapping[str, int]] = None,
+                    ortho_name: Optional[str] = None) -> jax.Array:
+    """Share-partitioned all-to-all (paper §6 future work — we ship it).
+
+    The staged route sends each peer's slice with a dedicated ppermute ring
+    rotation; the primary route is native ``lax.all_to_all``.  Restricted to
+    ``split_axis == concat_axis`` (the expert-parallel dispatch pattern).
+    """
+    if split_axis != concat_axis:
+        raise NotImplementedError("flex_all_to_all requires split==concat axis")
+    n = lax.axis_size(axis_name)
+    plan = _route_plan(shares, ortho_name)
+    # all_to_all has no ortho detour that avoids primary links; fold ortho
+    # share into the staged route (the balancer never routes a2a via ortho).
+    if PATH_ORTHO in plan:
+        plan[PATH_STAGED] = plan.get(PATH_STAGED, 0) + plan.pop(PATH_ORTHO)
+    if set(plan) == {PATH_PRIMARY}:
+        return lax.all_to_all(x, axis_name, split_axis, concat_axis,
+                              tiled=True)
+    # split the trailing payload per path: move split_axis to front first
+    xm = jnp.moveaxis(x, split_axis, 0)
+    lead = xm.shape[0]
+    feat = xm.reshape(lead, -1)
+    segs, pad = partition_columns(feat, plan, PATH_ORDER)
+    outs: Dict[str, jax.Array] = {}
+    for p, seg in segs.items():                             # [lead, f_p]
+        if p == PATH_PRIMARY:
+            outs[p] = lax.all_to_all(seg, axis_name, 0, 0, tiled=True)
+        else:
+            outs[p] = _ring_all_to_all(seg, axis_name)
+    merged = merge_columns(outs, PATH_ORDER, pad)           # [lead, F]
+    res = merged.reshape(xm.shape)
+    return jnp.moveaxis(res, 0, split_axis)
+
+
+def _ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """all-to-all via N-1 ppermute rotations (tiled semantics, axis 0)."""
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    chunk = x.shape[0] // n
+    blocks = x.reshape((n, chunk) + x.shape[1:])
+    # rotation s delivers block (idx + s) of each rank to rank (idx + s)...
+    # simpler: for each s, send block dest=(idx+s)%n to rank (idx+s)%n via
+    # ppermute with shift s; the piece we receive comes from rank (idx-s).
+    received = [jnp.take(blocks, idx % n, axis=0)]        # s=0: own block
+    for s in range(1, n):
+        send = jnp.take(blocks, (idx + s) % n, axis=0)
+        perm = [(i, (i + s) % n) for i in range(n)]
+        got = lax.ppermute(send, axis_name, perm)          # from rank idx-s
+        received.append(got)
+    stacked = jnp.stack(received)        # entry s = block from rank (idx-s)
+    order = (idx - jnp.arange(n)) % n
+    inv = jnp.argsort(order)
+    out = jnp.take(stacked, inv, axis=0) # entry j = block from rank j
+    return out.reshape((n * chunk,) + x.shape[1:])

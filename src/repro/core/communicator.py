@@ -1,0 +1,238 @@
+"""FlexCommunicator — the paper's *Communicator* (§3.1) + NCCL-shaped API.
+
+Responsibilities, mirroring Figure 1:
+
+  * abstract the node's heterogeneous links into a unified path pool
+    (``links.NodeProfile``);
+  * run Stage-1 coarse tuning at init (Algorithm 1) per (collective,
+    ring-size, payload-bucket) — the paper's "~10 s profiling phase";
+  * serve collectives, partitioning payload by the current shares;
+  * feed per-call timings to the Stage-2 Evaluator/LoadBalancer and adopt its
+    adjustments;
+  * stay NCCL-API compatible: ``all_reduce/all_gather/reduce_scatter/
+    all_to_all/broadcast`` with the usual signatures, plus a pure-"NCCL"
+    mode (single-path) so the baseline is the same code path minus
+    aggregation.
+
+Share changes imply new jit variants (shapes change); shares are quantized
+to the CHUNK_GRID and compiled variants are cached per quantized plan —
+Stage 2 moves one unit at a time, so the cache stays tiny (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import collectives as mp
+from repro.core.balancer import LoadBalancer
+from repro.core.links import NodeProfile, PROFILES
+from repro.core.simulator import PathTimingModel
+from repro.core.topology import Collective
+from repro.core.tuner import SHARE_GRID, TuneResult, initial_tune
+
+#: map link-kind order of a profile onto the three route classes of
+#: ``collectives.py``: the primary link, the first secondary (staged/host
+#: path) and the remaining secondary (ortho/NIC path).
+ROUTE_BY_SLOT = (mp.PATH_PRIMARY, mp.PATH_STAGED, mp.PATH_ORTHO)
+
+#: payload-size buckets (bytes) that get independently tuned shares — the
+#: paper's Stage 2 exists because the optimum varies with message size.
+SIZE_BUCKETS = tuple(int(2 ** p) for p in range(20, 31))  # 1 MiB .. 1 GiB
+
+
+def bucket_for(nbytes: int) -> int:
+    for b in SIZE_BUCKETS:
+        if nbytes <= b:
+            return b
+    return SIZE_BUCKETS[-1]
+
+
+@dataclasses.dataclass
+class CommConfig:
+    backend: str = "flexlink"          # "flexlink" | "nccl"
+    profile: str = "tpu_v5e"
+    runtime_balancing: bool = True
+    measurement_noise: float = 0.0     # simulator noise for the balancer loop
+    seed: int = 0
+
+
+class FlexCommunicator:
+    """One communicator per (mesh axis, ring size) — like an ncclComm."""
+
+    def __init__(self, axis_name: str, n_ranks: int,
+                 config: Optional[CommConfig] = None,
+                 ortho_name: Optional[str] = None):
+        self.config = config or CommConfig()
+        self.axis_name = axis_name
+        self.ortho_name = ortho_name
+        self.n_ranks = n_ranks
+        self.profile: NodeProfile = PROFILES[self.config.profile]
+        self.model = PathTimingModel(self.profile,
+                                     noise=self.config.measurement_noise,
+                                     seed=self.config.seed)
+        self._tuned: Dict[Tuple[Collective, int], TuneResult] = {}
+        self._balancers: Dict[Tuple[Collective, int], LoadBalancer] = {}
+        #: collectives issued during the most recent trace — the host loop
+        #: replays these into record_call() after every executed step.
+        self._issued: list = []
+
+    def issued_calls(self):
+        return list(self._issued)
+
+    def reset_issued(self) -> None:
+        self._issued.clear()
+
+    def observe_executed_step(self) -> bool:
+        """Host-side Stage-2 hook: record one executed step's collectives.
+
+        Returns True when the balancer changed any share (the caller should
+        re-trace with the new plan — the jit-variant cache in DESIGN.md §2).
+        """
+        before = {k: dict(b.shares) for k, b in self._balancers.items()}
+        for op, nbytes in self._issued:
+            self.record_call(op, nbytes)
+        after = {k: dict(b.shares) for k, b in self._balancers.items()}
+        return before != after
+
+    # -- control plane -------------------------------------------------------
+
+    @property
+    def path_names(self) -> Tuple[str, ...]:
+        names = [self.profile.primary.name]
+        names += [l.name for l in self.profile.secondary]
+        return tuple(names[: len(ROUTE_BY_SLOT)])
+
+    def route_of(self, path_name: str) -> str:
+        return ROUTE_BY_SLOT[self.path_names.index(path_name)]
+
+    def tune(self, op: Collective, payload_bytes: int) -> TuneResult:
+        """Stage 1 (Algorithm 1) for one (op, size-bucket); memoized."""
+        key = (op, bucket_for(payload_bytes))
+        if key not in self._tuned:
+            names = self.path_names
+            primary = self.profile.primary.name
+
+            def measure(fracs: Mapping[str, float]) -> Dict[str, float]:
+                return self.model.measure(op, self.n_ranks, key[1], fracs)
+
+            if self.config.backend == "nccl" or self.n_ranks <= 1:
+                res = initial_tune([primary], primary, measure)
+            else:
+                res = initial_tune(list(names), primary, measure)
+            self._tuned[key] = res
+            self._balancers[key] = LoadBalancer(res.shares, primary)
+        return self._tuned[key]
+
+    def shares_for(self, op: Collective, payload_bytes: int) -> Dict[str, int]:
+        """Current grid-unit shares keyed by *route class*."""
+        key = (op, bucket_for(payload_bytes))
+        self.tune(op, payload_bytes)
+        bal = self._balancers[key]
+        return {self.route_of(p): s for p, s in bal.shares.items() if s > 0}
+
+    def record_call(self, op: Collective, payload_bytes: int) -> None:
+        """Stage 2: observe one call's (simulated) timings, maybe rebalance."""
+        if not self.config.runtime_balancing or self.config.backend == "nccl":
+            return
+        key = (op, bucket_for(payload_bytes))
+        self.tune(op, payload_bytes)
+        bal = self._balancers[key]
+        timings = self.model.measure(op, self.n_ranks, payload_bytes,
+                                     bal.fractions())
+        bal.observe(timings)
+
+    # -- data plane (NCCL-shaped; call inside shard_map) ----------------------
+
+    def _plan(self, op: Collective, x: jax.Array) -> Optional[Dict[str, int]]:
+        if self.config.backend == "nccl" or self.n_ranks <= 1:
+            return None
+        nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
+        shares = self.shares_for(op, nbytes)
+        # NB: Stage-2 observation (record_call) is driven by the *host-side*
+        # training/serving loop once per executed step — _plan runs at trace
+        # time, so recording here would advance the balancer per-trace.
+        self._issued.append((op, nbytes))
+        if set(shares) == {mp.PATH_PRIMARY}:
+            return None
+        return shares
+
+    def all_reduce(self, x: jax.Array, accumulate=None) -> jax.Array:
+        shares = self._plan(Collective.ALL_REDUCE, x)
+        return mp.flex_all_reduce(x, self.axis_name, shares=shares,
+                                  ortho_name=self.ortho_name,
+                                  accumulate=accumulate)
+
+    def all_gather(self, x: jax.Array, tiled: bool = True) -> jax.Array:
+        shares = self._plan(Collective.ALL_GATHER, x)
+        return mp.flex_all_gather(x, self.axis_name, shares=shares,
+                                  ortho_name=self.ortho_name, tiled=tiled)
+
+    def reduce_scatter(self, x: jax.Array, accumulate=None) -> jax.Array:
+        shares = self._plan(Collective.REDUCE_SCATTER, x)
+        return mp.flex_reduce_scatter(x, self.axis_name, shares=shares,
+                                      ortho_name=self.ortho_name,
+                                      accumulate=accumulate)
+
+    def all_to_all(self, x: jax.Array, split_axis: int = 0,
+                   concat_axis: int = 0) -> jax.Array:
+        shares = self._plan(Collective.ALL_TO_ALL, x)
+        return mp.flex_all_to_all(x, self.axis_name, split_axis=split_axis,
+                                  concat_axis=concat_axis, shares=shares,
+                                  ortho_name=self.ortho_name)
+
+    def broadcast(self, x: jax.Array, root: int = 0) -> jax.Array:
+        # single-path: broadcast payloads are small; the tuner would
+        # deactivate secondaries anyway (latency-bound).
+        import jax.numpy as jnp
+        from jax import lax
+        idx = lax.axis_index(self.axis_name)
+        masked = jnp.where(idx == root, x, jnp.zeros_like(x))
+        return lax.psum(masked, self.axis_name)
+
+    # -- reporting -------------------------------------------------------------
+
+    def report(self) -> Dict[str, object]:
+        out = {}
+        for (op, bucket), res in self._tuned.items():
+            bal = self._balancers[(op, bucket)]
+            out[f"{op.value}@{bucket}"] = {
+                "stage1_shares": res.shares,
+                "stage1_iters": res.iterations,
+                "converged": res.converged,
+                "current_shares": dict(bal.shares),
+                "stage2_adjustments": len(bal.adjustments),
+                "predicted_algbw_GBps": self.model.algbw_GBps(
+                    op, self.n_ranks, bucket, bal.fractions()),
+                "nccl_algbw_GBps": self.model.nccl_baseline_GBps(
+                    op, self.n_ranks, bucket),
+            }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# NCCL-compatible module-level API (paper: "drop-in replacement compatible
+# with the NCCL API").  Mirrors ncclAllReduce & friends for code written
+# against a communicator handle.
+# ---------------------------------------------------------------------------
+
+_COMMS: Dict[Tuple[str, int, str, Optional[str]], FlexCommunicator] = {}
+
+
+def comm_init_rank(axis_name: str, n_ranks: int,
+                   config: Optional[CommConfig] = None,
+                   ortho_name: Optional[str] = None) -> FlexCommunicator:
+    """ncclCommInitRank analogue (memoized per axis/backend)."""
+    cfg = config or CommConfig()
+    key = (axis_name, n_ranks, cfg.backend, ortho_name)
+    if key not in _COMMS:
+        _COMMS[key] = FlexCommunicator(axis_name, n_ranks, cfg, ortho_name)
+    return _COMMS[key]
+
+
+def comm_destroy_all() -> None:
+    _COMMS.clear()

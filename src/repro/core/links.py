@@ -1,0 +1,249 @@
+"""Link specifications and the hardware database.
+
+A *link class* is one physically (or logically) distinct route that a collective
+can push payload over.  On the paper's H800 node these are NVLink, the
+host-staged PCIe path and the intra-node RDMA NIC path; on our TPU v5e target
+they are the primary-axis ICI ring, the orthogonal-axis ICI detour, the host
+PCIe DMA path and the DCN (pod-axis) NICs.
+
+All bandwidth numbers are *bidirectional* GB/s at the hardware level, matching
+Table 1 of the paper; ``effective_GBps`` is the achievable unidirectional
+collective-payload bandwidth used by the timing simulator (calibrated once
+against the paper's NCCL baseline column, never against FlexLink's results —
+see ``simulator.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Tuple
+
+
+class LinkKind(enum.Enum):
+    """Physical class of a communication route."""
+
+    NVLINK = "nvlink"          # GPU primary fabric
+    PCIE = "pcie"              # host-staged PCIe path
+    RDMA = "rdma"              # intra-node NIC path (NVSHMEM in the paper)
+    ICI_PRIMARY = "ici"        # TPU: torus links along the collective's axis
+    ICI_ORTHO = "ici_ortho"    # TPU: idle orthogonal-axis torus links
+    HOST_PCIE = "host_pcie"    # TPU: chip<->host DMA
+    DCN = "dcn"                # TPU: pod-axis data-center network
+
+
+#: Link kinds that count as the "primary" path (NVLink-centric logic in
+#: Algorithm 1 favors these).
+PRIMARY_KINDS = frozenset({LinkKind.NVLINK, LinkKind.ICI_PRIMARY})
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One aggregatable route.
+
+    Attributes:
+      name: unique route name within a node profile.
+      kind: physical class.
+      raw_GBps: bidirectional hardware bandwidth (Table-1 style).
+      effective_GBps: achievable unidirectional collective payload bandwidth.
+      step_latency_us: per-ring-step *per-rank* latency (sync + launch +
+        first-byte).  The simulator scales it by the ring size N — each
+        host-mediated step completes when the slowest of N chunk handoffs
+        lands, and that straggler tail grows with N.  This N-scaling is what
+        kills secondary paths for 8-GPU AllReduce (2(N-1)=14 sequential
+        steps × 8-rank sync each) in the paper's Table 2 while leaving 2-GPU
+        AllReduce with +20%.
+      fixed_overhead_us: one-time per-collective setup cost.
+      shares_pcie_switch: True when the route contends with the host PCIe path
+        (H800-generation "path contention" in Table 1); the simulator caps the
+        *sum* of contending routes at the PCIe interface bandwidth.
+    """
+
+    name: str
+    kind: LinkKind
+    raw_GBps: float
+    effective_GBps: float
+    step_latency_us: float
+    fixed_overhead_us: float = 0.0
+    shares_pcie_switch: bool = False
+
+    @property
+    def is_primary(self) -> bool:
+        return self.kind in PRIMARY_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeProfile:
+    """A machine profile: the set of aggregatable links + contention rule."""
+
+    name: str
+    links: Tuple[LinkSpec, ...]
+    #: bandwidth ceiling (GB/s, unidirectional payload) for all routes with
+    #: ``shares_pcie_switch=True`` together; None = no contention.
+    pcie_switch_ceiling_GBps: Optional[float] = None
+
+    def link(self, name: str) -> LinkSpec:
+        for l in self.links:
+            if l.name == name:
+                return l
+        raise KeyError(f"no link {name!r} in profile {self.name!r}")
+
+    @property
+    def primary(self) -> LinkSpec:
+        for l in self.links:
+            if l.is_primary:
+                return l
+        raise ValueError(f"profile {self.name!r} has no primary link")
+
+    @property
+    def secondary(self) -> Tuple[LinkSpec, ...]:
+        return tuple(l for l in self.links if not l.is_primary)
+
+
+# ---------------------------------------------------------------------------
+# Hardware database.
+#
+# GPU rows mirror Table 1 of the paper (bidirectional GB/s; RDMA NIC figures
+# converted from Gb/s).  ``effective_GBps`` for H800 is calibrated in
+# simulator.py from the NCCL baseline column of Table 2; other GPU rows scale
+# by their raw ratios.  TPU v5e constants follow the brief: 197 TFLOP/s bf16,
+# 819 GB/s HBM, ~50 GB/s per ICI link.
+# ---------------------------------------------------------------------------
+
+def _gbits(gbps: float) -> float:
+    return gbps / 8.0
+
+
+# Paper §5.1: per-GPU ConnectX-6 "50 GB/s" NICs (400 Gb/s class), PCIe Gen5
+# x16 = 64 GB/s unidirectional.  The effective numbers below are the
+# calibration targets explained in simulator.py.
+H800 = NodeProfile(
+    name="h800",
+    links=(
+        LinkSpec("nvlink", LinkKind.NVLINK, raw_GBps=400.0,
+                 effective_GBps=139.0, step_latency_us=4.0),
+        LinkSpec("pcie", LinkKind.PCIE, raw_GBps=128.0,
+                 effective_GBps=26.0, step_latency_us=10.0,
+                 fixed_overhead_us=20.0, shares_pcie_switch=True),
+        LinkSpec("rdma", LinkKind.RDMA, raw_GBps=_gbits(800.0),
+                 effective_GBps=14.0, step_latency_us=14.0,
+                 fixed_overhead_us=30.0, shares_pcie_switch=True),
+    ),
+    pcie_switch_ceiling_GBps=64.0,
+)
+
+H100 = NodeProfile(
+    name="h100",
+    links=(
+        LinkSpec("nvlink", LinkKind.NVLINK, raw_GBps=900.0,
+                 effective_GBps=139.0 * 900.0 / 400.0, step_latency_us=4.0),
+        LinkSpec("pcie", LinkKind.PCIE, raw_GBps=128.0,
+                 effective_GBps=26.0, step_latency_us=10.0,
+                 fixed_overhead_us=20.0, shares_pcie_switch=True),
+        LinkSpec("rdma", LinkKind.RDMA, raw_GBps=_gbits(800.0),
+                 effective_GBps=14.0, step_latency_us=14.0,
+                 fixed_overhead_us=30.0, shares_pcie_switch=True),
+    ),
+    pcie_switch_ceiling_GBps=64.0,
+)
+
+A800 = NodeProfile(
+    name="a800",
+    links=(
+        LinkSpec("nvlink", LinkKind.NVLINK, raw_GBps=400.0,
+                 effective_GBps=139.0, step_latency_us=5.0),
+        LinkSpec("pcie", LinkKind.PCIE, raw_GBps=64.0,
+                 effective_GBps=13.0, step_latency_us=12.0,
+                 fixed_overhead_us=25.0, shares_pcie_switch=True),
+        LinkSpec("rdma", LinkKind.RDMA, raw_GBps=_gbits(400.0),
+                 effective_GBps=7.0, step_latency_us=18.0,
+                 fixed_overhead_us=35.0, shares_pcie_switch=True),
+    ),
+    pcie_switch_ceiling_GBps=32.0,
+)
+
+GB200 = NodeProfile(
+    name="gb200",
+    links=(
+        LinkSpec("nvlink", LinkKind.NVLINK, raw_GBps=1800.0,
+                 effective_GBps=139.0 * 1800.0 / 400.0, step_latency_us=3.0),
+        LinkSpec("pcie", LinkKind.PCIE, raw_GBps=400.0,
+                 effective_GBps=80.0, step_latency_us=8.0,
+                 fixed_overhead_us=15.0, shares_pcie_switch=True),
+        LinkSpec("rdma", LinkKind.RDMA, raw_GBps=_gbits(1600.0),
+                 effective_GBps=28.0, step_latency_us=11.0,
+                 fixed_overhead_us=25.0, shares_pcie_switch=True),
+    ),
+    pcie_switch_ceiling_GBps=200.0,
+)
+
+GB300 = NodeProfile(
+    name="gb300",
+    links=(
+        LinkSpec("nvlink", LinkKind.NVLINK, raw_GBps=1800.0,
+                 effective_GBps=139.0 * 1800.0 / 400.0, step_latency_us=3.0),
+        # GB300 decouples the IO paths -> no contention (Table 1 last row).
+        LinkSpec("pcie", LinkKind.PCIE, raw_GBps=400.0,
+                 effective_GBps=80.0, step_latency_us=8.0,
+                 fixed_overhead_us=15.0, shares_pcie_switch=False),
+        LinkSpec("rdma", LinkKind.RDMA, raw_GBps=_gbits(1600.0),
+                 effective_GBps=28.0, step_latency_us=11.0,
+                 fixed_overhead_us=25.0, shares_pcie_switch=False),
+    ),
+    pcie_switch_ceiling_GBps=None,
+)
+
+
+# --- TPU v5e target ---------------------------------------------------------
+# Hardware constants from the brief: ~50 GB/s per ICI link, 819 GB/s HBM.
+# A (16,16) mesh axis collective rides the links of one torus dimension; the
+# orthogonal dimension's links are idle, as is the host PCIe DMA engine and
+# the per-host DCN NIC.  Effective numbers assume a bidirectional ring per
+# axis (2 links engaged per chip per axis).
+TPU_V5E = NodeProfile(
+    name="tpu_v5e",
+    links=(
+        LinkSpec("ici", LinkKind.ICI_PRIMARY, raw_GBps=100.0,
+                 effective_GBps=90.0, step_latency_us=1.0),
+        LinkSpec("ici_ortho", LinkKind.ICI_ORTHO, raw_GBps=100.0,
+                 effective_GBps=45.0, step_latency_us=2.5,
+                 fixed_overhead_us=3.0),
+        LinkSpec("host_pcie", LinkKind.HOST_PCIE, raw_GBps=32.0,
+                 effective_GBps=8.0, step_latency_us=6.0,
+                 fixed_overhead_us=25.0, shares_pcie_switch=True),
+        LinkSpec("dcn", LinkKind.DCN, raw_GBps=25.0,
+                 effective_GBps=6.0, step_latency_us=4.0,
+                 fixed_overhead_us=20.0, shares_pcie_switch=True),
+    ),
+    pcie_switch_ceiling_GBps=16.0,
+)
+
+
+PROFILES: Dict[str, NodeProfile] = {
+    p.name: p for p in (H800, H100, A800, GB200, GB300, TPU_V5E)
+}
+
+
+def idle_bw_opportunity(profile: NodeProfile) -> float:
+    """Table-1 'Idle BW Opportunity': idle bandwidth / primary bandwidth.
+
+    With path contention the idle bandwidth is capped by the shared PCIe
+    interface; without contention it is the sum of the secondary raw links.
+    """
+    primary = profile.primary.raw_GBps
+    contended = [l for l in profile.secondary if l.shares_pcie_switch]
+    free = [l for l in profile.secondary if not l.shares_pcie_switch]
+    idle = sum(l.raw_GBps for l in free)
+    if contended:
+        cap = profile.pcie_switch_ceiling_GBps
+        total = sum(l.raw_GBps for l in contended)
+        # The contended routes can jointly move at most the PCIe interface BW
+        # (bidirectional = 2x the unidirectional ceiling).
+        idle += min(total, (cap * 2.0) if cap is not None else total)
+    return idle / primary
+
+
+# TPU v5e roofline constants (per chip) — used by repro.roofline.
+TPU_V5E_PEAK_BF16_FLOPS = 197e12      # FLOP/s
+TPU_V5E_HBM_BW = 819e9                # bytes/s
+TPU_V5E_ICI_BW_PER_LINK = 50e9        # bytes/s per link (brief's constant)

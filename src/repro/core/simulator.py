@@ -1,0 +1,277 @@
+"""Analytic path-timing simulator.
+
+On real hardware, FlexLink's Stage-1 tuner drives a ~10 s profiling loop that
+*measures* per-path completion times (Algorithm 1 line 11,
+``MeasurePathTimings``).  This container has no H800 and no TPU, so the
+measurement oracle is an analytic ring-timing model:
+
+    t_path(share) = fixed_overhead
+                  + steps(op, N) * step_latency(path, op)
+                  + wire_bytes(op, N, share * B) / effective_bw(path, op, N)
+
+and a collective's completion time is ``max`` over active paths, because the
+paths run concurrently and the operation finishes when the slowest share
+lands (paper §3.2: "the overall communication time is dictated by the
+slowest link").
+
+Calibration discipline (this is what makes the reproduction honest):
+
+* The **primary-path** (NVLink) constants are least-squares fitted to the
+  *NCCL baseline column only* of the paper's Table 2 — the numbers FlexLink
+  itself is compared against.
+* The **secondary-path** (PCIe / RDMA) constants come from the hardware DB
+  (``links.py``) plus two physically-motivated op modifiers; they are never
+  fitted to FlexLink's own results.
+* FlexLink's improvements and load splits are then *predicted* by running
+  Algorithm 1 against this model and compared to Table 2 in
+  ``benchmarks/table2_bandwidth.py``.
+
+Secondary-path op modifiers (both argued in the paper):
+  - ring all_reduce serializes recv→reduce→send per step, which the
+    double-buffered host pipeline cannot hide (paper §6 plans "increasing the
+    pipeline depth for the ReduceScatter part to reduce potential bubbles
+    caused by reduce sum computation") → step latency is multiplied by
+    ``AR_STEP_PENALTY`` on non-primary paths;
+  - reduce_scatter pays half of that (one reduce per step, no second phase).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.links import LinkSpec, NodeProfile, PROFILES
+from repro.core.topology import Collective, RingSchedule
+
+MiB = 1024 * 1024
+
+# ---------------------------------------------------------------------------
+# Paper Table 2 — NCCL baseline algorithm bandwidth (GB/s).  Keys:
+# (collective, n_gpus, message_MiB).  Used (a) to calibrate the primary path,
+# (b) by benchmarks to report prediction error.
+# ---------------------------------------------------------------------------
+NCCL_BASELINE_GBPS: Dict[Tuple[Collective, int, int], float] = {
+    (Collective.ALL_REDUCE, 2, 32): 112.0,
+    (Collective.ALL_REDUCE, 2, 64): 128.0,
+    (Collective.ALL_REDUCE, 2, 128): 132.0,
+    (Collective.ALL_REDUCE, 2, 256): 139.0,
+    (Collective.ALL_REDUCE, 4, 32): 87.0,
+    (Collective.ALL_REDUCE, 4, 64): 90.0,
+    (Collective.ALL_REDUCE, 4, 128): 94.0,
+    (Collective.ALL_REDUCE, 4, 256): 98.0,
+    (Collective.ALL_REDUCE, 8, 256): 107.0,
+    (Collective.ALL_GATHER, 2, 32): 103.0,
+    (Collective.ALL_GATHER, 2, 64): 117.0,
+    (Collective.ALL_GATHER, 2, 128): 129.0,
+    (Collective.ALL_GATHER, 2, 256): 132.0,
+    (Collective.ALL_GATHER, 4, 32): 43.0,
+    (Collective.ALL_GATHER, 4, 64): 46.0,
+    (Collective.ALL_GATHER, 4, 128): 48.0,
+    (Collective.ALL_GATHER, 4, 256): 49.0,
+    (Collective.ALL_GATHER, 8, 32): 20.0,
+    (Collective.ALL_GATHER, 8, 64): 21.0,
+    (Collective.ALL_GATHER, 8, 128): 21.0,
+    (Collective.ALL_GATHER, 8, 256): 21.0,
+}
+
+# Paper Table 2 — FlexLink (PCIe+RDMA) improvement % — the *target* our
+# predictions are validated against (never used for calibration).
+FLEXLINK_IMPROVEMENT_PCT: Dict[Tuple[Collective, int, int], float] = {
+    (Collective.ALL_REDUCE, 2, 32): 20.0,
+    (Collective.ALL_REDUCE, 2, 64): 17.0,
+    (Collective.ALL_REDUCE, 2, 128): 25.0,
+    (Collective.ALL_REDUCE, 2, 256): 26.0,
+    (Collective.ALL_REDUCE, 4, 32): 2.0,
+    (Collective.ALL_REDUCE, 4, 64): 10.0,
+    (Collective.ALL_REDUCE, 4, 128): 17.0,
+    (Collective.ALL_REDUCE, 4, 256): 20.0,
+    (Collective.ALL_REDUCE, 8, 256): 2.0,
+    (Collective.ALL_GATHER, 2, 32): 22.0,
+    (Collective.ALL_GATHER, 2, 64): 21.0,
+    (Collective.ALL_GATHER, 2, 128): 19.0,
+    (Collective.ALL_GATHER, 2, 256): 22.0,
+    (Collective.ALL_GATHER, 4, 32): 21.0,
+    (Collective.ALL_GATHER, 4, 64): 24.0,
+    (Collective.ALL_GATHER, 4, 128): 25.0,
+    (Collective.ALL_GATHER, 4, 256): 27.0,
+    (Collective.ALL_GATHER, 8, 32): 20.0,
+    (Collective.ALL_GATHER, 8, 64): 24.0,
+    (Collective.ALL_GATHER, 8, 128): 19.0,
+    (Collective.ALL_GATHER, 8, 256): 24.0,
+}
+
+#: step-latency multiplier on non-primary paths for ring all_reduce (the
+#: recv→reduce→send serialization the double buffer can't hide).
+AR_STEP_PENALTY = 2.0
+RS_STEP_PENALTY = 1.5
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedPrimary:
+    """Fitted primary-path model for one (collective, n_ranks)."""
+
+    effective_GBps: float
+    per_op_latency_s: float  # total latency term (steps folded in)
+
+
+def _fit_primary(op: Collective, n: int) -> Optional[CalibratedPrimary]:
+    """Least-squares fit of t = lat + wire_bytes/bw to the baseline column."""
+    pts = [(mib, bw) for (c, nn, mib), bw in NCCL_BASELINE_GBPS.items()
+           if c is op and nn == n]
+    if not pts:
+        return None
+    sched = RingSchedule(op, n)
+    rows, ts = [], []
+    for mib, algbw in pts:
+        payload = mib * MiB
+        t = payload / (algbw * 1e9)
+        rows.append([1.0, sched.wire_bytes(payload)])
+        ts.append(t)
+    a = np.asarray(rows)
+    t = np.asarray(ts)
+    if len(pts) == 1:
+        # Single point (8-GPU AllReduce row): assume the 4-GPU latency,
+        # solve bandwidth.
+        base = _fit_primary(op, 4)
+        lat = base.per_op_latency_s if base else 0.0
+        bw = a[0, 1] / max(t[0] - lat, 1e-9)
+        return CalibratedPrimary(bw / 1e9, lat)
+    sol, *_ = np.linalg.lstsq(a, t, rcond=None)
+    lat, inv_bw = float(sol[0]), float(sol[1])
+    lat = max(lat, 0.0)
+    bw = 1.0 / max(inv_bw, 1e-15)
+    return CalibratedPrimary(bw / 1e9, lat)
+
+
+class PathTimingModel:
+    """MeasurePathTimings oracle for a node profile.
+
+    ``shares`` map path-name -> fraction of the payload (sum <= 1; the
+    communicator guarantees sum == 1 over active paths).
+    """
+
+    def __init__(self, profile: NodeProfile | str = "h800",
+                 noise: float = 0.0, seed: int = 0,
+                 secondary_algo: str = "ring"):
+        self.profile = PROFILES[profile] if isinstance(profile, str) else profile
+        self.noise = noise
+        self.secondary_algo = secondary_algo
+        self._rng = np.random.default_rng(seed)
+        self._primary_fit: Dict[Tuple[Collective, int], CalibratedPrimary] = {}
+
+    # -- primary calibration ------------------------------------------------
+    def _primary(self, op: Collective, n: int) -> CalibratedPrimary:
+        key = (op, n)
+        if key not in self._primary_fit:
+            # Table-2 calibration only applies to the machine it came from.
+            fit = _fit_primary(op, n) if self.profile.name == "h800" else None
+            if fit is None:
+                # No baseline row (e.g. reduce_scatter, or TPU profile):
+                # fall back to hardware-DB constants.
+                link = self.profile.primary
+                sched = RingSchedule(op, n)
+                fit = CalibratedPrimary(
+                    link.effective_GBps,
+                    sched.steps * link.step_latency_us * 1e-6
+                    + link.fixed_overhead_us * 1e-6)
+            self._primary_fit[key] = fit
+        return self._primary_fit[key]
+
+    def secondary_algo_cost(self, op: Collective, n: int):
+        """(steps, wire_factor(payload)) for the secondary-path algorithm.
+
+        "ring" is the paper's design; "tree" (recursive doubling, paper §6
+        future work) costs log2(N) steps but ships the full payload each
+        step — it wins exactly where ring AllReduce dies of latency."""
+        import math as _m
+        if self.secondary_algo == "tree" and op is Collective.ALL_REDUCE \
+                and n & (n - 1) == 0 and n > 1:
+            steps = int(_m.log2(n))
+            return steps, lambda b: b * steps
+        sched = RingSchedule(op, n)
+        return sched.steps, sched.wire_bytes
+
+    def _secondary_step_latency(self, link: LinkSpec, op: Collective,
+                                n_ranks: int) -> float:
+        # Per-rank sync cost scales with the ring size: a host-mediated step
+        # completes when the slowest of N chunk handoffs lands (see
+        # LinkSpec.step_latency_us).
+        lat = link.step_latency_us * 1e-6 * n_ranks
+        if op is Collective.ALL_REDUCE:
+            lat *= AR_STEP_PENALTY
+        elif op is Collective.REDUCE_SCATTER:
+            lat *= RS_STEP_PENALTY
+        return lat
+
+    # -- per-path timing -----------------------------------------------------
+    def path_time(self, link_name: str, op: Collective, n_ranks: int,
+                  payload_bytes: float, share: float) -> float:
+        """Completion time (s) for `share` of the payload on one path."""
+        if share <= 0.0:
+            return 0.0
+        link = self.profile.link(link_name)
+        sched = RingSchedule(op, n_ranks)
+        wire = sched.wire_bytes(share * payload_bytes)
+        if link.is_primary:
+            fit = self._primary(op, n_ranks)
+            return fit.per_op_latency_s + wire / (fit.effective_GBps * 1e9)
+        steps, wire_fn = self.secondary_algo_cost(op, n_ranks)
+        wire = wire_fn(share * payload_bytes)
+        lat = self._secondary_step_latency(link, op, n_ranks)
+        if self.secondary_algo == "tree" and op is Collective.ALL_REDUCE:
+            lat = lat / AR_STEP_PENALTY  # butterfly has no serialized
+            # recv->reduce->forward chain; each step is a paired exchange
+        t = (link.fixed_overhead_us * 1e-6 + steps * lat
+             + wire / (link.effective_GBps * 1e9))
+        return t
+
+    def measure(self, op: Collective, n_ranks: int, payload_bytes: float,
+                shares: Mapping[str, float]) -> Dict[str, float]:
+        """Algorithm 1's MeasurePathTimings: per-path completion times (s)."""
+        out: Dict[str, float] = {}
+        # PCIe-switch contention: contending paths jointly capped (Table 1).
+        ceiling = self.profile.pcie_switch_ceiling_GBps
+        contended = {l.name for l in self.profile.links if l.shares_pcie_switch}
+        demand = 0.0
+        if ceiling is not None:
+            for name in contended:
+                if shares.get(name, 0.0) > 0.0:
+                    demand += self.profile.link(name).effective_GBps
+        scale = 1.0
+        if ceiling is not None and demand > ceiling:
+            scale = ceiling / demand
+        for name, share in shares.items():
+            t = self.path_time(name, op, n_ranks, payload_bytes, share)
+            if name in contended and scale < 1.0 and share > 0.0:
+                link = self.profile.link(name)
+                steps, wire_fn = self.secondary_algo_cost(op, n_ranks)
+                wire = wire_fn(share * payload_bytes)
+                bw = link.effective_GBps * scale
+                t = (link.fixed_overhead_us * 1e-6
+                     + steps * self._secondary_step_latency(link, op, n_ranks)
+                     + wire / (bw * 1e9))
+            if self.noise > 0.0 and share > 0.0:
+                t *= float(1.0 + self._rng.normal(0.0, self.noise))
+            out[name] = max(t, 0.0)
+        return out
+
+    # -- collective-level results --------------------------------------------
+    def total_time(self, op: Collective, n_ranks: int, payload_bytes: float,
+                   shares: Mapping[str, float]) -> float:
+        times = self.measure(op, n_ranks, payload_bytes, shares)
+        active = [t for name, t in times.items() if shares.get(name, 0.0) > 0]
+        return max(active) if active else 0.0
+
+    def algbw_GBps(self, op: Collective, n_ranks: int, payload_bytes: float,
+                   shares: Mapping[str, float]) -> float:
+        t = self.total_time(op, n_ranks, payload_bytes, shares)
+        return (payload_bytes / t) / 1e9 if t > 0 else float("inf")
+
+    def nccl_baseline_GBps(self, op: Collective, n_ranks: int,
+                           payload_bytes: float) -> float:
+        """Single-path (primary-only) algorithm bandwidth."""
+        shares = {self.profile.primary.name: 1.0}
+        return self.algbw_GBps(op, n_ranks, payload_bytes, shares)

@@ -1,0 +1,61 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These handle the padding/alignment contracts (arbitrary shapes -> lane- and
+block-aligned payloads) and pick interpret mode automatically: compiled on
+TPU, interpret=True everywhere else so CPU tests execute the same kernel
+body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import chunk_accumulate as _ca
+from repro.kernels import payload_partition as _pp
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("acc_dtype",))
+def accumulate(a: jax.Array, b: jax.Array, *, acc_dtype=jnp.float32):
+    """Ring-step accumulate for arbitrary-shaped chunks (pads to tiles)."""
+    assert a.shape == b.shape and a.dtype == b.dtype
+    n = a.size
+    cols = _ca.LANE
+    rows = -(-n // cols)
+    rows_pad = (-rows) % _ca.SUBLANE
+    pad = rows * cols - n + rows_pad * cols
+    af = jnp.pad(a.reshape(-1), (0, pad)).reshape(rows + rows_pad, cols)
+    bf = jnp.pad(b.reshape(-1), (0, pad)).reshape(rows + rows_pad, cols)
+    out = _ca.chunk_accumulate_2d(af, bf, acc_dtype=acc_dtype,
+                                  interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(a.shape)
+
+
+def ring_accumulate_fn(acc_dtype=jnp.float32):
+    """An ``accumulate(a, b)`` closure for collectives.ring_reduce_scatter /
+    ring_all_reduce — this is how the kernel plugs into the staged path."""
+    return lambda a, b: accumulate(a, b, acc_dtype=acc_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("start_block", "n_blocks",
+                                             "block"))
+def extract_segment(x: jax.Array, start_block: int, n_blocks: int,
+                    block: int = _pp.BLOCK) -> jax.Array:
+    """Aligned segment copy (payload split)."""
+    return _pp.extract_segment(x, start_block, n_blocks, block=block,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def merge_segments(segments: Sequence[jax.Array],
+                   block: int = _pp.BLOCK) -> jax.Array:
+    """Per-route result reassembly (payload merge)."""
+    return _pp.merge_segments(list(segments), block=block,
+                              interpret=_interpret())

@@ -1,0 +1,86 @@
+"""Pallas TPU kernels: multi-path payload split / merge (the Communicator's
+scatter-gather hot path).
+
+FlexLink partitions every collective's payload into per-route segments and
+reassembles the per-route results (§3.1).  At 100s of MB per call this
+memory movement sits on the critical path between compute and the first
+ring step, so it must run at HBM streaming bandwidth: a grid over
+VMEM-sized blocks whose input index_map applies the segment offset, so the
+copy is pure DMA in/out of VMEM with no gather tables.
+
+Segments are laid out on a chunk grid (collectives.CHUNK_GRID); ops.py pads
+payloads so each chunk is block-aligned, making every segment offset a
+whole number of blocks — the index_map stays static per grid step.
+
+TARGET: TPU.  VALIDATED: interpret=True vs ref.py (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.chunk_accumulate import LANE
+
+BLOCK = 1024 * LANE      # elements per grid step (512 KiB of f32)
+
+
+def _copy_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def extract_segment(x: jax.Array, start_block: int, n_blocks: int, *,
+                    block: int = BLOCK, interpret: bool = True) -> jax.Array:
+    """Copy ``x[start_block*block : (start_block+n_blocks)*block]``.
+
+    ``x`` is a flat, block-aligned payload; the offset lands in the
+    BlockSpec index_map so each grid step is one aligned VMEM block DMA.
+    """
+    assert x.ndim == 1 and x.shape[0] % block == 0
+    assert (start_block + n_blocks) * block <= x.shape[0]
+    x2 = x.reshape(-1, LANE)
+    rows = block // LANE
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((rows, LANE),
+                               lambda i: (start_block * 1 + i, 0))],
+        out_specs=pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block // LANE, LANE),
+                                       x.dtype),
+        interpret=interpret,
+    )(x2).reshape(-1)
+
+
+def merge_segments(segments: Sequence[jax.Array], *,
+                   block: int = BLOCK, interpret: bool = True) -> jax.Array:
+    """Concatenate per-route result segments back into one flat payload.
+
+    Each segment is block-aligned; the output index_map walks the cumulative
+    block offsets, so the merge is again pure sequential DMA.  One
+    pallas_call per segment keeps the kernel trivially correct (the calls
+    write disjoint output block ranges); XLA fuses the copies back-to-back.
+    """
+    assert all(s.ndim == 1 and s.shape[0] % block == 0 for s in segments)
+    total = sum(s.shape[0] for s in segments)
+    rows = block // LANE
+    out_parts = []
+    for seg in segments:
+        n_blocks = seg.shape[0] // block
+        part = pl.pallas_call(
+            _copy_kernel,
+            grid=(n_blocks,),
+            in_specs=[pl.BlockSpec((rows, LANE), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((seg.shape[0] // LANE, LANE),
+                                           seg.dtype),
+            interpret=interpret,
+        )(seg.reshape(-1, LANE))
+        out_parts.append(part.reshape(-1))
+    out = jnp.concatenate(out_parts)
+    assert out.shape[0] == total
+    return out

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_accumulate_ref(a: jax.Array, b: jax.Array, *,
+                         acc_dtype=jnp.float32) -> jax.Array:
+    return (a.astype(acc_dtype) + b.astype(acc_dtype)).astype(a.dtype)
+
+
+def extract_segment_ref(x: jax.Array, start_block: int, n_blocks: int, *,
+                        block: int) -> jax.Array:
+    return x[start_block * block:(start_block + n_blocks) * block]
+
+
+def merge_segments_ref(segments: Sequence[jax.Array]) -> jax.Array:
+    return jnp.concatenate(list(segments))

@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  512 placeholder CPU devices back the production
+# meshes: (16,16) single-pod and (2,16,16) multi-pod.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import ALIASES, ARCH_IDS, get_config       # noqa: E402
+from repro.core.communicator import CommConfig                # noqa: E402
+from repro.launch import shapes as SH                         # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_dims  # noqa: E402
+from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                build_train_step, eval_shape_opt_state,
+                                eval_shape_params)             # noqa: E402
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) this lowers + compiles the
+EXACT step the launchers run — ShapeDtypeStruct inputs, no allocation —
+then records memory_analysis(), cost_analysis() and the HLO collective
+bytes for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+
+def _sds_batch(cfg, shape, mesh):
+    pods, dp, tp = mesh_dims(mesh)
+    return SH.input_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            backend: str = "flexlink", mesh_split=None,
+            remat=True, variant: str = "") -> dict:
+    """mesh_split: optional (data, model) reshape of the 256-chip pod —
+    the TP-degree tuning lever of EXPERIMENTS §Perf.  remat: True | False |
+    "dots" (selective checkpointing)."""
+    cfg = get_config(arch)
+    shape = SH.SHAPES[shape_name]
+    if mesh_split is not None and not multi_pod:
+        import jax as _jax
+        mesh = _jax.make_mesh(tuple(mesh_split), ("data", "model"))
+        mesh_name = f"single{mesh_split[0]}x{mesh_split[1]}"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "multi" if multi_pod else "single"
+    chips = int(np.prod(mesh.devices.shape))
+    comm = CommConfig(backend=backend, profile="tpu_v5e",
+                      runtime_balancing=False)
+    pods, dp, tp = mesh_dims(mesh)
+    t0 = time.time()
+
+    params_sds = eval_shape_params(cfg)
+    batch_sds = _sds_batch(cfg, shape, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            step, ctx = build_train_step(cfg, mesh, comm=comm, shape=shape,
+                                         remat=remat)
+            opt_sds = eval_shape_opt_state(params_sds)
+            lowered = step.lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            step, ctx = build_prefill_step(cfg, mesh, comm=comm, shape=shape)
+            lowered = step.lower(params_sds, batch_sds)
+        else:
+            step, ctx, dcfg = build_serve_step(cfg, mesh, shape, comm=comm)
+            lowered = step.lower(params_sds, batch_sds["cache"],
+                                 batch_sds["token"], batch_sds["pos"])
+        t_lower = time.time() - t0
+        hlo_text = lowered.as_text()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = None
+    mem_report = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem_report = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+            mem = sum(v for k, v in mem_report.items()
+                      if k != "generated_code_size_in_bytes")
+    except Exception as e:  # CPU backend may not implement it
+        mem_report = {"error": str(e)}
+
+    # --- roofline ---------------------------------------------------------
+    # PRIMARY: analytic op inventory (exact — see roofline/analytic.py for
+    # why raw cost_analysis cannot be used: XLA CPU counts scan bodies once).
+    # The HLO text still validates the collective STRUCTURE (kinds + axes).
+    from repro.roofline.analysis import (parse_collectives, PEAK_FLOPS,
+                                         HBM_BW, ICI_BW)
+    from repro.roofline.analytic import cost_model
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cm = cost_model(cfg, shape, tp=tp, dp=dp, pods=pods, backend=backend,
+                    remat=remat)
+    t_compute = cm.flops_total / (chips * PEAK_FLOPS)
+    t_memory = cm.hbm_bytes / (chips * HBM_BW)
+    t_collective = cm.collective_bytes / (chips * ICI_BW)
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    model_flops = 6.0 * cm.active_params * (
+        shape.global_batch * (shape.seq_len if shape.kind == "train" else 1))
+    if shape.kind != "train":
+        model_flops = 2.0 * cm.active_params * shape.global_batch * (
+            shape.seq_len if shape.kind == "prefill" else 1)
+    hlo_colls = parse_collectives(hlo_text, mesh_shape)
+    hlo_coll_struct = {}
+    for c in hlo_colls:
+        k = f"{c.op}@{c.axis}"
+        hlo_coll_struct[k] = hlo_coll_struct.get(k, 0) + 1
+    roofline = {
+        "chips": chips,
+        "flops_fwd": cm.flops_fwd, "flops_total": cm.flops_total,
+        "hbm_bytes": cm.hbm_bytes,
+        "collective_bytes_total": cm.collective_bytes,
+        "collective_by_axis": cm.coll_by_axis(),
+        "collective_by_op": cm.coll_by_op(),
+        "t_compute": t_compute, "t_memory": t_memory,
+        "t_collective": t_collective, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / cm.flops_total
+        if cm.flops_total else 0.0,
+        "params": cm.params, "active_params": cm.active_params,
+        "memory_per_chip": mem,
+    }
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "backend": backend, "chips": chips, "ok": True,
+        "variant": variant, "remat": str(remat),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_report,
+        "hlo_cost_analysis_raw": {
+            "flops_per_device_scanbody_once": float(cost.get("flops", 0.0)),
+            "bytes_per_device_scanbody_once": float(
+                cost.get("bytes accessed", 0.0)),
+            "caveat": "XLA CPU cost_analysis counts lax.scan bodies once; "
+                      "see roofline/analytic.py",
+        },
+        "hlo_collective_structure": hlo_coll_struct,
+        "roofline": roofline,
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ALIASES) + ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SH.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--backend", choices=["flexlink", "nccl"],
+                    default="flexlink")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) pair")
+    ap.add_argument("--out", default="results/dryrun",
+                    help="output dir (one json per pair)")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = sorted(ALIASES) if args.all else [args.arch]
+    shapes_ = sorted(SH.SHAPES) if args.all else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes_:
+            for m in meshes:
+                pairs.append((a, s, m))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape_name, mesh_name in pairs:
+        tag = f"{arch}__{shape_name}__{mesh_name}__{args.backend}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            rec = run_one(arch, shape_name, mesh_name == "multi",
+                          args.backend)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "backend": args.backend, "ok": False, "error": repr(e)}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        status = "OK" if rec.get("ok") else "FAIL"
+        extra = ""
+        if rec.get("ok"):
+            r = rec["roofline"]
+            extra = (f" dominant={r['dominant']}"
+                     f" tc={r['t_compute']:.2e} tm={r['t_memory']:.2e}"
+                     f" tl={r['t_collective']:.2e}"
+                     f" compile={rec['compile_s']}s")
+        print(f"[{status:4s}] {tag}{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

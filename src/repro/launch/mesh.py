@@ -1,0 +1,38 @@
+"""Mesh construction for the production topology.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+pod axis crosses DCN.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests use small CPU meshes, e.g. (2,4)/(2,2,2))."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def mesh_dims(mesh) -> Tuple[int, int, int]:
+    """(pods, dp, tp) for a ("pod"?, "data", "model") mesh."""
+    sizes = mesh_axis_sizes(mesh)
+    return (sizes.get("pod", 1), sizes.get("data", 1),
+            sizes.get("model", 1))

@@ -1,0 +1,208 @@
+"""The four assigned input shapes and their ShapeDtypeStruct stand-ins.
+
+``input_specs(cfg, shape, ...)`` returns weak-type-correct, shardable
+ShapeDtypeStructs for every model input — no device allocation — matching
+the pattern required for the multi-pod dry-run.
+
+Shape semantics:
+  train_4k     lowers ``train_step``   (tokens+labels, full fwd+bwd+opt)
+  prefill_32k  lowers ``prefill_step`` (forward only, logits discarded)
+  decode_32k   lowers ``serve_step``   (ONE token, KV cache of seq_len)
+  long_500k    lowers ``serve_step``   with a 524288-long sharded cache;
+               requires sub-quadratic attention (SSM/hybrid native; SWA
+               native for mixtral/starcoder2; --swa-override variant for
+               the remaining full-attention archs, flagged `swa_variant`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.transformer import DecodeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+#: archs with native sub-quadratic long-context support
+NATIVE_SUBQUADRATIC = {
+    "mamba2-1.3b",      # SSM: O(1) state
+    "zamba2-1.2b",      # hybrid
+    "mixtral-8x7b",     # native SWA 4096
+    "starcoder2-15b",   # native SWA 4096
+}
+
+
+def needs_swa_override(cfg: ArchConfig, shape: InputShape) -> bool:
+    """long_500k on a pure full-attention arch -> run the documented
+    sliding-window decode variant (DESIGN.md §4)."""
+    return (shape.name == "long_500k"
+            and cfg.name not in NATIVE_SUBQUADRATIC
+            and cfg.family not in ("ssm", "hybrid"))
+
+
+def decode_config(cfg: ArchConfig, shape: InputShape, *,
+                  tp: int, dp: int) -> DecodeConfig:
+    assert shape.kind == "decode"
+    if shape.global_batch == 1:
+        # batch=1 long-context: sequence sharded over data x model
+        seq_shard = "model_data"
+        shards = tp * dp
+    else:
+        seq_shard = "model"
+        shards = tp
+    assert shape.seq_len % max(shards, 1) == 0
+    window = "cfg"
+    if needs_swa_override(cfg, shape):
+        window = 4096                      # the --swa-override variant
+    return DecodeConfig(cache_len_local=shape.seq_len // max(shards, 1),
+                        seq_shard=seq_shard if shards > 1 else None,
+                        window_override=window)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *,
+                tp: int = 1, dp: int = 1, pods: int = 1,
+                dtype=None) -> Dict[str, Any]:
+    """GLOBAL-shaped ShapeDtypeStructs for one (arch, input-shape) pair.
+
+    Frontend stubs (the one allowed carve-out): whisper gets frame
+    embeddings, internvl2 gets patch embeddings — both [B, n, d_model].
+    """
+    dtype = dtype or cfg.dtype
+    b = shape.global_batch
+    s = shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["vis_embed"] = _sds((b, cfg.vlm.n_vis_tokens, cfg.d_model),
+                                      dtype)
+        if cfg.family == "encdec":
+            specs["enc_embed"] = _sds((b, cfg.encdec.n_frames, cfg.d_model),
+                                      dtype)
+        return specs
+
+    # decode: ONE new token + cache of seq_len
+    dcfg = decode_config(cfg, shape, tp=tp, dp=dp)
+    specs = {
+        "token": _sds((b, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache_specs(cfg, shape, dcfg, tp=tp, dp=dp, dtype=dtype),
+    }
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape, dcfg: DecodeConfig, *,
+                tp: int, dp: int, dtype) -> Dict[str, Any]:
+    """GLOBAL cache shapes (sequence dim = full seq_len; the mesh shards it
+    per cache_partition_specs)."""
+    from repro.models import layers as L
+    from repro.models.tp import ParallelCtx
+    ctx = ParallelCtx(tp_size=tp, dp_size=dp, tp_axis="model" if tp > 1
+                      else None, dp_axis="data" if dp > 1 else None)
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.head_dim_
+    fam = cfg.family
+    out: Dict[str, Any] = {}
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        # Sequence-sharded caches store the FULL KV head set per shard
+        # (every shard attends all heads over its sequence slice); only the
+        # SEQUENCE dim is sharded (cache_partition_specs).
+        kv_glob = cfg.n_kv_heads if dcfg.seq_shard is not None \
+            else L.head_layout(cfg, ctx)[1]
+        n = cfg.n_layers
+        out["k"] = _sds((n, b, s, kv_glob, hd), dtype)
+        out["v"] = _sds((n, b, s, kv_glob, hd), dtype)
+        if fam == "encdec":
+            # cross-attn KV: the encoder axis is NOT sequence-sharded, so
+            # each shard stores only the kv_w heads its local Q heads use.
+            se = cfg.encdec.n_frames
+            kv_x = L.head_layout(cfg, ctx)[1]
+            out["xk"] = _sds((n, b, se, kv_x, hd), dtype)
+            out["xv"] = _sds((n, b, se, kv_x, hd), dtype)
+        return out
+    if fam in ("ssm", "hybrid"):
+        ssm = cfg.ssm
+        h = ssm.n_heads(cfg.d_model)
+        d_in = ssm.d_inner(cfg.d_model)
+        out["ssm"] = _sds((cfg.n_layers, b, h, ssm.d_state, ssm.head_dim),
+                          jnp.float32)
+        out["conv"] = _sds((cfg.n_layers, b, ssm.conv_kernel - 1, d_in),
+                           dtype)
+        if fam == "hybrid":
+            kv_glob = cfg.n_kv_heads if dcfg.seq_shard is not None \
+                else L.head_layout(cfg, ctx)[1]
+            g = cfg.n_layers // cfg.hybrid.attn_every
+            out["attn_k"] = _sds((g, b, s, kv_glob, hd), dtype)
+            out["attn_v"] = _sds((g, b, s, kv_glob, hd), dtype)
+        return out
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# partition specs for the inputs (mesh axes: ["pod",] "data", "model")
+# ---------------------------------------------------------------------------
+
+def batch_axes(pods: int):
+    return ("pod", "data") if pods > 1 else ("data",)
+
+
+def input_partition_specs(cfg: ArchConfig, shape: InputShape, *,
+                          tp: int, dp: int, pods: int = 1):
+    from jax.sharding import PartitionSpec as P
+    ba = batch_axes(pods)
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": P(ba, None), "labels": P(ba, None)}
+        if cfg.family == "vlm":
+            specs["vis_embed"] = P(ba, None, None)
+        if cfg.family == "encdec":
+            specs["enc_embed"] = P(ba, None, None)
+        return specs
+    dcfg = decode_config(cfg, shape, tp=tp, dp=dp)
+    if shape.global_batch == 1:
+        tok = P(None, None)
+        seq = ("data", "model")
+        bat = None
+    else:
+        tok = P("data", None)
+        seq = "model"
+        bat = "data"
+    fam = cfg.family
+    cache: dict = {}
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        cache["k"] = P(None, bat, seq, None, None)
+        cache["v"] = P(None, bat, seq, None, None)
+        if fam == "encdec":
+            # cross-attn KV is short (n_frames) — replicate the seq dim
+            cache["xk"] = P(None, bat, None, None, None)
+            cache["xv"] = P(None, bat, None, None, None)
+    else:
+        cache["ssm"] = P(None, bat, "model", None, None)
+        cache["conv"] = P(None, bat, None, "model")
+        if fam == "hybrid":
+            cache["attn_k"] = P(None, bat, seq, None, None)
+            cache["attn_v"] = P(None, bat, seq, None, None)
+    return {"token": tok, "pos": P(), "cache": cache}

@@ -1,0 +1,130 @@
+"""Sharded step builders: wrap the model engine's step functions in
+shard_map over a mesh, wiring the ParallelCtx (and therefore the FlexLink
+communicators) to the mesh axes.
+
+Every launcher (train.py, serve.py, dryrun.py) builds its steps here so the
+dry-run lowers EXACTLY what training/serving would run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.communicator import CommConfig
+from repro.launch.mesh import mesh_dims
+from repro.launch import shapes as SH
+from repro.models.config import ArchConfig
+from repro.models.tp import ParallelCtx
+from repro.models.transformer import (decode_step, forward, lm_logits_local,
+                                      lm_loss, param_specs)
+from repro.optim.adamw import AdamWConfig, AdamWState
+from repro.train.train_step import make_train_step
+
+
+def make_ctx(mesh: Mesh, comm: Optional[CommConfig] = None) -> ParallelCtx:
+    pods, dp, tp = mesh_dims(mesh)
+    return ParallelCtx(
+        tp_axis="model" if tp > 1 else None,
+        dp_axis="data" if dp > 1 else None,
+        pod_axis="pod" if pods > 1 else None,
+        tp_size=tp, dp_size=dp, pod_size=pods,
+        comm_config=comm or CommConfig())
+
+
+def opt_state_specs(psp) -> AdamWState:
+    return AdamWState(step=P(), mu=psp, nu=psp)
+
+
+def _batch_specs(cfg: ArchConfig, shape: SH.InputShape, mesh) -> Dict:
+    pods, dp, tp = mesh_dims(mesh)
+    return SH.input_partition_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, *,
+                     comm: Optional[CommConfig] = None,
+                     opt: Optional[AdamWConfig] = None,
+                     shape: Optional[SH.InputShape] = None,
+                     remat: bool = True):
+    """jit(shard_map(train_step)) with full param/opt/batch shardings."""
+    ctx = make_ctx(mesh, comm)
+    opt = opt or AdamWConfig()
+    shape = shape or SH.SHAPES["train_4k"]
+    psp = param_specs(cfg)
+    osp = opt_state_specs(psp)
+    bsp = _batch_specs(cfg, shape, mesh)
+    step = make_train_step(cfg, ctx, opt, remat=remat)
+    sharded = shard_map(step, mesh=mesh,
+                        in_specs=(psp, osp, bsp),
+                        out_specs=(psp, osp, P()),
+                        check_vma=False)
+    # donate params + optimizer state: they are consumed and re-emitted
+    # every step — aliasing halves the peak parameter memory.
+    return jax.jit(sharded, donate_argnums=(0, 1)), ctx
+
+
+def build_prefill_step(cfg: ArchConfig, mesh: Mesh, *,
+                       comm: Optional[CommConfig] = None,
+                       shape: Optional[SH.InputShape] = None,
+                       remat: bool = True):
+    """Forward-only prefill: returns last-position local-vocab logits."""
+    ctx = make_ctx(mesh, comm)
+    shape = shape or SH.SHAPES["prefill_32k"]
+    psp = param_specs(cfg)
+    bsp = _batch_specs(cfg, shape, mesh)
+
+    def prefill(params, batch):
+        x, _ = forward(params, batch["tokens"], cfg, ctx,
+                       vis_embed=batch.get("vis_embed"),
+                       enc_embed=batch.get("enc_embed"), remat=remat)
+        return lm_logits_local(params, x[:, -1:], cfg, ctx)[:, 0]
+
+    pods, dp, tp = mesh_dims(mesh)
+    ba = SH.batch_axes(pods)
+    sharded = shard_map(prefill, mesh=mesh, in_specs=(psp, bsp),
+                        out_specs=P(ba, "model"), check_vma=False)
+    return jax.jit(sharded), ctx
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
+                     comm: Optional[CommConfig] = None):
+    """One-token decode with a seq_len KV cache (decode_32k / long_500k)."""
+    ctx = make_ctx(mesh, comm)
+    pods, dp, tp = mesh_dims(mesh)
+    dcfg = SH.decode_config(cfg, shape, tp=tp, dp=dp)
+    psp = param_specs(cfg)
+    isp = SH.input_partition_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
+
+    def serve(params, cache, token, pos):
+        logits_l, cache = decode_step(params, cache, token, pos, cfg, ctx,
+                                      dcfg)
+        return logits_l, cache
+
+    tok_b = isp["token"][0]
+    out_logits = P(tok_b, "model")      # [B, V_local] — vocab stays sharded
+    sharded = shard_map(serve, mesh=mesh,
+                        in_specs=(psp, isp["cache"], isp["token"],
+                                  isp["pos"]),
+                        out_specs=(out_logits, isp["cache"]),
+                        check_vma=False)
+    # donate the KV cache: it is updated in place every decode step.
+    return jax.jit(sharded, donate_argnums=(1,)), ctx, dcfg
+
+
+def eval_shape_params(cfg: ArchConfig):
+    """ShapeDtypeStruct param tree — NO allocation (dry-run pattern)."""
+    from repro.models.transformer import init_params
+    return jax.eval_shape(
+        lambda key: init_params(key, cfg), jax.random.PRNGKey(0))
+
+
+def eval_shape_opt_state(params_sds) -> AdamWState:
+    mu = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_sds)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=mu,
+                      nu=jax.tree.map(lambda x: x, mu))

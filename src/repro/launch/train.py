@@ -1,0 +1,86 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
+      --steps 50 --mesh-shape 2,4
+
+``--smoke`` swaps in the reduced config (2 layers, d_model<=512) so the
+driver runs on CPU; the FULL configs are exercised by the dry-run only.
+The mesh shape is (data, model) — on real hardware use (16,16) per pod.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALIASES, get_config
+from repro.core.communicator import CommConfig
+from repro.data.pipeline import make_batches
+from repro.launch import shapes as SH
+from repro.launch.mesh import make_mesh, make_production_mesh, mesh_dims
+from repro.launch.steps import build_train_step
+from repro.models.transformer import init_params
+from repro.optim.adamw import AdamWConfig, init_state
+from repro.train.loop import LoopConfig, run_loop
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b", choices=sorted(ALIASES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8, help="global batch")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh-shape", default="",
+                    help="e.g. 2,4 = (data=2, model=4); empty = single dev")
+    ap.add_argument("--backend", choices=["flexlink", "nccl"],
+                    default="flexlink")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    shape = SH.InputShape("cli", "train", args.seq_len, args.batch)
+
+    if args.mesh_shape:
+        dims = tuple(int(x) for x in args.mesh_shape.split(","))
+        mesh = make_mesh(dims, ("data", "model")[-len(dims):]
+                         if len(dims) == 2 else ("pod", "data", "model"))
+    else:
+        mesh = make_mesh((1, 1), ("data", "model"))
+    pods, dp, tp = mesh_dims(mesh)
+    assert args.batch % (dp * pods) == 0
+
+    comm = CommConfig(backend=args.backend, profile="tpu_v5e")
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+
+    with mesh:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = init_state(params)
+
+        def builder():
+            step, _ = build_train_step(cfg, mesh, comm=comm, opt=opt,
+                                       shape=shape)
+            return step
+
+        _, ctx = build_train_step(cfg, mesh, comm=comm, opt=opt, shape=shape)
+        batches = make_batches(cfg, seq_len=args.seq_len,
+                               batch_per_shard=args.batch)
+        loop = LoopConfig(total_steps=args.steps, log_every=5,
+                          ckpt_dir=args.ckpt_dir or None)
+        params, opt_state, hist = run_loop(builder, params, opt_state,
+                                           batches, ctx, loop)
+    print(f"final loss: {hist[-1]:.4f} (from {hist[0]:.4f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+from repro.models.config import (ArchConfig, MoEConfig, SSMConfig,
+                                 HybridConfig, EncDecConfig, VLMConfig)
+from repro.models.tp import ParallelCtx, single_device_ctx
+from repro.models.transformer import (DecodeConfig, decode_step, forward,
+                                      init_cache, init_params, lm_loss,
+                                      param_specs)

@@ -1,0 +1,460 @@
+"""Shared model layers: RMSNorm, RoPE, chunked (flash-style) attention with
+GQA/SWA, SwiGLU MLP — all tensor-parallel through ParallelCtx.
+
+Conventions:
+  * activations are [B, S, D]; attention heads live in [B, S, H, hd];
+  * TP shards Q heads (and KV heads when divisible) over the model axis:
+    column-parallel QKV/up projections, row-parallel out/down projections
+    with a FlexLink all_reduce;
+  * attention is computed in chunks over the KV axis with running
+    max/denominator (flash-style) so 32k prefill never materializes S^2;
+  * GQA with n_kv < tp replicates KV heads across shards (Megatron's KV
+    duplication), keeping every shard self-contained.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ArchConfig
+from repro.models.tp import ParallelCtx
+
+ATTN_CHUNK = 512  # KV-axis chunk for the streaming softmax
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [S] or [B, S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        ang = ang[None, :, None, :]                      # [1, S, 1, hd/2]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        ang = ang[:, :, None, :]                         # [B, S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+          window: Optional[int], kv_valid) -> jax.Array:
+    """Boolean keep-mask [..., Sq, Skv]; q_pos may be [Sq] or [B, Sq] and
+    kv_valid a scalar or [B] (per-slot serving positions)."""
+    qp = q_pos[..., :, None]                      # [(B,) Sq, 1]
+    kp = k_pos[None, :]                           # [1, Skv]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= qp >= kp
+    if window is not None:
+        m &= (qp - kp) < window
+    if kv_valid is not None:
+        kv = jnp.asarray(kv_valid)
+        if kv.ndim:                               # per-batch [B]
+            m = m & (kp < kv[:, None, None])
+        else:
+            m = m & (kp < kv)
+    return m
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: Optional[int] = None,
+                      q_offset=0, k_offset=0,
+                      kv_valid: Optional[jax.Array] = None,
+                      chunk: int = ATTN_CHUNK,
+                      with_stats: bool = False):
+    """Streaming-softmax attention.
+
+    q: [B, Sq, Hq, hd]; k, v: [B, Skv, Hkv, hd] with Hq % Hkv == 0.
+    Positions are q_offset+i / k_offset+j (offsets may be traced scalars —
+    used by the sequence-sharded decode path).  When ``with_stats`` the
+    returned value is (out, running_max, denom) for cross-shard LSE merges.
+    """
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    q_off = jnp.asarray(q_offset)
+    q_pos = (q_off[..., None] + jnp.arange(sq)) if q_off.ndim \
+        else (q_off + jnp.arange(sq))
+
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    local_len = None
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded slots must be masked by LOCAL index: with a nonzero
+        # k_offset (sequence-sharded caches) the pad slots alias global
+        # positions that a kv_valid bound alone would wrongly admit.
+        local_len = skv
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, hkv, hd)
+
+    qg = qf.reshape(b, sq, hkv, group, hd)               # [B,Sq,Hkv,g,hd]
+
+    def step(carry, xs):
+        ci, kci, vci = xs                                # kci: [B,chunk,Hkv,hd]
+        m_run, l_run, acc = carry
+        k_local = ci * chunk + jnp.arange(chunk)
+        k_pos = k_offset + k_local
+        kf = kci.astype(jnp.float32)
+        vf = vci.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kf)      # [B,Hkv,g,Sq,chunk]
+        keep = _mask(q_pos, k_pos, causal, window, kv_valid)
+        if local_len is not None:
+            keep = keep & (k_local < local_len)
+        if keep.ndim == 2:                       # [Sq, chunk]
+            keep = keep[None, None, None]
+        else:                                    # [B, Sq, chunk]
+            keep = keep[:, None, None]
+        s = jnp.where(keep, s, -jnp.inf)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))       # [B,Hkv,g,Sq]
+        # guard all-masked rows (m == -inf): exp(-inf - -inf) -> use where
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(jnp.isfinite(s), s - m_safe[..., None], -jnp.inf))
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_run),
+                          jnp.exp(m_run - m_safe), 0.0)  # rescale old
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p, vf)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, hd), jnp.float32)
+    idx = jnp.arange(n_chunks)
+    (m_f, l_f, acc_f), _ = lax.scan(
+        step, (m0, l0, a0),
+        (idx, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+
+    if with_stats:
+        # caller merges across shards (lse_merge) before normalizing
+        return acc_f, m_f, l_f
+    denom = jnp.maximum(l_f, 1e-30)
+    out = acc_f / denom[..., None]                        # [B,Hkv,g,Sq,hd]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def lse_merge(parts):
+    """Merge per-shard (acc, m, l) attention partials (same shapes).
+
+    parts: list of tuples — returns normalized [B,Hkv,g,Sq,hd] accumulator.
+    """
+    m_glob = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_glob = jnp.maximum(m_glob, m)
+    m_safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
+    l_tot = jnp.zeros_like(parts[0][2])
+    acc_tot = jnp.zeros_like(parts[0][0])
+    for acc, m, l in parts:
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_tot = l_tot + l * alpha
+        acc_tot = acc_tot + acc * alpha[..., None]
+    return acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# attention block (TP)
+#
+# Unified GQA sharding that works for every assigned config (kv heads from 2
+# to 16 against tp=16) and every mode (train / prefill / decode /
+# sequence-sharded decode):
+#   * Q and O projections are head-sharded over the model axis (column/row
+#     parallel, FlexLink all_reduce on the row combine);
+#   * K/V projections are stored FULL (replicated) — KV heads are small — and
+#     each shard *slices* the KV heads its local Q heads attend to before the
+#     matmul, so no KV-head padding/replication tricks are needed;
+#   * decode caches are sharded over the model axis on the SEQUENCE dim
+#     (each shard holds its KV-head slice x its sequence slice); partial
+#     attention is merged across shards with a log-sum-exp psum.
+# ---------------------------------------------------------------------------
+
+def head_layout(cfg: ArchConfig, ctx: ParallelCtx):
+    """(hq_local, kv_width, group_local): local Q heads, KV heads a shard
+    needs, and Q-heads-per-KV-head locally."""
+    tp = max(ctx.tp_size, 1)
+    hq = cfg.n_heads
+    hkv = cfg.n_kv_heads
+    assert hq % tp == 0 or tp == 1, (hq, tp)
+    hq_l = hq // tp if tp > 1 else hq
+    group = hq // hkv
+    if hq_l >= group:
+        assert hq_l % group == 0, (hq_l, group)
+        kv_w = hq_l // group
+    else:
+        assert group % hq_l == 0, (hq_l, group)
+        kv_w = 1
+    return hq_l, kv_w, hq_l // kv_w
+
+
+def init_attention(key, cfg: ArchConfig, dtype):
+    """GLOBAL param shapes (shard_map in_specs produce the local views)."""
+    d, hd = cfg.d_model, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    p = {
+        "wq": jax.random.normal(k1, (d, cfg.n_heads * hd), dtype) * std,
+        "wk": jax.random.normal(k2, (d, cfg.n_kv_heads * hd), dtype) * std,
+        "wv": jax.random.normal(k3, (d, cfg.n_kv_heads * hd), dtype) * std,
+        "wo": jax.random.normal(k4, (cfg.n_heads * hd, d), dtype) * std,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def attention_specs(cfg: ArchConfig, model_axis: str):
+    """PartitionSpecs matching init_attention (Q/O sharded, K/V replicated)."""
+    from jax.sharding import PartitionSpec as P
+    p = {
+        "wq": P(None, model_axis),
+        "wk": P(None, None),
+        "wv": P(None, None),
+        "wo": P(model_axis, None),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(model_axis)
+        p["bk"] = P(None)
+        p["bv"] = P(None)
+    return p
+
+
+def _kv_slice(p, cfg: ArchConfig, ctx: ParallelCtx, which: str):
+    """Slice the KV-projection columns for this shard's KV heads."""
+    hd = cfg.head_dim_
+    hq_l, kv_w, _ = head_layout(cfg, ctx)
+    if ctx.tp_size <= 1 or kv_w == cfg.n_kv_heads:
+        w = p["w" + which]
+        bias = p.get("b" + which)
+        return w, bias
+    idx = ctx.tp_index()
+    first_kv = (idx * hq_l * cfg.n_kv_heads) // cfg.n_heads
+    w = lax.dynamic_slice_in_dim(p["w" + which], first_kv * hd, kv_w * hd,
+                                 axis=1)
+    bias = None
+    if ("b" + which) in p:
+        bias = lax.dynamic_slice_in_dim(p["b" + which], first_kv * hd,
+                                        kv_w * hd, axis=0)
+    return w, bias
+
+
+def attention_block(p, x: jax.Array, cfg: ArchConfig, ctx: ParallelCtx, *,
+                    causal: bool = True, positions=None,
+                    kv_cache=None, cache_pos=None, seq_shard=None,
+                    window_override="cfg",
+                    xattn_kv=None) -> Tuple[jax.Array, Optional[tuple]]:
+    """One attention sublayer (pre-norm handled by the caller).
+
+    kv_cache: (k, v) of [B, S_cache_local, kv_w, hd] — decode mode; x holds
+      the new token(s), cache_pos the global write position.
+    seq_shard: cache sequence dim is sharded over the model axis (long
+      contexts); partial attention is LSE-merged with a psum.
+    xattn_kv: precomputed (k, v) [B, S_enc, kv_w, hd] for cross-attention.
+    window_override: "cfg" uses cfg.sliding_window; None/int overrides (the
+      --swa-override decode variant for full-attention archs).
+    Returns (out [B,S,D], new_cache).
+    """
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    hq_l, kv_w, group_l = head_layout(cfg, ctx)
+    window = cfg.sliding_window if window_override == "cfg" \
+        else window_override
+    if positions is None:
+        positions = jnp.arange(s)
+
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, s, hq_l, hd)
+
+    new_cache = None
+    if xattn_kv is not None:
+        k, v = xattn_kv
+        out = chunked_attention(q, k, v, causal=False, window=None)
+    else:
+        if seq_shard is not None:
+            # sequence-sharded decode: every shard attends ALL heads over
+            # its sequence slice, so K/V use the full head set.
+            wk, bk = p["wk"], p.get("bk")
+            wv, bv = p["wv"], p.get("bv")
+        else:
+            wk, bk = _kv_slice(p, cfg, ctx, "k")
+            wv, bv = _kv_slice(p, cfg, ctx, "v")
+        k = jnp.einsum("bsd,df->bsf", x, wk)
+        v = jnp.einsum("bsd,df->bsf", x, wv)
+        if bk is not None:
+            k, v = k + bk, v + bv
+        kw = cfg.n_kv_heads if seq_shard is not None else kv_w
+        k = k.reshape(b, s, kw, hd)
+        v = v.reshape(b, s, kw, hd)
+        if cfg.rope_theta:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+        if kv_cache is None:
+            out = chunked_attention(q, k, v, causal=causal, window=window)
+        elif seq_shard is None:
+            ck, cv = kv_cache
+            pos_arr = jnp.asarray(cache_pos)
+            if pos_arr.ndim:                     # per-slot positions [B]
+                assert s == 1, "vector cache_pos requires single-token steps"
+                sl = jnp.arange(ck.shape[1])
+                hit = (sl[None] == pos_arr[:, None])[:, :, None, None]
+                ck = jnp.where(hit, k.astype(ck.dtype), ck)
+                cv = jnp.where(hit, v.astype(cv.dtype), cv)
+            else:
+                ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                     cache_pos, axis=1)
+                cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                     cache_pos, axis=1)
+            new_cache = (ck, cv)
+            # causal=True keeps multi-token decode steps (s>1, the
+            # memory-amortization lever in EXPERIMENTS §Perf) correct; for
+            # s==1 it is equivalent to the kv_valid bound alone.
+            out = chunked_attention(q, ck, cv, causal=True, window=window,
+                                    q_offset=cache_pos,
+                                    kv_valid=pos_arr + s)
+        else:
+            out, new_cache = _seq_sharded_decode(
+                q, k, v, kv_cache, cache_pos, cfg, ctx, window,
+                seq_shard=seq_shard)
+
+    o = jnp.einsum("bsf,fd->bsd", out.reshape(b, s, hq_l * hd), p["wo"])
+    o = ctx.tp_all_reduce(o)       # row-parallel combine — FlexLink path
+    return o, new_cache
+
+
+def _seq_sharded_decode(q, k_new, v_new, kv_cache, cache_pos, cfg, ctx,
+                        window, seq_shard="model"):
+    """Decode attention over a cache whose SEQUENCE dim is sharded over the
+    model axis (and the data axis too for batch=1 long-context).
+
+    Q heads are sharded over the model axis but the sequence is as well, so
+    a shard's local Q rows would only ever see its own slice.  Standard
+    flash-decode distribution: (1) all_gather the (tiny) Q across the model
+    axis so every shard holds ALL heads, (2) write the new token's full-head
+    K/V into the owning shard's slice, (3) local partial attention over the
+    slice, (4) distributed log-sum-exp merge (pmax/psum), (5) each shard
+    slices back its OWN Q heads for the row-parallel out-projection.
+    """
+    b, s, hq_l, hd = q.shape
+    ck, cv = kv_cache
+    s_local = ck.shape[1]
+    tp = max(ctx.tp_size, 1)
+    shard_idx = ctx.tp_index()
+    if seq_shard == "model_data":
+        # batch=1 long-context: sequence sharded over data x model
+        seq_idx = ctx.dp_index() * tp + ctx.tp_index()
+    else:
+        seq_idx = shard_idx
+    offset = seq_idx * s_local
+
+    # (1) full-head Q on every shard (bytes: B x Hq x hd — negligible)
+    if tp > 1:
+        qg = ctx.tp_all_gather(q.transpose(2, 0, 1, 3), tiled=True)
+        q_full = qg.transpose(1, 2, 0, 3)           # [B, s, Hq, hd]
+    else:
+        q_full = q
+    hq = q_full.shape[2]
+
+    # (2) conditional write of the new token's K/V into the owning shard
+    local_pos = cache_pos - offset
+    owns = (local_pos >= 0) & (local_pos < s_local)
+    safe_pos = jnp.clip(local_pos, 0, s_local - s)
+    ck_new = lax.dynamic_update_slice_in_dim(ck, k_new.astype(ck.dtype),
+                                             safe_pos, axis=1)
+    cv_new = lax.dynamic_update_slice_in_dim(cv, v_new.astype(cv.dtype),
+                                             safe_pos, axis=1)
+    ck = jnp.where(owns, ck_new, ck)
+    cv = jnp.where(owns, cv_new, cv)
+
+    # (3) local partial attention with global position offsets
+    acc, m, l = chunked_attention(
+        q_full, ck, cv, causal=True, window=window, q_offset=cache_pos,
+        k_offset=offset, kv_valid=cache_pos + s, with_stats=True)
+    # (4) distributed LSE merge over the sequence-sharding axes
+    m_glob = ctx.tp_pmax_small(m)
+    if seq_shard == "model_data":
+        m_glob = ctx.dp_pmax_small(m_glob)
+    m_safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
+    alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+    l_glob = ctx.tp_psum_small(l * alpha)
+    acc_glob = ctx.tp_psum_small(acc * alpha[..., None])
+    if seq_shard == "model_data":
+        l_glob = ctx.dp_psum_small(l_glob)
+        acc_glob = ctx.dp_psum_small(acc_glob)
+    out = acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+    # out: [B, Hkv, group, s, hd] over ALL heads -> [B, s, Hq, hd]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, hd)
+    # (5) slice back this shard's own Q heads for the row-parallel out proj
+    if tp > 1:
+        out = lax.dynamic_slice_in_dim(out, shard_idx * hq_l, hq_l, axis=2)
+    return out.astype(q.dtype), (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU, TP col/row parallel)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, dtype, d_ff=None):
+    """GLOBAL shapes; sharded col/row by mlp_specs."""
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = 0.02
+    return {
+        "w_gate": jax.random.normal(k1, (d, f), dtype) * std,
+        "w_up": jax.random.normal(k2, (d, f), dtype) * std,
+        "w_down": jax.random.normal(k3, (f, d), dtype) * std,
+    }
+
+
+def mlp_specs(model_axis: str):
+    from jax.sharding import PartitionSpec as P
+    return {"w_gate": P(None, model_axis), "w_up": P(None, model_axis),
+            "w_down": P(model_axis, None)}
+
+
+def mlp_block(p, x: jax.Array, ctx: ParallelCtx) -> jax.Array:
+    h = silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * \
+        jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return ctx.tp_all_reduce(out)  # row-parallel combine — FlexLink path

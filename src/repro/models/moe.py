@@ -1,0 +1,185 @@
+"""Mixture-of-Experts blocks.
+
+Two production sharding schemes, selected per-arch (config.MoEConfig.impl):
+
+  ep_a2a : experts sharded over the DATA axis (expert parallelism) with
+           all_to_all dispatch/return, + tensor parallelism *inside* each
+           expert over the model axis (col/row split of the expert FFN with
+           a FlexLink all_reduce).  Used when n_experts %% dp == 0
+           (kimi-k2: 384 experts over dp=16 -> 24 experts/rank).
+           The all_to_all is FlexLink-backed — MoE dispatch is exactly the
+           traffic the paper targets (Fig. 3).
+
+  tp     : experts replicated, every expert's FFN hidden dim sharded over
+           the model axis; tokens never leave their rank (no a2a), the
+           row-parallel combine is a FlexLink all_reduce.  Used when
+           n_experts < axis size (mixtral: 8 experts, tp=16).
+
+Dispatch is capacity-based and one-hot-free: tokens are ranked within their
+expert via a stable argsort + bincount (no [T, E] one-hot matmuls), then
+scattered into [n_experts, capacity, d] buffers.  Dropped tokens (beyond
+capacity) fall back to the residual path, Switch-style.
+
+Router aux loss (load balance) is returned alongside the output.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ArchConfig, MoEConfig
+from repro.models.tp import ParallelCtx
+from repro.models.layers import silu
+
+
+# ---------------------------------------------------------------------------
+# routing + capacity dispatch (shared by both impls)
+# ---------------------------------------------------------------------------
+
+def route(x2d: jax.Array, w_router: jax.Array, moe: MoEConfig):
+    """x2d: [T, D] -> (weights [T,k], experts [T,k], aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, moe.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)   # renormalize top-k
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    t = x2d.shape[0]
+    f = jnp.zeros((moe.n_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (t * moe.top_k))
+    p = probs.mean(axis=0)
+    aux = moe.n_experts * jnp.sum(f * p)
+    return w.astype(x2d.dtype), idx, aux
+
+
+def capacity_of(t_local: int, moe: MoEConfig) -> int:
+    cap = int(math.ceil(t_local * moe.top_k / moe.n_experts
+                        * moe.capacity_factor))
+    return max(cap, 4)
+
+
+def dispatch_indices(experts: jax.Array, n_experts: int, capacity: int):
+    """experts: [T*k] -> (slot [T*k], keep [T*k]) without one-hot matmuls."""
+    tk = experts.shape[0]
+    order = jnp.argsort(experts, stable=True)
+    sorted_e = experts[order]
+    counts = jnp.bincount(experts, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_expert = jnp.arange(tk) - starts[sorted_e]
+    keep_sorted = pos_in_expert < capacity
+    slot_sorted = sorted_e * capacity + jnp.minimum(pos_in_expert,
+                                                    capacity - 1)
+    # un-sort back to token order
+    inv = jnp.argsort(order, stable=True)
+    return slot_sorted[inv], keep_sorted[inv]
+
+
+def gather_to_buffers(x2d: jax.Array, slots: jax.Array, keep: jax.Array,
+                      n_experts: int, capacity: int) -> jax.Array:
+    """Scatter tokens into [n_experts * capacity, D] (dropped -> zeros)."""
+    d = x2d.shape[-1]
+    buf = jnp.zeros((n_experts * capacity, d), x2d.dtype)
+    contrib = jnp.where(keep[:, None], x2d, 0)
+    return buf.at[jnp.where(keep, slots, n_experts * capacity - 1)].add(
+        jnp.where(keep[:, None], contrib, 0))
+
+
+def combine_from_buffers(buf: jax.Array, slots: jax.Array, keep: jax.Array,
+                         weights: jax.Array) -> jax.Array:
+    """buf: [E*cap, D]; slots/keep/weights: [T*k] -> [T*k, D]."""
+    out = buf[slots]
+    return jnp.where(keep[:, None], out, 0) * weights[:, None]
+
+
+# ---------------------------------------------------------------------------
+# expert FFN (TP col/row inside each expert)
+# ---------------------------------------------------------------------------
+
+def init_experts(key, cfg: ArchConfig, dtype):
+    """GLOBAL shapes [n_experts, d, d_ff]; moe_specs shards the expert dim
+    over data (ep_a2a) and the hidden dim over model."""
+    d, f = cfg.d_model, cfg.d_ff
+    n = cfg.moe.n_experts
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = 0.02
+    return {
+        "w_gate": jax.random.normal(k1, (n, d, f), dtype) * std,
+        "w_up": jax.random.normal(k2, (n, d, f), dtype) * std,
+        "w_down": jax.random.normal(k3, (n, f, d), dtype) * std,
+    }
+
+
+def expert_ffn(p, x: jax.Array) -> jax.Array:
+    """x: [n_local, cap*, D] -> same shape (no collective; caller reduces)."""
+    h = silu(jnp.einsum("ecd,edf->ecf", x, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", x, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# the two MoE blocks
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    kr, ke = jax.random.split(key)
+    return {
+        "w_router": jax.random.normal(kr, (cfg.d_model, cfg.moe.n_experts),
+                                      dtype) * 0.02,
+        "experts": init_experts(ke, cfg, dtype),
+    }
+
+
+def moe_specs(cfg: ArchConfig, data_axis: str, model_axis: str):
+    from jax.sharding import PartitionSpec as P
+    e_axis = data_axis if cfg.moe.impl == "ep_a2a" else None
+    return {
+        "w_router": P(None, None),
+        "experts": {
+            "w_gate": P(e_axis, None, model_axis),
+            "w_up": P(e_axis, None, model_axis),
+            "w_down": P(e_axis, model_axis, None),
+        },
+    }
+
+
+def moe_block(p, x: jax.Array, cfg: ArchConfig,
+              ctx: ParallelCtx) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    t = b * s
+    weights, experts, aux = route(x2d, p["w_router"], moe)
+    cap = capacity_of(t, moe)
+    xk = jnp.repeat(x2d, moe.top_k, axis=0)              # [T*k, D]
+    slots, keep = dispatch_indices(experts.reshape(-1), moe.n_experts, cap)
+    buf = gather_to_buffers(xk, slots, keep, moe.n_experts, cap)
+
+    if moe.impl == "ep_a2a" and ctx.dp_size > 1:
+        ep = ctx.dp_size
+        n_local = moe.n_experts // ep
+        # [E*cap, D] -> a2a over data: each rank keeps its expert slice of
+        # every peer's buffer -> [ep * n_local * cap, D]
+        sent = ctx.dp_all_to_all(buf, split_axis=0, concat_axis=0)
+        inb = sent.reshape(ep, n_local, cap, d)
+        inb = inb.transpose(1, 0, 2, 3).reshape(n_local, ep * cap, d)
+        out_loc = expert_ffn(p["experts"], inb)           # TP-sharded d_ff
+        out_loc = ctx.tp_all_reduce(out_loc)              # row-parallel
+        outb = out_loc.reshape(n_local, ep, cap, d).transpose(1, 0, 2, 3)
+        outb = outb.reshape(ep * n_local * cap, d)
+        ret = ctx.dp_all_to_all(outb, split_axis=0, concat_axis=0)
+        buf_out = ret                                     # [E*cap, D]
+    else:
+        out_loc = expert_ffn(
+            p["experts"], buf.reshape(moe.n_experts, cap, d))
+        out_loc = ctx.tp_all_reduce(out_loc)              # row-parallel
+        buf_out = out_loc.reshape(moe.n_experts * cap, d)
+
+    yk = combine_from_buffers(buf_out, slots, keep, weights.reshape(-1))
+    y = yk.reshape(t, moe.top_k, d).sum(axis=1)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,196 @@
+"""Mamba2 SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked dual form: within a chunk of Q steps the output is a masked
+quadratic (attention-like) product; across chunks a small recurrent state
+[H, hd, d_state] carries.  Mamba2's A is a *scalar per head*, which keeps
+the decay algebra closed-form:
+
+  decay(i, j) = exp(cum_a_i - cum_a_j),  cum_a = cumsum(dt * A)
+
+  y_intra[i] = sum_{j<=i} decay(i,j) * (C_i . B_j) * dt_j * x_j
+  state'     = exp(cum_a_Q) * state + sum_j exp(cum_a_Q - cum_a_j) dt_j B_j x_j^T
+  y_inter[i] = exp(cum_a_i) * (C_i . state)
+
+TP: heads are sharded over the model axis (in_proj column-parallel,
+out_proj row-parallel with a FlexLink all_reduce); the recurrence is fully
+local per head — the SSM scan itself needs NO collectives, which is why
+FlexLink still matters for SSM archs only via the projections' collectives
+(DESIGN.md §4).
+
+Decode is the O(1) recurrence: state' = da * state + dt * B x^T.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ArchConfig
+from repro.models.tp import ParallelCtx
+from repro.models.layers import rms_norm, silu
+
+
+def _dims(cfg: ArchConfig, ctx: ParallelCtx):
+    ssm = cfg.ssm
+    d_in = ssm.d_inner(cfg.d_model)
+    n_heads = ssm.n_heads(cfg.d_model)
+    tp = max(ctx.tp_size, 1)
+    assert n_heads % tp == 0 or tp == 1, (n_heads, tp)
+    h_l = n_heads // tp if tp > 1 else n_heads
+    return ssm, d_in, n_heads, h_l
+
+
+def init_ssm(key, cfg: ArchConfig, dtype):
+    """GLOBAL shapes; heads sharded over model by ssm_specs."""
+    ssm = cfg.ssm
+    d, hd, ds = cfg.d_model, ssm.head_dim, ssm.d_state
+    h_l = ssm.n_heads(cfg.d_model)      # global head count
+    d_in_l = h_l * hd
+    keys = jax.random.split(key, 6)
+    std = 0.02
+    # in_proj -> [z, x, B, C, dt] ; z/x are head-sharded, B/C/dt per shard
+    return {
+        "w_in_z": jax.random.normal(keys[0], (d, d_in_l), dtype) * std,
+        "w_in_x": jax.random.normal(keys[1], (d, d_in_l), dtype) * std,
+        "w_in_b": jax.random.normal(keys[2], (d, ds), dtype) * std,
+        "w_in_c": jax.random.normal(keys[3], (d, ds), dtype) * std,
+        "w_in_dt": jax.random.normal(keys[4], (d, h_l), dtype) * std,
+        "dt_bias": jnp.zeros((h_l,), jnp.float32),
+        "a_log": jnp.zeros((h_l,), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((h_l,), jnp.float32),
+        "conv_w": jax.random.normal(keys[5],
+                                    (ssm.conv_kernel, d_in_l), dtype) * std,
+        "norm_w": jnp.ones((d_in_l,), dtype),
+        "w_out": jax.random.normal(jax.random.fold_in(key, 7),
+                                   (d_in_l, d), dtype) * std,
+    }
+
+
+def ssm_specs(model_axis: str):
+    from jax.sharding import PartitionSpec as P
+    return {
+        "w_in_z": P(None, model_axis), "w_in_x": P(None, model_axis),
+        "w_in_b": P(None, None), "w_in_c": P(None, None),
+        "w_in_dt": P(None, model_axis), "dt_bias": P(model_axis),
+        "a_log": P(model_axis), "d_skip": P(model_axis),
+        "conv_w": P(None, model_axis), "norm_w": P(model_axis),
+        "w_out": P(model_axis, None),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time.  x: [B,S,C]; w: [K,C].
+
+    With conv_state [B,K-1,C] (decode), prepends the state; returns
+    (y, new_state)."""
+    k = w.shape[0]
+    if conv_state is not None:
+        xin = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        new_state = xin[:, -(k - 1):, :] if k > 1 else conv_state
+    else:
+        xin = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = xin[:, -(k - 1):, :] if k > 1 else None
+    # sum_k w[k] * x[t - K + 1 + k]
+    s_out = x.shape[1]
+    y = sum(xin[:, i:i + s_out, :] * w[i] for i in range(k))
+    return y, new_state
+
+
+def _ssd_chunked(xh, bt, ct, dt, a, chunk):
+    """Chunked SSD scan.
+
+    xh: [B,S,H,hd]  bt/ct: [B,S,ds]  dt: [B,S,H]  a: [H] (negative)
+    returns y: [B,S,H,hd]
+    """
+    b, s, h, hd = xh.shape
+    ds = bt.shape[-1]
+    q = chunk
+    pad = (-s) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bt = jnp.pad(bt, ((0, 0), (0, pad), (0, 0)))
+        ct = jnp.pad(ct, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+    xc = xh.reshape(b, nc, q, h, hd)
+    bc = bt.reshape(b, nc, q, ds)
+    cc = ct.reshape(b, nc, q, ds)
+    dc = dt.reshape(b, nc, q, h)
+
+    def step(state, xs):
+        xq, bq, cq, dq = xs            # [B,q,H,hd], [B,q,ds], ..., [B,q,H]
+        da = dq * a                    # [B,q,H]
+        cum = jnp.cumsum(da, axis=1)   # [B,q,H]
+        # intra-chunk quadratic term
+        li = cum[:, :, None, :] - cum[:, None, :, :]      # [B,qi,qj,H]
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bis,bjs->bij", cq, bq)           # [B,qi,qj]
+        w_ij = decay * cb[..., None] * dq[:, None, :, :]  # [B,qi,qj,H]
+        y_intra = jnp.einsum("bijh,bjhd->bihd", w_ij, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bis,bhsd->bihd",
+                             cq, state) * jnp.exp(cum)[..., None]
+        # state update
+        seg = jnp.exp(cum[:, -1:, :] - cum)               # [B,q,H]
+        upd = jnp.einsum("bjh,bjs,bjhd->bhsd", dq * seg, bq, xq)
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + upd
+        return state, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, ds, hd), jnp.float32)
+    s_fin, yc = lax.scan(step, s0,
+                         (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(bc, 1, 0),
+                          jnp.moveaxis(cc, 1, 0), jnp.moveaxis(dc, 1, 0)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, nc * q, h, hd)
+    return (y[:, :s] if pad else y), s_fin
+
+
+def ssm_block(p, x: jax.Array, cfg: ArchConfig, ctx: ParallelCtx, *,
+              state=None) -> Tuple[jax.Array, Optional[dict]]:
+    """One Mamba2 block.  x: [B,S,D].
+
+    Train/prefill: state=None, chunked SSD.
+    Decode: state={"ssm": [B,H_l,ds,hd], "conv": [B,K-1,d_in_l]}, S==1.
+    Returns (out, new_state).
+    """
+    ssm, d_in, n_heads, h_l = _dims(cfg, ctx)
+    hd, ds = ssm.head_dim, ssm.d_state
+    b, s, d = x.shape
+
+    z = jnp.einsum("bsd,df->bsf", x, p["w_in_z"])         # [B,S,d_in_l]
+    xr = jnp.einsum("bsd,df->bsf", x, p["w_in_x"])
+    bt = jnp.einsum("bsd,df->bsf", x, p["w_in_b"]).astype(jnp.float32)
+    ct = jnp.einsum("bsd,df->bsf", x, p["w_in_c"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_in_dt"]).astype(jnp.float32)
+        + p["dt_bias"])                                   # [B,S,H_l]
+    a = -jnp.exp(p["a_log"])                              # [H_l]
+
+    conv_state = state["conv"] if state is not None else None
+    xr, new_conv = _causal_conv(xr, p["conv_w"], conv_state)
+    xr = silu(xr)
+    xh = xr.reshape(b, s, h_l, hd).astype(jnp.float32)
+
+    if state is None:
+        y, s_fin = _ssd_chunked(xh, bt, ct, dt, a, ssm.chunk)
+        # final state is returned for the prefill -> decode handoff
+        new_state = {"ssm": s_fin, "conv": new_conv}
+    else:
+        # O(1) decode recurrence (S == 1)
+        s_prev = state["ssm"].astype(jnp.float32)         # [B,H_l,ds,hd]
+        da = jnp.exp(dt[:, 0] * a)                        # [B,H_l]
+        upd = jnp.einsum("bh,bs,bhd->bhsd", dt[:, 0], bt[:, 0], xh[:, 0])
+        s_new = s_prev * da[:, :, None, None] + upd
+        y = jnp.einsum("bs,bhsd->bhd", ct[:, 0], s_new)[:, None]
+        new_state = {"ssm": s_new, "conv": new_conv}
+
+    y = y + xh * p["d_skip"][None, None, :, None]         # D skip connection
+    y = y.reshape(b, s, h_l * hd).astype(x.dtype)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps) * silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return ctx.tp_all_reduce(out), new_state

@@ -1,0 +1,150 @@
+"""Parallelism context — how model code reaches the FlexLink backend.
+
+Model layers never call ``jax.lax`` collectives directly; they go through a
+``ParallelCtx`` that (a) no-ops when the axis is absent/size-1 (single-device
+smoke tests), and (b) routes every bandwidth-bound collective through the
+FlexCommunicator so the paper's multi-path aggregation is the framework's
+communication backend, not a bolt-on.
+
+The ctx is constructed once per launch (train.py / serve.py / dryrun.py)
+from the mesh + CommConfig and closed over by the jitted step function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.communicator import CommConfig, FlexCommunicator
+
+
+def _axis_in_scope(name: Optional[str]) -> bool:
+    if name is None:
+        return False
+    try:
+        lax.axis_size(name)
+        return True
+    except NameError:
+        return False
+
+
+@dataclasses.dataclass
+class ParallelCtx:
+    """Axis names + communicators for one step function.
+
+    tp_axis    : tensor-parallel axis ("model"); None disables TP collectives
+    dp_axis    : data-parallel axis ("data")
+    pod_axis   : pod axis for multi-pod meshes (gradient reduction only)
+    tp/dp size : static sizes (mesh-derived; needed before tracing)
+    """
+
+    tp_axis: Optional[str] = None
+    dp_axis: Optional[str] = None
+    pod_axis: Optional[str] = None
+    tp_size: int = 1
+    dp_size: int = 1
+    pod_size: int = 1
+    comm_config: CommConfig = dataclasses.field(default_factory=CommConfig)
+    _tp_comm: Optional[FlexCommunicator] = None
+    _dp_comm: Optional[FlexCommunicator] = None
+
+    def __post_init__(self):
+        if self.tp_axis and self.tp_size > 1:
+            self._tp_comm = FlexCommunicator(
+                self.tp_axis, self.tp_size, self.comm_config,
+                ortho_name=self.dp_axis if self.dp_size > 1 else None)
+        if self.dp_axis and self.dp_size > 1:
+            self._dp_comm = FlexCommunicator(
+                self.dp_axis, self.dp_size, self.comm_config,
+                ortho_name=self.tp_axis if self.tp_size > 1 else None)
+
+    # -- tensor-parallel collectives (FlexLink-backed) -----------------------
+
+    def tp_all_reduce(self, x: jax.Array) -> jax.Array:
+        if self._tp_comm is None:
+            return x
+        return self._tp_comm.all_reduce(x)
+
+    def tp_all_gather(self, x: jax.Array, tiled: bool = True) -> jax.Array:
+        if self._tp_comm is None:
+            return x
+        return self._tp_comm.all_gather(x, tiled=tiled)
+
+    def tp_reduce_scatter(self, x: jax.Array) -> jax.Array:
+        if self._tp_comm is None:
+            return x
+        return self._tp_comm.reduce_scatter(x)
+
+    # small latency-bound reductions (softmax stats etc.) stay on the
+    # primary path — the tuner would deactivate secondaries anyway.
+    def tp_psum_small(self, x: jax.Array) -> jax.Array:
+        if self.tp_axis is None or self.tp_size <= 1:
+            return x
+        return lax.psum(x, self.tp_axis)
+
+    def tp_pmax_small(self, x: jax.Array) -> jax.Array:
+        if self.tp_axis is None or self.tp_size <= 1:
+            return x
+        return lax.pmax(x, self.tp_axis)
+
+    def tp_index(self) -> jax.Array:
+        if self.tp_axis is None or self.tp_size <= 1:
+            return jnp.zeros((), jnp.int32)
+        return lax.axis_index(self.tp_axis)
+
+    # -- data-parallel collectives -------------------------------------------
+
+    def dp_all_to_all(self, x: jax.Array, split_axis: int,
+                      concat_axis: int) -> jax.Array:
+        if self._dp_comm is None:
+            return x
+        return self._dp_comm.all_to_all(x, split_axis, concat_axis)
+
+    def dp_psum(self, x: jax.Array) -> jax.Array:
+        if self.dp_axis is None or self.dp_size <= 1:
+            return x
+        return lax.psum(x, self.dp_axis)
+
+    def dp_index(self) -> jax.Array:
+        if self.dp_axis is None or self.dp_size <= 1:
+            return jnp.zeros((), jnp.int32)
+        return lax.axis_index(self.dp_axis)
+
+    def dp_psum_small(self, x: jax.Array) -> jax.Array:
+        if self.dp_axis is None or self.dp_size <= 1:
+            return x
+        return lax.psum(x, self.dp_axis)
+
+    def dp_pmax_small(self, x: jax.Array) -> jax.Array:
+        if self.dp_axis is None or self.dp_size <= 1:
+            return x
+        return lax.pmax(x, self.dp_axis)
+
+    def grad_all_reduce(self, grads):
+        """Gradient reduction over data (and pod) axes, FlexLink-backed for
+        the data axis (big payloads), plain psum over the pod axis (DCN —
+        its own link class, not aggregatable with intra-pod paths)."""
+        def red(g):
+            if self._dp_comm is not None:
+                g = self._dp_comm.all_reduce(g)
+            elif self.dp_axis and self.dp_size > 1:
+                g = lax.psum(g, self.dp_axis)
+            if self.pod_axis and self.pod_size > 1:
+                g = lax.psum(g, self.pod_axis)
+            return g
+        return jax.tree.map(red, grads)
+
+    # -- sizing helpers --------------------------------------------------------
+
+    def shard(self, n: int, what: str = "dim") -> int:
+        assert n % max(self.tp_size, 1) == 0, \
+            f"{what}={n} not divisible by tp={self.tp_size}"
+        return n // max(self.tp_size, 1)
+
+
+def single_device_ctx() -> ParallelCtx:
+    return ParallelCtx()

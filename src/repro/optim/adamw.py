@@ -1,0 +1,97 @@
+"""AdamW with decoupled weight decay + global-norm clipping + LR schedules.
+
+Built here (no optax dependency): the optimizer state is a pytree matching
+the params, updated fully inside the jitted train step.  Moments are kept in
+fp32 even for bf16 params (mixed-precision training correctness).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array            # i32 scalar
+    mu: Any                    # first moment (fp32 pytree)
+    nu: Any                    # second moment (fp32 pytree)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (s - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, decay)
+
+
+def init_state(params) -> AdamWState:
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=z,
+                      nu=jax.tree.map(jnp.copy, z))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state: AdamWState, cfg: AdamWConfig,
+                  *, decay_mask=None) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step.  decay_mask: pytree of bools — False leaves skip
+    weight decay (norms, biases)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    if decay_mask is None:
+        decay_mask = jax.tree.map(lambda p: p.ndim >= 2, params)
+
+    def upd(p, g, m, v, dm):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        u = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + jnp.where(dm, cfg.weight_decay, 0.0) * \
+                p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    flat_d = tdef.flatten_up_to(decay_mask)
+    out = [upd(p, g, m, v, d) for p, g, m, v, d in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_d)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,246 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory     = HLO_bytes / (chips x HBM_bw)
+  collective = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are NOT in cost_analysis, so we parse the lowered StableHLO text and
+sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, attributing each op to a mesh axis via its
+replica-group stride (model axis = stride 1 on a ("data","model") mesh).
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s per ICI link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "i64": 8, "ui64": 8, "i32": 4, "ui32": 4, "i16": 2, "ui16": 2,
+    "i8": 1, "ui8": 1, "i1": 0.125, "pred": 0.125,
+}
+
+COLLECTIVE_OPS = ("all_gather", "all_reduce", "reduce_scatter",
+                  "all_to_all", "collective_permute")
+
+
+def _tensor_bytes(t: str) -> float:
+    """'tensor<128x64xbf16>' or 'tensor<bf16>' -> bytes."""
+    m = re.match(r"tensor<(.*)>", t.strip())
+    if not m:
+        return 0.0
+    inner = m.group(1)
+    parts = inner.split("x")
+    dtype = parts[-1]
+    dims = parts[:-1]
+    n = 1.0
+    for d in dims:
+        try:
+            n *= int(d)
+        except ValueError:
+            return 0.0
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op: str
+    operand_bytes: float
+    axis: str               # "model" | "data" | "pod" | "unknown"
+    count: int = 1
+
+
+def _axis_from_stride(stride: int, mesh_shape: Dict[str, int]) -> str:
+    """Device-id stride of a replica group -> mesh axis name.
+
+    For mesh axes ordered ("pod","data","model") with row-major device ids,
+    the model axis groups have stride 1, data stride = model_size, pod
+    stride = model_size*data_size."""
+    model = mesh_shape.get("model", 1)
+    data = mesh_shape.get("data", 1)
+    if stride == 1:
+        return "model"
+    if stride == model:
+        return "data"
+    if stride == model * data:
+        return "pod"
+    return "unknown"
+
+
+def parse_collectives(stablehlo_text: str,
+                      mesh_shape: Dict[str, int]) -> List[CollectiveStats]:
+    """Scan lowered StableHLO for collective ops and their operand sizes."""
+    out: List[CollectiveStats] = []
+    # e.g.  %3 = "stablehlo.all_gather"(%2) <{...}> : (tensor<4x8xf32>) -> ...
+    pat = re.compile(
+        r'"stablehlo\.(' + "|".join(COLLECTIVE_OPS) + r')"\((.*?)\)'
+        r'.*?:\s*\(([^)]*)\)\s*->', re.DOTALL)
+    group_pat = re.compile(r"replica_groups\s*=\s*dense<\[\[([0-9,\s]+)")
+    # large replica-group tensors print hex-encoded (little-endian i64)
+    hex_pat = re.compile(r'replica_groups\s*=\s*dense<"0x([0-9A-Fa-f]+)"')
+    for m in pat.finditer(stablehlo_text):
+        op = m.group(1)
+        operand_types = m.group(3)
+        nbytes = sum(_tensor_bytes(t)
+                     for t in re.findall(r"tensor<[^>]*>", operand_types))
+        # axis attribution from the first replica group's stride
+        tail = stablehlo_text[m.start(): m.start() + 20000]
+        gm = group_pat.search(tail)
+        hm = hex_pat.search(tail)
+        axis = "unknown"
+        ids = []
+        if gm:
+            ids = [int(x) for x in gm.group(1).replace(" ", "").split(",")
+                   if x != ""]
+        elif hm:
+            h = hm.group(1)
+            ids = [int.from_bytes(bytes.fromhex(h[i:i + 16]), "little")
+                   for i in range(0, min(len(h), 32), 16)]
+        if len(ids) >= 2:
+            axis = _axis_from_stride(ids[1] - ids[0], mesh_shape)
+        elif len(ids) == 1:
+            axis = "single"
+        if op == "collective_permute":
+            # permutes have source-target pairs, not replica groups
+            pm = re.search(
+                r"source_target_pairs\s*=\s*dense<\[\[(\d+),\s*(\d+)",
+                tail)
+            ph = re.search(
+                r'source_target_pairs\s*=\s*dense<"0x([0-9A-Fa-f]+)"', tail)
+            if pm:
+                axis = _axis_from_stride(
+                    abs(int(pm.group(2)) - int(pm.group(1))), mesh_shape)
+            elif ph:
+                h = ph.group(1)
+                pair = [int.from_bytes(bytes.fromhex(h[i:i + 16]), "little")
+                        for i in range(0, min(len(h), 32), 16)]
+                if len(pair) == 2:
+                    axis = _axis_from_stride(abs(pair[1] - pair[0]),
+                                             mesh_shape)
+        out.append(CollectiveStats(op, nbytes, axis))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                 # total HLO FLOPs (per program execution)
+    hbm_bytes: float
+    collective_bytes_total: float
+    collective_by_axis: Dict[str, float]
+    collective_by_op: Dict[str, float]
+    model_flops: float           # 6*N*D analytic
+    memory_per_chip: Optional[float] = None   # bytes (memory_analysis)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # each chip drives its links concurrently; 2 links per axis
+        # direction on the torus — use the brief's single-link constant.
+        return self.collective_bytes_total / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); decode D=new
+    tokens only."""
+    n_params = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params * tokens          # forward only
+    tokens = shape.global_batch * 1             # decode: one token
+    return 2.0 * n_params * tokens
+
+
+def count_params(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count for the generic engine."""
+    d, v = cfg.d_model, cfg.vocab
+    n = 0.0
+    n += v * d * 2                       # embed + lm_head
+    hd = cfg.head_dim_
+    attn = d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2 \
+        if cfg.n_heads else 0.0
+    mlp = 3 * d * cfg.d_ff
+    if cfg.family in ("dense", "vlm"):
+        n += cfg.n_layers * (attn + mlp)
+    elif cfg.family == "moe":
+        e_active = cfg.moe.top_k if active_only else cfg.moe.n_experts
+        npre = cfg.moe.n_dense_prefix
+        n += npre * (attn + mlp)
+        n += (cfg.n_layers - npre) * (attn + 3 * d * cfg.d_ff * e_active
+                                      + d * cfg.moe.n_experts)
+    elif cfg.family in ("ssm", "hybrid"):
+        ssm = cfg.ssm
+        d_in = ssm.d_inner(d)
+        per = 2 * d * d_in + 2 * d * ssm.d_state + d * ssm.n_heads(d) \
+            + d_in * d + (ssm.conv_kernel + 1) * d_in
+        n += cfg.n_layers * per
+        if cfg.family == "hybrid":
+            n += attn + mlp              # one shared block
+    elif cfg.family == "encdec":
+        n += cfg.encdec.n_enc_layers * (attn + mlp)
+        n += cfg.n_layers * (2 * attn + mlp)
+    return n
+
+
+def build_roofline(*, arch: str, shape, mesh_name: str, chips: int,
+                   cost: Dict[str, float], hlo_text: str,
+                   mesh_shape: Dict[str, int], cfg,
+                   memory_per_chip: Optional[float] = None) -> Roofline:
+    colls = parse_collectives(hlo_text, mesh_shape)
+    by_axis: Dict[str, float] = {}
+    by_op: Dict[str, float] = {}
+    for c in colls:
+        by_axis[c.axis] = by_axis.get(c.axis, 0.0) + c.operand_bytes
+        by_op[c.op] = by_op.get(c.op, 0.0) + c.operand_bytes
+    total = sum(by_op.values())
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops=flops, hbm_bytes=hbm, collective_bytes_total=total,
+        collective_by_axis=by_axis, collective_by_op=by_op,
+        model_flops=model_flops_estimate(cfg, shape),
+        memory_per_chip=memory_per_chip)

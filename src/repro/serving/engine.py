@@ -1,0 +1,164 @@
+"""Batched serving engine over the decode step.
+
+Wave-scheduled continuous batching: requests are admitted in waves that
+fill the free slots; each wave's prompts are prefilled together through the
+decode path (teacher-forced, one fused call per prompt position), then the
+engine emits one fused decode step per tick for every active slot.
+Finished slots retire independently (EOS or max_new) and free capacity for
+the next wave — per-slot positions keep retired/late slots consistent.
+
+Admitted slots get their cache/state rows zeroed (batch axis 1 in every
+cache leaf).  Unequal-length prompts in a wave are right-aligned: shorter
+prompts see hold tokens first, which attention masks out via kv_valid /
+position overwrites; for SSM families this is left-pad semantics (pad
+tokens do enter the state — the standard trade-off of batched SSM serving).
+The FlexLink communicator sits under every decode collective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.tp import ParallelCtx
+from repro.models.transformer import (DecodeConfig, decode_step, init_cache)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    temperature: float = 0.0
+    out: List[int] = dataclasses.field(default_factory=list)
+    _last: int = 0
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    slots: int = 4               # max concurrent requests
+    cache_len: int = 128
+    eos_id: int = -1             # -1: never stops early
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, ctx: ParallelCtx,
+                 scfg: ServeConfig, seed: int = 0):
+        self.p = params
+        self.cfg = cfg
+        self.ctx = ctx
+        self.scfg = scfg
+        self.dcfg = DecodeConfig(cache_len_local=scfg.cache_len,
+                                 seq_shard=None)
+        self.cache = init_cache(cfg, ctx, self.dcfg, scfg.slots)
+        self.pos = np.zeros(scfg.slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * scfg.slots
+        self.queue: List[Request] = []
+        self.rng = np.random.default_rng(seed)
+        self._next_rid = 0
+        self._finished: Dict[int, List[int]] = {}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, ctx,
+                                             self.dcfg))
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 16,
+               temperature: float = 0.0) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new, temperature))
+        return rid
+
+    def finished(self) -> Dict[int, List[int]]:
+        return dict(self._finished)
+
+    # -- internals --------------------------------------------------------------
+    def _fused_step(self, tokens: np.ndarray) -> np.ndarray:
+        logits, self.cache = self._decode(
+            self.p, self.cache, jnp.asarray(tokens[:, None]),
+            jnp.asarray(self.pos))
+        return np.asarray(logits)
+
+    def _admit_wave(self) -> None:
+        """Fill free slots; prefill the admitted prompts together."""
+        free = [s for s in range(self.scfg.slots) if self.active[s] is None]
+        wave = []
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            self.active[slot] = req
+            self.pos[slot] = 0
+            wave.append((slot, req))
+        if not wave:
+            return
+        # zero the admitted slots' cache/state rows (batch axis 1)
+        slot_ids = np.array([s for s, _ in wave])
+        mask_shape = [1, self.scfg.slots]
+        sel = np.zeros(self.scfg.slots, bool)
+        sel[slot_ids] = True
+        sel_j = jnp.asarray(sel)
+
+        def zero_rows(a):
+            shape = [1] * a.ndim
+            shape[1] = self.scfg.slots
+            return jnp.where(sel_j.reshape(shape), jnp.zeros_like(a), a)
+        self.cache = jax.tree.map(zero_rows, self.cache)
+        max_len = max(len(r.prompt) for _, r in wave)
+        # teacher-forced prefill: one fused call per prompt position; slots
+        # whose prompt is exhausted (or inactive) repeat a hold token at a
+        # frozen position; their state advance is rolled back by kv_valid
+        # masking (attention) or by never sampling from them (ssm rollback
+        # is avoided by right-aligning: shorter prompts start later).
+        starts = {s: max_len - len(r.prompt) for s, r in wave}
+        for t in range(max_len - 1):            # last token enters at tick
+            toks = np.zeros(self.scfg.slots, np.int32)
+            for s, r in wave:
+                if t >= starts[s]:
+                    toks[s] = r.prompt[t - starts[s]]
+            self._fused_step(toks)
+            for s, r in wave:
+                if t >= starts[s]:
+                    self.pos[s] += 1
+        for s, r in wave:
+            r._last = r.prompt[-1]
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(logits.argmax())
+        z = logits / req.temperature
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def tick(self) -> int:
+        """Admit + one fused decode step for all active slots."""
+        if any(s is None for s in self.active) and self.queue:
+            self._admit_wave()
+        act = [s for s in range(self.scfg.slots) if self.active[s]]
+        if not act:
+            return 0
+        toks = np.zeros(self.scfg.slots, np.int32)
+        for s in act:
+            toks[s] = self.active[s]._last
+        logits = self._fused_step(toks)
+        for s in act:
+            self.pos[s] += 1
+            req = self.active[s]
+            nxt = self._sample(logits[s], req)
+            req.out.append(nxt)
+            req._last = nxt
+            if len(req.out) >= req.max_new or nxt == self.scfg.eos_id:
+                self._finished[req.rid] = req.out
+                self.active[s] = None
+        return len(act)
+
+    def run_until_drained(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and not any(self.active):
+                break
+            self.tick()

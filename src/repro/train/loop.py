@@ -1,0 +1,61 @@
+"""Host-side training loop: data feeding, metrics, checkpointing, and the
+Stage-2 FlexLink feedback hook (the host replays each executed step's
+collective calls into the balancer; if shares move, the step is re-jitted —
+the jit-variant cache of DESIGN.md §2)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.models.tp import ParallelCtx
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0           # 0 = only final
+    ckpt_dir: Optional[str] = None
+
+
+def run_loop(step_fn_builder: Callable[[], Callable],
+             params, opt_state,
+             batches: Iterator[Dict[str, np.ndarray]],
+             ctx: ParallelCtx, loop: LoopConfig,
+             log: Callable[[str], None] = print):
+    """Drive training.  ``step_fn_builder`` returns a fresh (re-)jitted step
+    closing over the communicators' *current* shares; it is rebuilt whenever
+    Stage-2 rebalancing moves a share."""
+    ckpt = Checkpointer(loop.ckpt_dir) if loop.ckpt_dir else None
+    step_fn = step_fn_builder()
+    history = []
+    t0 = time.time()
+    for i in range(loop.total_steps):
+        batch = next(batches)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        # Stage-2 hook: feed executed-step timings to the balancers
+        rebal = False
+        for comm in (ctx._tp_comm, ctx._dp_comm):
+            if comm is not None:
+                rebal |= comm.observe_executed_step()
+        if rebal:
+            step_fn = step_fn_builder()     # adopt the new share plan
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if loop.log_every and (i % loop.log_every == 0
+                               or i == loop.total_steps - 1):
+            dt = time.time() - t0
+            log(f"step {i:5d}  loss {loss:.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}  "
+                f"lr {float(metrics['lr']):.2e}  {dt:.1f}s")
+        if ckpt and loop.ckpt_every and (i + 1) % loop.ckpt_every == 0:
+            ckpt.save(i + 1, params, opt_state)
+    if ckpt:
+        ckpt.save(loop.total_steps, params, opt_state)
+    return params, opt_state, history

@@ -1,0 +1,67 @@
+"""The jitted training step: fwd + bwd + gradient sync + AdamW, built for a
+ParallelCtx and run under shard_map by the launcher.
+
+Gradient-sync topology (DESIGN.md §5):
+  * normal params are replicated over data (+pod) -> grads psum over both
+    (the data-axis reduce is FlexLink-backed: the classic "DP gradient
+    all-reduce" the paper's Fig. 3 targets);
+  * ep_a2a expert params are SHARDED over the data axis -> the backward
+    all_to_all already accumulated their gradients across data ranks; they
+    only psum over the pod axis.
+The local loss is pre-scaled by 1/(dp*pods) so every psum lands directly on
+the global-mean gradient.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.tp import ParallelCtx
+from repro.models.transformer import lm_loss
+from repro.optim.adamw import AdamWConfig, AdamWState, apply_updates
+
+
+def is_expert_param(path) -> bool:
+    return any(getattr(k, "key", None) == "experts" for k in path)
+
+
+def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx):
+    """psum per the topology above (FlexLink on the data axis)."""
+    ep = cfg.moe is not None and cfg.moe.impl == "ep_a2a"
+
+    def sync(path, g):
+        if ep and is_expert_param(path):
+            if ctx.pod_axis and ctx.pod_size > 1:
+                g = jax.lax.psum(g, ctx.pod_axis)
+            return g
+        return ctx.grad_all_reduce(g)
+
+    return jax.tree_util.tree_map_with_path(sync, grads)
+
+
+def make_train_step(cfg: ArchConfig, ctx: ParallelCtx, opt: AdamWConfig,
+                    *, remat: bool = True):
+    """Returns step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Call under shard_map with param_specs shardings."""
+    denom = max(ctx.dp_size, 1) * max(ctx.pod_size, 1)
+
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, ctx, remat=remat) / denom
+
+    def step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = sync_grads(grads, cfg, ctx)
+        params, opt_state, om = apply_updates(params, grads, opt_state, opt)
+        # report the global mean loss
+        gloss = ctx.dp_psum(loss)
+        if ctx.pod_axis and ctx.pod_size > 1:
+            gloss = jax.lax.psum(gloss, ctx.pod_axis)
+        metrics = {"loss": gloss, **om}
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,17 @@
+"""Test session setup.
+
+We give the CPU backend 8 placeholder devices so collective/distribution
+tests can build real meshes (the multi-path collectives are the paper's
+data plane — they must be tested on a multi-device mesh).  NOTE: the
+*dry-run's* 512-device setting stays strictly inside launch/dryrun.py; 8
+here is only so tests can exercise shard_map.  Benchmarks (python -m
+benchmarks.run) still see the plain 1-device backend.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,98 @@
+"""Stage-2 runtime balancer (Evaluator + LoadBalancer) tests."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balancer import Evaluator, LoadBalancer
+from repro.core.simulator import MiB, PathTimingModel
+from repro.core.topology import Collective
+from repro.core.tuner import SHARE_GRID, initial_tune
+
+PATHS = ["nvlink", "pcie", "rdma"]
+
+
+def tuned_balancer(op=Collective.ALL_GATHER, n=8, mib=256):
+    model = PathTimingModel("h800")
+    payload = mib * MiB
+    res = initial_tune(PATHS, "nvlink",
+                       lambda fr: model.measure(op, n, payload, fr))
+    return model, LoadBalancer(res.shares, "nvlink")
+
+
+def test_evaluator_window():
+    ev = Evaluator(window=5)
+    for i in range(4):
+        ev.record({"a": 1.0, "b": 2.0})
+    assert ev.trend(["a", "b"]) is None  # window not yet full
+    ev.record({"a": 1.0, "b": 2.0})
+    assert ev.trend(["a", "b"]) == {"a": 1.0, "b": 2.0}
+
+
+def test_median_ignores_transient_spike():
+    ev = Evaluator(window=5)
+    for i in range(5):
+        t = {"a": 1.0, "b": 1.0}
+        if i == 2:
+            t["b"] = 100.0  # one spike
+        ev.record(t)
+    trend = ev.trend(["a", "b"])
+    assert trend["b"] == 1.0  # median unaffected
+
+
+def test_no_adjustment_when_balanced():
+    _, bal = tuned_balancer()
+    start = dict(bal.shares)
+    for _ in range(50):
+        bal.observe({p: 1.0 for p in PATHS})  # perfectly balanced
+    assert bal.shares == start
+    assert not bal.adjustments
+
+
+def test_adjusts_toward_primary_when_secondary_slows():
+    _, bal = tuned_balancer()
+    pcie_before = bal.shares["pcie"]
+    assert pcie_before > 0
+    # pcie suddenly becomes 3x slower (e.g. other designs eating PCIe, §6).
+    for _ in range(60):
+        bal.observe({"nvlink": 1.0, "pcie": 3.0, "rdma": 1.1})
+    assert bal.shares["pcie"] < pcie_before
+    # moves go to the primary link (paper: "prioritizing NVLink")
+    assert all(a.target == "nvlink" for a in bal.adjustments)
+    assert all(a.moved == 1 for a in bal.adjustments)  # small fixed share
+
+
+def test_periodic_invocation_only():
+    _, bal = tuned_balancer()
+    for i in range(9):
+        bal.observe({"nvlink": 1.0, "pcie": 10.0, "rdma": 1.0})
+    assert not bal.adjustments          # not yet invoked (period 10)
+    bal.observe({"nvlink": 1.0, "pcie": 10.0, "rdma": 1.0})
+    assert len(bal.adjustments) == 1    # invoked exactly at the period
+
+
+def test_closed_loop_message_size_shift():
+    """Fig-5 scenario: message size changes at runtime; the balancer reshapes
+    the distribution using live (simulated) timings."""
+    model, bal = tuned_balancer(Collective.ALL_GATHER, 8, 256)
+    op, n = Collective.ALL_GATHER, 8
+    # switch to small 8 MiB messages: latency terms dominate, secondary
+    # shares should shrink.
+    pcie_before = bal.shares["pcie"] + bal.shares["rdma"]
+    for _ in range(400):
+        t = model.measure(op, n, 8 * MiB, bal.fractions())
+        bal.observe(t)
+    pcie_after = bal.shares["pcie"] + bal.shares["rdma"]
+    assert pcie_after < pcie_before
+    assert sum(bal.shares.values()) == SHARE_GRID
+
+
+@given(times=st.lists(
+    st.fixed_dictionaries({p: st.floats(0.1, 10.0) for p in PATHS}),
+    min_size=1, max_size=120))
+@settings(max_examples=30, deadline=None)
+def test_property_share_conservation(times):
+    _, bal = tuned_balancer()
+    for t in times:
+        bal.observe(t)
+    assert sum(bal.shares.values()) == SHARE_GRID
+    assert all(v >= 0 for v in bal.shares.values())

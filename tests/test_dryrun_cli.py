@@ -1,0 +1,34 @@
+"""The dry-run launcher end to end, in a fresh process (so its 512-device
+XLA_FLAGS setting cannot leak into this test session)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.parametrize("arch,shape", [("glm4-9b", "decode_32k")])
+def test_dryrun_cli_produces_valid_record(tmp_path, arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)          # dryrun.py must set it itself
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=480)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    tag = f"{arch}__{shape}__single__flexlink.json"
+    with open(tmp_path / tag) as f:
+        rec = json.load(f)
+    assert rec["ok"]
+    assert rec["chips"] == 256
+    roof = rec["roofline"]
+    assert roof["dominant"] in ("compute", "memory", "collective")
+    assert roof["t_compute"] > 0 and roof["t_memory"] > 0
+    assert rec["hlo_collective_structure"], "collectives must be present"
+    # axis attribution worked (no all-unknown structure)
+    assert any("@model" in k or "@data" in k
+               for k in rec["hlo_collective_structure"])
