@@ -1,0 +1,6 @@
+"""Version-compatibility shims (JAX API drift lives here, nowhere else)."""
+
+from repro.compat.axes import axis_size
+from repro.compat.shard_map import shard_map
+
+__all__ = ["axis_size", "shard_map"]

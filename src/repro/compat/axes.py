@@ -1,0 +1,22 @@
+"""Named-axis introspection shims.
+
+``jax.lax.axis_size`` only exists on newer JAX; on older releases the
+idiomatic spelling is ``lax.psum(1, axis_name)``, which constant-folds to
+the axis size at trace time.  Everything in this repo calls
+``repro.compat.axis_size`` so collective code is version-agnostic.
+"""
+
+from __future__ import annotations
+
+from jax import lax
+
+try:  # jax >= 0.5
+    from jax.lax import axis_size as _axis_size  # type: ignore[attr-defined]
+except ImportError:
+    def _axis_size(axis_name):
+        return lax.psum(1, axis_name)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis (inside shard_map/pmap scope)."""
+    return _axis_size(axis_name)

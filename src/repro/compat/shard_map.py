@@ -1,0 +1,45 @@
+"""``shard_map`` compatibility shim across JAX versions.
+
+The public location of ``shard_map`` has moved twice:
+
+  * jax <= 0.4.x : ``jax.experimental.shard_map.shard_map`` with a
+    ``check_rep=`` kwarg;
+  * jax >= 0.6.x : top-level ``jax.shard_map`` with the kwarg renamed to
+    ``check_vma=`` (varying-manual-axes checking).
+
+Everything in this repo (and its tests) imports from here and uses the
+*new* spelling — ``from repro.compat import shard_map`` plus
+``check_vma=...`` — and the shim translates for whatever JAX is installed.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional
+
+try:  # jax >= 0.6: public top-level API
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax <= 0.4/0.5: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None,
+              **kwargs: Any):
+    """Call the installed JAX's shard_map, translating the check kwarg.
+
+    Accepts both ``check_vma`` (new) and ``check_rep`` (old) spellings;
+    whichever is given is forwarded under the name the installed JAX
+    understands.
+    """
+    flag = check_vma if check_vma is not None else check_rep
+    if flag is not None:
+        if "check_vma" in _PARAMS:
+            kwargs["check_vma"] = flag
+        elif "check_rep" in _PARAMS:
+            kwargs["check_rep"] = flag
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -71,7 +71,8 @@ class LoadBalancer:
                  gap_threshold: float = RUNTIME_GAP_THRESHOLD,
                  step: int = RUNTIME_STEP,
                  invoke_period: int = INVOKE_PERIOD,
-                 grid: int = SHARE_GRID):
+                 grid: int = SHARE_GRID,
+                 allow_primary_reactivation: bool = True):
         self.shares: Dict[str, int] = dict(shares)
         assert sum(self.shares.values()) == grid
         self.primary = primary
@@ -79,6 +80,12 @@ class LoadBalancer:
         self.gap_threshold = gap_threshold
         self.step = step
         self.invoke_period = invoke_period
+        #: whether a primary that Stage 1 deactivated (share 0) may be
+        #: re-activated by runtime moves.  The paper's §3.2.2 NVLink-first
+        #: rule implies yes: the primary is the best-effective link, so
+        #: share freed from a degraded secondary should return to it even
+        #: from zero.  Set False to pin deactivated paths off.
+        self.allow_primary_reactivation = allow_primary_reactivation
         self.evaluator = Evaluator(window)
         self.calls = 0
         self.adjustments: List[Adjustment] = []
@@ -116,11 +123,15 @@ class LoadBalancer:
         if gap <= self.gap_threshold:
             return None
         # Move a small fixed share from the slowest to the fastest path,
-        # prioritizing the primary link (paper §3.2.2).
-        target = self.primary if (slow != self.primary and
-                                  self.shares.get(self.primary, 0) >= 0) else fast
-        if target == slow:
-            target = fast
+        # prioritizing the primary link (paper §3.2.2).  The primary is a
+        # valid target only if this balancer actually tracks it (guards
+        # against conjuring shares for an unknown path) and either still
+        # holds share or may be re-activated.
+        target = fast
+        if slow != self.primary and self.primary in self.shares:
+            if (self.shares[self.primary] > 0
+                    or self.allow_primary_reactivation):
+                target = self.primary
         moved = min(self.step, self.shares[slow])
         if moved <= 0:
             return None

@@ -1,8 +1,14 @@
-"""Multi-path collectives — FlexLink's Communicator data plane, in JAX.
+"""Path primitives + payload partitioning — FlexLink's data plane, in JAX.
 
-Every collective here runs inside ``shard_map`` and takes an explicit share
-vector (grid units, see ``tuner.SHARE_GRID``) that partitions the payload
-across *routes*:
+Every primitive here runs inside ``shard_map``.  The *routing* of payload
+across primitives — which path carries how many chunks of which collective —
+lives one level up in ``routing.py``: a quantized ``RoutePlan`` drives a
+single generic ``execute`` driver through the PathExecutor registry.  The
+four ``flex_*`` collectives are re-exported from there (see the module
+``__getattr__`` at the bottom), so ``collectives.flex_all_reduce`` keeps
+working while this module stays free of dispatch logic.
+
+The three route classes (DESIGN.md §3):
 
   primary : the native XLA collective on the target mesh axis — lowers to the
             axis' ICI links exactly like NCCL's NVLink ring.
@@ -10,9 +16,13 @@ across *routes*:
             models the host-staged path: a logically distinct stream of
             point-to-point transfers with its own channels, chunk grain and
             (in the ring-all-reduce) explicit per-step reduce — the hot spot
-            the paper's double-buffered pipeline targets.  In the lowered HLO
-            it appears as ``collective-permute`` ops, which the roofline
-            attributes to the secondary path class.
+            the paper's double-buffered pipeline targets.  The rings are
+            *chunk-pipelined*: ``substeps > 1`` splits the segment into
+            sub-chunks whose per-step transfers are mutually independent, the
+            lowered analogue of the §3.1 PD2H/H2CD double buffer (the
+            sub-chunk k+1 permute overlaps the sub-chunk k reduce).  In the
+            lowered HLO the ring appears as ``collective-permute`` ops, which
+            the roofline attributes to the secondary path class.
   ortho   : neighbor-row detour over an *orthogonal* (otherwise idle) mesh
             axis: ppermute the share one hop along the ortho axis, run the
             primary-axis collective on the neighbor row (whose model-axis
@@ -25,8 +35,8 @@ Losslessness (the paper's headline property) is enforced by construction —
 all routes move exact bytes, no quantization — and verified bit-exactly
 against single-path references in ``tests/test_collectives.py``.
 
-Honest-adaptation note (also in DESIGN.md): under perfectly uniform SPMD the
-ortho detour cannot reduce the *sum* of bytes crossing the primary axis —
+Honest-adaptation note (also in DESIGN.md §3): under perfectly uniform SPMD
+the ortho detour cannot reduce the *sum* of bytes crossing the primary axis —
 that conservation holds on any torus.  What it does do is (a) move bytes onto
 links that are idle at that point of the program, letting XLA's async
 scheduler overlap the two streams, and (b) win outright when the workload is
@@ -37,18 +47,23 @@ structurally via the per-axis collective-byte breakdown.
 
 from __future__ import annotations
 
-import functools
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.tuner import SHARE_GRID
+from repro.compat import axis_size
+from repro.core.tuner import SHARE_GRID  # noqa: F401  (re-export for callers)
 
 #: payload partition granularity (chunks); shares in grid units are mapped
 #: onto this chunk grid.  16 keeps the jit-variant cache small (DESIGN.md §2).
 CHUNK_GRID = 16
+
+PATH_PRIMARY = "primary"
+PATH_STAGED = "staged"
+PATH_ORTHO = "ortho"
+PATH_ORDER = (PATH_PRIMARY, PATH_STAGED, PATH_ORTHO)
 
 
 # ---------------------------------------------------------------------------
@@ -147,68 +162,137 @@ def merge_columns(segs: Mapping[str, jax.Array], order: Sequence[str],
 
 
 # ---------------------------------------------------------------------------
-# staged-path primitives: explicit ppermute rings
+# staged-path primitives: chunk-pipelined ppermute rings
 # ---------------------------------------------------------------------------
 
 def _ring_perm(n: int) -> List[Tuple[int, int]]:
     return [(i, (i + 1) % n) for i in range(n)]
 
 
-def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
+def _split_subchunks(flat: jax.Array, substeps: int
+                     ) -> Tuple[List[jax.Array], int, int]:
+    """Split a flat payload into `substeps` equal sub-chunks (pad as needed).
+
+    The sub-chunks are the pipeline's in-flight units: their per-ring-step
+    transfers carry no data dependence on each other, so the scheduler can
+    overlap sub-chunk k+1's permute with sub-chunk k's reduce — the lowered
+    form of the §3.1 double buffer.
+    """
+    m = flat.shape[-1]
+    s = max(1, min(int(substeps), max(m, 1)))
+    pad = (-m) % s
+    if pad:
+        widths = [(0, 0)] * (flat.ndim - 1) + [(0, pad)]
+        flat = jnp.pad(flat, widths)
+    w = flat.shape[-1] // s
+    subs = [lax.dynamic_slice_in_dim(flat, j * w, w, axis=flat.ndim - 1)
+            for j in range(s)]
+    return subs, pad, s
+
+
+def ring_all_gather(x: jax.Array, axis_name: str, *,
+                    substeps: int = 1) -> jax.Array:
     """All-gather via N-1 ppermute steps; result ordered by rank like
-    ``lax.all_gather(x, axis_name, tiled=False)`` (leading axis = rank)."""
-    n = lax.axis_size(axis_name)
+    ``lax.all_gather(x, axis_name, tiled=False)`` (leading axis = rank).
+
+    ``substeps > 1`` chunk-pipelines the ring: the payload is split into
+    sub-chunks forwarded independently each step (pure data movement, so the
+    result is bit-identical for any substeps).
+    """
+    n = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     perm = _ring_perm(n)
-    chunks = [x]
-    cur = x
+    subs, pad, s = _split_subchunks(x.reshape(-1), substeps)
+    collected = [[sub] for sub in subs]
+    curs = list(subs)
     for _ in range(n - 1):
-        cur = lax.ppermute(cur, axis_name, perm)
-        chunks.append(cur)
-    stacked = jnp.stack(chunks)            # entry k holds rank (idx - k) % n
-    order = (idx - jnp.arange(n)) % n      # entry j should hold rank j
+        # issue every sub-chunk's permute for this ring step up front: the
+        # sends are independent and can overlap downstream consumption
+        curs = [lax.ppermute(c, axis_name, perm) for c in curs]
+        for j in range(s):
+            collected[j].append(curs[j])
+    rows = jnp.concatenate([jnp.stack(c) for c in collected], axis=1)
+    order = (idx - jnp.arange(n)) % n      # entry k holds rank (idx - k) % n
     inv = jnp.argsort(order)
-    return jnp.take(stacked, inv, axis=0)
+    rows = jnp.take(rows, inv, axis=0)     # entry j holds rank j
+    if pad:
+        rows = rows[:, :-pad]
+    return rows.reshape((n,) + x.shape)
 
 
 def ring_reduce_scatter(x: jax.Array, axis_name: str,
-                        accumulate=None) -> jax.Array:
-    """Reduce-scatter via the classic N-1 step ring.
+                        accumulate=None, *, substeps: int = 1) -> jax.Array:
+    """Reduce-scatter via the classic N-1 step ring, chunk-pipelined.
 
     `x` has leading dim divisible by N; returns this rank's reduced chunk.
-    `accumulate(a, b)` is the per-step reduce — defaults to ``a + b`` but the
-    Pallas ``chunk_accumulate`` kernel can be injected (the paper's
-    reduce-sum hot spot).
+    `accumulate(a, b)` is the per-step reduce — ``a + b`` when None; the
+    Pallas ``chunk_accumulate`` kernel is injected by the routing layer for
+    floating payloads (the paper's reduce-sum hot spot).  ``substeps > 1``
+    splits each rank-chunk into sub-chunks whose transfers interleave across
+    ring steps (the §3.1 double-buffered pipeline, lowered).
     """
     if accumulate is None:
         accumulate = lambda a, b: a + b
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
-    chunks = x.reshape((n, -1) + x.shape[1:])
     perm = _ring_perm(n)
+    chunk_shape = (x.shape[0] // n,) + x.shape[1:]
+    subs, pad, s = _split_subchunks(x.reshape(n, -1), substeps)
     # step s: rank r sends the partial for chunk (r - s - 1) and
     # receives+reduces the partial for chunk (r - s - 2); after N-1 steps
     # rank r owns fully reduced chunk r — matching psum_scatter's layout.
-    cur = jnp.take(chunks, (idx - 1) % n, axis=0)
-    for s in range(n - 1):
-        cur = lax.ppermute(cur, axis_name, perm)
-        mine = jnp.take(chunks, (idx - s - 2) % n, axis=0)
-        cur = accumulate(cur, mine)
-    return cur  # fully reduced chunk idx
+    curs = [jnp.take(sub, (idx - 1) % n, axis=0) for sub in subs]
+    for step in range(n - 1):
+        # double buffer: all sub-chunk sends of this ring step are issued
+        # before any reduce, so transfer j+1 overlaps the accumulate of j
+        recvd = [lax.ppermute(c, axis_name, perm) for c in curs]
+        mines = [jnp.take(sub, (idx - step - 2) % n, axis=0) for sub in subs]
+        curs = [accumulate(r, mine) for r, mine in zip(recvd, mines)]
+    out = jnp.concatenate(curs) if s > 1 else curs[0]
+    if pad:
+        out = out[:-pad]
+    return out.reshape(chunk_shape)  # fully reduced chunk idx
 
 
-def ring_all_reduce(x: jax.Array, axis_name: str, accumulate=None) -> jax.Array:
+def ring_all_reduce(x: jax.Array, axis_name: str, accumulate=None, *,
+                    substeps: int = 1) -> jax.Array:
     """All-reduce = ring reduce-scatter + ring all-gather (2(N-1) steps)."""
-    n = lax.axis_size(axis_name)
-    idx = lax.axis_index(axis_name)
+    n = axis_size(axis_name)
     flat, pad = _flatten_pad(x, n)
-    mine = ring_reduce_scatter(flat.reshape(n, -1), axis_name, accumulate)
-    gathered = ring_all_gather(mine, axis_name)        # [n, chunk] by rank
+    mine = ring_reduce_scatter(flat.reshape(n, -1), axis_name, accumulate,
+                               substeps=substeps)
+    gathered = ring_all_gather(mine, axis_name,
+                               substeps=substeps)      # [n, chunk] by rank
     # rank r contributed chunk r, so rank order == payload order.
     flat_out = gathered.reshape(-1)
     if pad:
         flat_out = flat_out[:-pad]
     return flat_out.reshape(x.shape)
+
+
+def ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """all-to-all via N-1 ppermute rotations (tiled semantics, axis 0).
+
+    Already pipelined by construction: every rotation is independent, so the
+    N-1 permutes can all be in flight at once.
+    """
+    n = axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    chunk = x.shape[0] // n
+    blocks = x.reshape((n, chunk) + x.shape[1:])
+    # rotation s delivers block dest=(idx+s)%n to rank (idx+s)%n via
+    # ppermute with shift s; the piece we receive comes from rank (idx-s).
+    received = [jnp.take(blocks, idx % n, axis=0)]        # s=0: own block
+    for s in range(1, n):
+        send = jnp.take(blocks, (idx + s) % n, axis=0)
+        perm = [(i, (i + s) % n) for i in range(n)]
+        got = lax.ppermute(send, axis_name, perm)          # from rank idx-s
+        received.append(got)
+    stacked = jnp.stack(received)        # entry s = block from rank (idx-s)
+    order = (idx - jnp.arange(n)) % n
+    inv = jnp.argsort(order)
+    out = jnp.take(stacked, inv, axis=0)  # entry j = block from rank j
+    return out.reshape((n * chunk,) + x.shape[1:])
 
 
 def tree_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
@@ -219,7 +303,7 @@ def tree_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     butterfly pays log2(N), trading 1.7x more wire bytes for 4.7x fewer
     latency units at N=8.  Requires power-of-two N.
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     assert n & (n - 1) == 0, "recursive doubling needs power-of-two ranks"
     k = 0
     while (1 << k) < n:
@@ -242,9 +326,9 @@ def ortho_all_gather(x: jax.Array, axis_name: str, ortho_name: str) -> jax.Array
     and ppermute the result back.  Correct for ANY sharding across the
     ortho axis — the operands never mix between ortho rows — and the two
     permutes ride otherwise-idle ortho links.  (On a torus the primary-axis
-    byte total is conserved — the win is overlap/scheduling, DESIGN.md §2.)
+    byte total is conserved — the win is overlap/scheduling, DESIGN.md §3.)
     """
-    m = lax.axis_size(ortho_name)
+    m = axis_size(ortho_name)
     if m <= 1:
         return lax.all_gather(x, axis_name)
     fwd = [(i, (i + 1) % m) for i in range(m)]
@@ -258,7 +342,7 @@ def ortho_all_reduce(x: jax.Array, axis_name: str, ortho_name: str) -> jax.Array
     """All-reduce over `axis_name` via the neighbor-row detour (see
     ortho_all_gather): permute -> psum on the neighbor row -> permute back.
     Lossless for any ortho-axis sharding."""
-    m = lax.axis_size(ortho_name)
+    m = axis_size(ortho_name)
     if m <= 1:
         return lax.psum(x, axis_name)
     fwd = [(i, (i + 1) % m) for i in range(m)]
@@ -269,164 +353,18 @@ def ortho_all_reduce(x: jax.Array, axis_name: str, ortho_name: str) -> jax.Array
 
 
 # ---------------------------------------------------------------------------
-# FlexLink multi-path collectives
+# flex_* re-exports: the multi-path collectives now live in the RoutePlan
+# engine (routing.py); importing them lazily here avoids a module cycle
+# (routing builds on the primitives above) while keeping the historical
+# ``collectives.flex_all_reduce`` spelling working.
 # ---------------------------------------------------------------------------
 
-PATH_PRIMARY = "primary"
-PATH_STAGED = "staged"
-PATH_ORTHO = "ortho"
-PATH_ORDER = (PATH_PRIMARY, PATH_STAGED, PATH_ORTHO)
+_ROUTED = ("flex_all_reduce", "flex_all_gather", "flex_reduce_scatter",
+           "flex_all_to_all", "RoutePlan", "build_plan", "execute")
 
 
-def _route_plan(shares: Optional[Mapping[str, int]],
-                ortho_name: Optional[str]) -> Dict[str, int]:
-    if shares is None:
-        return {PATH_PRIMARY: CHUNK_GRID}
-    order = [p for p in PATH_ORDER if not (p == PATH_ORTHO and ortho_name is None)]
-    chunk_units = quantize_shares(shares, order)
-    return {p: u for p, u in chunk_units.items() if u > 0}
-
-
-def flex_all_reduce(x: jax.Array, axis_name: str, *,
-                    shares: Optional[Mapping[str, int]] = None,
-                    ortho_name: Optional[str] = None,
-                    accumulate=None) -> jax.Array:
-    """Share-partitioned multi-path all-reduce (lossless)."""
-    plan = _route_plan(shares, ortho_name)
-    if set(plan) == {PATH_PRIMARY}:
-        return lax.psum(x, axis_name)
-    segs, pad = partition_payload(x, plan, PATH_ORDER)
-    out: Dict[str, jax.Array] = {}
-    if PATH_PRIMARY in segs:
-        out[PATH_PRIMARY] = lax.psum(segs[PATH_PRIMARY], axis_name)
-    if PATH_STAGED in segs:
-        out[PATH_STAGED] = ring_all_reduce(segs[PATH_STAGED], axis_name,
-                                           accumulate)
-    if PATH_ORTHO in segs:
-        out[PATH_ORTHO] = ortho_all_reduce(segs[PATH_ORTHO], axis_name,
-                                           ortho_name)
-    return merge_payload(out, PATH_ORDER, pad, x.shape, x.dtype)
-
-
-def flex_all_gather(x: jax.Array, axis_name: str, *,
-                    shares: Optional[Mapping[str, int]] = None,
-                    ortho_name: Optional[str] = None,
-                    tiled: bool = False) -> jax.Array:
-    """Share-partitioned multi-path all-gather.
-
-    Returns rank-major stacked result ``[n, *x.shape]`` (or tiled along axis
-    0 when ``tiled=True``), identical to ``lax.all_gather``.
-    """
-    n = lax.axis_size(axis_name)
-    plan = _route_plan(shares, ortho_name)
-    if set(plan) == {PATH_PRIMARY}:
-        g = lax.all_gather(x, axis_name)
-    else:
-        segs, pad = partition_payload(x, plan, PATH_ORDER)
-        out: Dict[str, jax.Array] = {}
-        if PATH_PRIMARY in segs:
-            out[PATH_PRIMARY] = lax.all_gather(segs[PATH_PRIMARY], axis_name)
-        if PATH_STAGED in segs:
-            out[PATH_STAGED] = ring_all_gather(segs[PATH_STAGED], axis_name)
-        if PATH_ORTHO in segs:
-            out[PATH_ORTHO] = ortho_all_gather(segs[PATH_ORTHO], axis_name,
-                                               ortho_name)
-        # each out[p] is [n, seg_len]; concatenate per-rank then unpad+reshape
-        per_rank = jnp.concatenate(
-            [out[p] for p in PATH_ORDER if p in out], axis=1)
-        if pad:
-            per_rank = per_rank[:, :-pad]
-        g = per_rank.reshape((n,) + x.shape)
-    if tiled:
-        g = g.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else g.reshape(-1)
-    return g
-
-
-def flex_reduce_scatter(x: jax.Array, axis_name: str, *,
-                        shares: Optional[Mapping[str, int]] = None,
-                        ortho_name: Optional[str] = None,
-                        accumulate=None) -> jax.Array:
-    """Share-partitioned reduce-scatter over leading dim (len divisible by n)."""
-    n = lax.axis_size(axis_name)
-    assert x.shape[0] % n == 0, "leading dim must divide the axis size"
-    plan = _route_plan(shares, ortho_name)
-    if set(plan) == {PATH_PRIMARY}:
-        return lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
-    # Partition along the *feature* (trailing) payload so every path scatters
-    # the same rank-chunk structure on the leading axis.
-    lead = x.shape[0]
-    feat = x.reshape(lead, -1)
-    segs, pad = partition_columns(feat, plan, PATH_ORDER)
-    out: Dict[str, jax.Array] = {}
-    for p, seg in segs.items():                              # seg: [lead, f_p]
-        if p == PATH_PRIMARY:
-            out[p] = lax.psum_scatter(seg, axis_name, scatter_dimension=0,
-                                      tiled=True)
-        elif p == PATH_STAGED:
-            out[p] = ring_reduce_scatter(seg, axis_name, accumulate)
-        else:
-            red_full = ortho_all_reduce(seg, axis_name, ortho_name)
-            idx = lax.axis_index(axis_name)
-            out[p] = lax.dynamic_slice_in_dim(red_full, idx * (lead // n),
-                                              lead // n, axis=0)
-    merged = merge_columns(out, PATH_ORDER, pad)            # [lead/n, F]
-    return merged.reshape((lead // n,) + x.shape[1:])
-
-
-def flex_all_to_all(x: jax.Array, axis_name: str, *,
-                    split_axis: int = 0, concat_axis: int = 0,
-                    shares: Optional[Mapping[str, int]] = None,
-                    ortho_name: Optional[str] = None) -> jax.Array:
-    """Share-partitioned all-to-all (paper §6 future work — we ship it).
-
-    The staged route sends each peer's slice with a dedicated ppermute ring
-    rotation; the primary route is native ``lax.all_to_all``.  Restricted to
-    ``split_axis == concat_axis`` (the expert-parallel dispatch pattern).
-    """
-    if split_axis != concat_axis:
-        raise NotImplementedError("flex_all_to_all requires split==concat axis")
-    n = lax.axis_size(axis_name)
-    plan = _route_plan(shares, ortho_name)
-    # all_to_all has no ortho detour that avoids primary links; fold ortho
-    # share into the staged route (the balancer never routes a2a via ortho).
-    if PATH_ORTHO in plan:
-        plan[PATH_STAGED] = plan.get(PATH_STAGED, 0) + plan.pop(PATH_ORTHO)
-    if set(plan) == {PATH_PRIMARY}:
-        return lax.all_to_all(x, axis_name, split_axis, concat_axis,
-                              tiled=True)
-    # split the trailing payload per path: move split_axis to front first
-    xm = jnp.moveaxis(x, split_axis, 0)
-    lead = xm.shape[0]
-    feat = xm.reshape(lead, -1)
-    segs, pad = partition_columns(feat, plan, PATH_ORDER)
-    outs: Dict[str, jax.Array] = {}
-    for p, seg in segs.items():                             # [lead, f_p]
-        if p == PATH_PRIMARY:
-            outs[p] = lax.all_to_all(seg, axis_name, 0, 0, tiled=True)
-        else:
-            outs[p] = _ring_all_to_all(seg, axis_name)
-    merged = merge_columns(outs, PATH_ORDER, pad)           # [lead, F]
-    res = merged.reshape(xm.shape)
-    return jnp.moveaxis(res, 0, split_axis)
-
-
-def _ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
-    """all-to-all via N-1 ppermute rotations (tiled semantics, axis 0)."""
-    n = lax.axis_size(axis_name)
-    idx = lax.axis_index(axis_name)
-    chunk = x.shape[0] // n
-    blocks = x.reshape((n, chunk) + x.shape[1:])
-    # rotation s delivers block (idx + s) of each rank to rank (idx + s)...
-    # simpler: for each s, send block dest=(idx+s)%n to rank (idx+s)%n via
-    # ppermute with shift s; the piece we receive comes from rank (idx-s).
-    received = [jnp.take(blocks, idx % n, axis=0)]        # s=0: own block
-    for s in range(1, n):
-        send = jnp.take(blocks, (idx + s) % n, axis=0)
-        perm = [(i, (i + s) % n) for i in range(n)]
-        got = lax.ppermute(send, axis_name, perm)          # from rank idx-s
-        received.append(got)
-    stacked = jnp.stack(received)        # entry s = block from rank (idx-s)
-    order = (idx - jnp.arange(n)) % n
-    inv = jnp.argsort(order)
-    out = jnp.take(stacked, inv, axis=0) # entry j = block from rank j
-    return out.reshape((n * chunk,) + x.shape[1:])
+def __getattr__(name: str):
+    if name in _ROUTED:
+        from repro.core import routing
+        return getattr(routing, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

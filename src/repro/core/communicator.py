@@ -6,7 +6,9 @@ Responsibilities, mirroring Figure 1:
     (``links.NodeProfile``);
   * run Stage-1 coarse tuning at init (Algorithm 1) per (collective,
     ring-size, payload-bucket) — the paper's "~10 s profiling phase";
-  * serve collectives, partitioning payload by the current shares;
+  * build a quantized :class:`~repro.core.routing.RoutePlan` per call from
+    the current shares and serve every collective through the single
+    ``routing.execute`` driver;
   * feed per-call timings to the Stage-2 Evaluator/LoadBalancer and adopt its
     adjustments;
   * stay NCCL-API compatible: ``all_reduce/all_gather/reduce_scatter/
@@ -15,22 +17,29 @@ Responsibilities, mirroring Figure 1:
     aggregation.
 
 Share changes imply new jit variants (shapes change); shares are quantized
-to the CHUNK_GRID and compiled variants are cached per quantized plan —
-Stage 2 moves one unit at a time, so the cache stays tiny (DESIGN.md §2).
+onto the plan grain and plans are memoized in an explicit
+:class:`~repro.core.routing.PlanCache` keyed by ``(op, bucket, shares)``,
+whose hit/miss/re-trace counters ``report()`` surfaces — Stage 2 moves one
+unit at a time, so the cache stays tiny (DESIGN.md §2).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, Mapping, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import collectives as mp
+from repro.core import routing
 from repro.core.balancer import LoadBalancer
-from repro.core.links import NodeProfile, PROFILES
+from repro.core.links import LinkSpec, NodeProfile, PROFILES
+from repro.core.pipeline import StageTimes, optimal_chunk_bytes
+from repro.core.routing import PlanCache, RoutePlan
 from repro.core.simulator import PathTimingModel
 from repro.core.topology import Collective
 from repro.core.tuner import SHARE_GRID, TuneResult, initial_tune
@@ -59,6 +68,11 @@ class CommConfig:
     runtime_balancing: bool = True
     measurement_noise: float = 0.0     # simulator noise for the balancer loop
     seed: int = 0
+    #: registry-isolation tag: part of the comm_init_rank memo key.  Tools
+    #: that TRACE steps without executing them (dry-run, shape probes) must
+    #: set a distinct tag so their traced calls don't pollute a live
+    #: workload's Stage-2 replay log on the same axis/config.
+    tag: str = ""
 
 
 class FlexCommunicator:
@@ -77,24 +91,46 @@ class FlexCommunicator:
                                      seed=self.config.seed)
         self._tuned: Dict[Tuple[Collective, int], TuneResult] = {}
         self._balancers: Dict[Tuple[Collective, int], LoadBalancer] = {}
-        #: collectives issued during the most recent trace — the host loop
-        #: replays these into record_call() after every executed step.
-        self._issued: list = []
+        #: quantized-plan cache (op, bucket, plan identity) -> RoutePlan
+        #: with hit/miss/re-trace stats — the jit-variant cache of
+        #: DESIGN.md §2.
+        self.plan_cache = PlanCache()
+        #: two-phase issued-call replay log.  ``_pending`` collects the
+        #: (op, nbytes) of every plan_for during tracing; the first executed
+        #: step after a trace PROMOTES it to ``_trace_log`` (replacing the
+        #: previous one).  This keeps true per-step multiplicity (a 48-layer
+        #: step replays 48 calls — the paper's "last 10 collective calls"
+        #: window is per call, not per step) while re-traces after a Stage-2
+        #: share move replace the log instead of double-counting into it.
+        #: KNOWN LIMIT: two DIFFERENT step functions sharing this memoized
+        #: communicator overwrite each other's log on interleaved traces —
+        #: give concurrent workloads distinct ``CommConfig.tag``s, or see
+        #: the per-step recorder item in ROADMAP.md.
+        self._pending: list = []
+        self._trace_log: list = []
 
     def issued_calls(self):
-        return list(self._issued)
+        """The replay multiset for one executed step: the calls traced since
+        the last executed step if any (a fresh trace), else the last
+        promoted trace."""
+        return list(self._pending) if self._pending else list(self._trace_log)
 
     def reset_issued(self) -> None:
-        self._issued.clear()
+        self._pending.clear()
+        self._trace_log.clear()
 
     def observe_executed_step(self) -> bool:
         """Host-side Stage-2 hook: record one executed step's collectives.
 
         Returns True when the balancer changed any share (the caller should
-        re-trace with the new plan — the jit-variant cache in DESIGN.md §2).
+        re-trace with the new plan — a quantized-plan change registers in
+        the plan cache as a re-trace, DESIGN.md §2).
         """
+        if self._pending:
+            self._trace_log = list(self._pending)
+            self._pending.clear()
         before = {k: dict(b.shares) for k, b in self._balancers.items()}
-        for op, nbytes in self._issued:
+        for op, nbytes in self._trace_log:
             self.record_call(op, nbytes)
         after = {k: dict(b.shares) for k, b in self._balancers.items()}
         return before != after
@@ -146,50 +182,85 @@ class FlexCommunicator:
                                      bal.fractions())
         bal.observe(timings)
 
+    # -- plan construction ----------------------------------------------------
+
+    @property
+    def _staged_link(self) -> Optional[LinkSpec]:
+        sec = self.profile.secondary
+        return sec[0] if sec else None
+
+    def staged_substeps_for(self, op: Collective, bucket: int,
+                            shares: Mapping[str, int]) -> int:
+        """Chunk-pipeline depth for the staged ring of one size bucket.
+
+        Uses the §3.1 double-buffered pipeline model: pick the chunk size
+        minimizing staged-segment completion time, then split the segment
+        into that many sub-chunks (clamped to the double-buffer minimum and
+        the HLO-size cap).  Pure host-side arithmetic, derived from the
+        BUCKET size (not the exact call size) so the plan is a pure
+        function of the cache key (op, bucket, shares).
+        """
+        link = self._staged_link
+        frac = shares.get(mp.PATH_STAGED, 0) / SHARE_GRID
+        seg_bytes = float(bucket) * frac
+        if link is None or seg_bytes <= 0:
+            return 1
+        st = StageTimes(pd2h_GBps=link.effective_GBps,
+                        h2cd_GBps=link.effective_GBps,
+                        per_chunk_us=link.step_latency_us)
+        chunk = optimal_chunk_bytes(seg_bytes, st)
+        n_chunks = int(math.ceil(seg_bytes / chunk))
+        return max(routing.DEFAULT_STAGED_SUBSTEPS,
+                   min(n_chunks, routing.MAX_STAGED_SUBSTEPS))
+
+    def plan_for(self, op: Collective, x: jax.Array) -> RoutePlan:
+        """Memoized RoutePlan for one call (trace-time; Stage-2 observation
+        happens host-side via ``observe_executed_step``)."""
+        nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
+        bucket = bucket_for(nbytes)
+        if self.config.backend == "nccl" or self.n_ranks <= 1:
+            # no Stage-2 loop in baseline/degenerate mode: don't grow the
+            # replay log
+            return self.plan_cache.lookup(
+                op, bucket,
+                lambda: routing.build_plan(op, self.axis_name, None,
+                                           self.ortho_name))
+        if self.config.runtime_balancing:
+            # the replay log only feeds Stage 2 — don't grow it on
+            # communicators whose host loop never drains it
+            self._pending.append((op, nbytes))
+
+        def build() -> RoutePlan:
+            shares = self.shares_for(op, nbytes)
+            return routing.build_plan(
+                op, self.axis_name, shares, self.ortho_name,
+                staged_substeps=self.staged_substeps_for(op, bucket, shares))
+
+        return self.plan_cache.lookup(op, bucket, build)
+
     # -- data plane (NCCL-shaped; call inside shard_map) ----------------------
 
-    def _plan(self, op: Collective, x: jax.Array) -> Optional[Dict[str, int]]:
-        if self.config.backend == "nccl" or self.n_ranks <= 1:
-            return None
-        nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
-        shares = self.shares_for(op, nbytes)
-        # NB: Stage-2 observation (record_call) is driven by the *host-side*
-        # training/serving loop once per executed step — _plan runs at trace
-        # time, so recording here would advance the balancer per-trace.
-        self._issued.append((op, nbytes))
-        if set(shares) == {mp.PATH_PRIMARY}:
-            return None
-        return shares
-
     def all_reduce(self, x: jax.Array, accumulate=None) -> jax.Array:
-        shares = self._plan(Collective.ALL_REDUCE, x)
-        return mp.flex_all_reduce(x, self.axis_name, shares=shares,
-                                  ortho_name=self.ortho_name,
-                                  accumulate=accumulate)
+        plan = self.plan_for(Collective.ALL_REDUCE, x)
+        return routing.execute(plan, x, accumulate=accumulate)
 
     def all_gather(self, x: jax.Array, tiled: bool = True) -> jax.Array:
-        shares = self._plan(Collective.ALL_GATHER, x)
-        return mp.flex_all_gather(x, self.axis_name, shares=shares,
-                                  ortho_name=self.ortho_name, tiled=tiled)
+        plan = self.plan_for(Collective.ALL_GATHER, x)
+        g = routing.execute(plan, x)
+        return routing.tile_gathered(g, x) if tiled else g
 
     def reduce_scatter(self, x: jax.Array, accumulate=None) -> jax.Array:
-        shares = self._plan(Collective.REDUCE_SCATTER, x)
-        return mp.flex_reduce_scatter(x, self.axis_name, shares=shares,
-                                      ortho_name=self.ortho_name,
-                                      accumulate=accumulate)
+        plan = self.plan_for(Collective.REDUCE_SCATTER, x)
+        return routing.execute(plan, x, accumulate=accumulate)
 
     def all_to_all(self, x: jax.Array, split_axis: int = 0,
                    concat_axis: int = 0) -> jax.Array:
-        shares = self._plan(Collective.ALL_TO_ALL, x)
-        return mp.flex_all_to_all(x, self.axis_name, split_axis=split_axis,
-                                  concat_axis=concat_axis, shares=shares,
-                                  ortho_name=self.ortho_name)
+        plan = self.plan_for(Collective.ALL_TO_ALL, x)
+        return routing.execute_all_to_all(plan, x, split_axis, concat_axis)
 
     def broadcast(self, x: jax.Array, root: int = 0) -> jax.Array:
         # single-path: broadcast payloads are small; the tuner would
         # deactivate secondaries anyway (latency-bound).
-        import jax.numpy as jnp
-        from jax import lax
         idx = lax.axis_index(self.axis_name)
         masked = jnp.where(idx == root, x, jnp.zeros_like(x))
         return lax.psum(masked, self.axis_name)
@@ -197,7 +268,7 @@ class FlexCommunicator:
     # -- reporting -------------------------------------------------------------
 
     def report(self) -> Dict[str, object]:
-        out = {}
+        out: Dict[str, object] = {}
         for (op, bucket), res in self._tuned.items():
             bal = self._balancers[(op, bucket)]
             out[f"{op.value}@{bucket}"] = {
@@ -211,6 +282,7 @@ class FlexCommunicator:
                 "nccl_algbw_GBps": self.model.nccl_baseline_GBps(
                     op, self.n_ranks, bucket),
             }
+        out["plan_cache"] = self.plan_cache.report()
         return out
 
 
@@ -220,15 +292,21 @@ class FlexCommunicator:
 # against a communicator handle.
 # ---------------------------------------------------------------------------
 
-_COMMS: Dict[Tuple[str, int, str, Optional[str]], FlexCommunicator] = {}
+_COMMS: Dict[Tuple, FlexCommunicator] = {}
 
 
 def comm_init_rank(axis_name: str, n_ranks: int,
                    config: Optional[CommConfig] = None,
                    ortho_name: Optional[str] = None) -> FlexCommunicator:
-    """ncclCommInitRank analogue (memoized per axis/backend)."""
+    """ncclCommInitRank analogue, memoized per (axis, size, config, ortho).
+
+    Construction runs Stage-1 tuning lazily but holds the balancer state —
+    sharing one communicator per key is what makes Stage-2 adjustments
+    visible to every step function on that axis (and avoids re-tuning when
+    ``ParallelCtx`` is rebuilt, e.g. per launcher or test).
+    """
     cfg = config or CommConfig()
-    key = (axis_name, n_ranks, cfg.backend, ortho_name)
+    key = (axis_name, n_ranks, ortho_name, dataclasses.astuple(cfg))
     if key not in _COMMS:
         _COMMS[key] = FlexCommunicator(axis_name, n_ranks, cfg, ortho_name)
     return _COMMS[key]

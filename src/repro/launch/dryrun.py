@@ -55,8 +55,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         mesh = make_production_mesh(multi_pod=multi_pod)
         mesh_name = "multi" if multi_pod else "single"
     chips = int(np.prod(mesh.devices.shape))
+    # runtime_balancing=False already keeps these trace-only steps out of
+    # any Stage-2 replay log (plan_for skips the append), and the differing
+    # config fields give the dry-run its own memoized communicator; the tag
+    # just makes the isolation intent explicit in the registry key.
     comm = CommConfig(backend=backend, profile="tpu_v5e",
-                      runtime_balancing=False)
+                      runtime_balancing=False, tag="dryrun")
     pods, dp, tp = mesh_dims(mesh)
     t0 = time.time()
 
@@ -82,6 +86,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    # older JAX returns a one-element list of dicts (one per computation)
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     mem = None
     mem_report = {}
     try:

@@ -119,10 +119,16 @@ def cache_specs(cfg: ArchConfig, shape: InputShape, dcfg: DecodeConfig, *,
                 tp: int, dp: int, dtype) -> Dict[str, Any]:
     """GLOBAL cache shapes (sequence dim = full seq_len; the mesh shards it
     per cache_partition_specs)."""
+    from repro.core.communicator import CommConfig
     from repro.models import layers as L
     from repro.models.tp import ParallelCtx
+    # pure shape probe: tag + nccl backend so the ctx's memoized
+    # communicators neither alias a live workload's Stage-2 state nor run
+    # multi-path tuning for head-layout arithmetic
     ctx = ParallelCtx(tp_size=tp, dp_size=dp, tp_axis="model" if tp > 1
-                      else None, dp_axis="data" if dp > 1 else None)
+                      else None, dp_axis="data" if dp > 1 else None,
+                      comm_config=CommConfig(backend="nccl",
+                                             tag="shape-probe"))
     b, s = shape.global_batch, shape.seq_len
     hd = cfg.head_dim_
     fam = cfg.family

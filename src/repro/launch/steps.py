@@ -1,9 +1,13 @@
 """Sharded step builders: wrap the model engine's step functions in
 shard_map over a mesh, wiring the ParallelCtx (and therefore the FlexLink
-communicators) to the mesh axes.
+RoutePlan engine) to the mesh axes.
 
 Every launcher (train.py, serve.py, dryrun.py) builds its steps here so the
-dry-run lowers EXACTLY what training/serving would run.
+dry-run lowers EXACTLY what training/serving would run.  Communicators are
+memoized per (axis, config) by ``comm_init_rank``, so rebuilding a step
+after a Stage-2 share move re-traces against the SAME balancer state — only
+the RoutePlans change (a plan-cache re-trace, visible in
+``ctx.comm_report()``).
 """
 
 from __future__ import annotations
@@ -13,8 +17,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core.communicator import CommConfig
 from repro.launch.mesh import mesh_dims

@@ -8,25 +8,31 @@ communication backend, not a bolt-on.
 
 The ctx is constructed once per launch (train.py / serve.py / dryrun.py)
 from the mesh + CommConfig and closed over by the jitted step function.
+Communicators come from the memoized ``comm_init_rank`` registry, so
+rebuilding a ctx (new launcher, re-jitted step) reuses the axis' Stage-1
+tuning and keeps one Stage-2 balancer per (axis, config) — every step
+function on an axis sees the same RoutePlan engine.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.communicator import CommConfig, FlexCommunicator
+from repro.compat import axis_size
+from repro.core.communicator import (CommConfig, FlexCommunicator,
+                                     comm_init_rank)
 
 
 def _axis_in_scope(name: Optional[str]) -> bool:
     if name is None:
         return False
     try:
-        lax.axis_size(name)
+        axis_size(name)
         return True
     except NameError:
         return False
@@ -54,13 +60,46 @@ class ParallelCtx:
 
     def __post_init__(self):
         if self.tp_axis and self.tp_size > 1:
-            self._tp_comm = FlexCommunicator(
+            self._tp_comm = comm_init_rank(
                 self.tp_axis, self.tp_size, self.comm_config,
                 ortho_name=self.dp_axis if self.dp_size > 1 else None)
         if self.dp_axis and self.dp_size > 1:
-            self._dp_comm = FlexCommunicator(
+            self._dp_comm = comm_init_rank(
                 self.dp_axis, self.dp_size, self.comm_config,
                 ortho_name=self.tp_axis if self.tp_size > 1 else None)
+
+    # -- plan-engine plumbing -------------------------------------------------
+
+    def comms(self) -> Tuple[FlexCommunicator, ...]:
+        """The live communicators behind this ctx (tp first, then dp)."""
+        return tuple(c for c in (self._tp_comm, self._dp_comm)
+                     if c is not None)
+
+    def observe_executed_step(self) -> bool:
+        """Host-side Stage-2 hook over every communicator.
+
+        Returns True when any balancer moved a share — the caller should
+        rebuild/re-trace its jitted step so the new RoutePlans take effect
+        (the plan cache records the event as a re-trace).  A fresh trace
+        REPLACES the replay log rather than appending to it, so re-traces
+        don't double-count and no reset is needed between rebuilds.
+        """
+        changed = False
+        for comm in self.comms():
+            changed |= comm.observe_executed_step()
+        return changed
+
+    def reset_issued(self) -> None:
+        """Clear every communicator's issued-call replay log.  Only for
+        explicit isolation (e.g. tests, or retiring a workload): the log is
+        shared by every ctx on the same memoized communicator, so clearing
+        it mid-run would silence Stage-2 for sibling step functions."""
+        for comm in self.comms():
+            comm.reset_issued()
+
+    def comm_report(self) -> Dict[str, object]:
+        """Tuning + plan-cache stats keyed by mesh axis."""
+        return {c.axis_name: c.report() for c in self.comms()}
 
     # -- tensor-parallel collectives (FlexLink-backed) -----------------------
 
@@ -124,18 +163,23 @@ class ParallelCtx:
             return x
         return lax.pmax(x, self.dp_axis)
 
+    def pod_psum(self, x: jax.Array) -> jax.Array:
+        """Pod-axis (DCN) reduction — its own link class, not aggregatable
+        with intra-pod paths, so it stays a plain psum."""
+        if self.pod_axis is None or self.pod_size <= 1:
+            return x
+        return lax.psum(x, self.pod_axis)
+
     def grad_all_reduce(self, grads):
         """Gradient reduction over data (and pod) axes, FlexLink-backed for
-        the data axis (big payloads), plain psum over the pod axis (DCN —
-        its own link class, not aggregatable with intra-pod paths)."""
+        the data axis (big payloads), plain psum over the pod axis (see
+        pod_psum)."""
         def red(g):
             if self._dp_comm is not None:
                 g = self._dp_comm.all_reduce(g)
             elif self.dp_axis and self.dp_size > 1:
                 g = lax.psum(g, self.dp_axis)
-            if self.pod_axis and self.pod_size > 1:
-                g = lax.psum(g, self.pod_axis)
-            return g
+            return self.pod_psum(g)
         return jax.tree.map(red, grads)
 
     # -- sizing helpers --------------------------------------------------------

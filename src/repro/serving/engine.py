@@ -12,7 +12,12 @@ cache leaf).  Unequal-length prompts in a wave are right-aligned: shorter
 prompts see hold tokens first, which attention masks out via kv_valid /
 position overwrites; for SSM families this is left-pad semantics (pad
 tokens do enter the state — the standard trade-off of batched SSM serving).
-The FlexLink communicator sits under every decode collective.
+
+The FlexLink RoutePlan engine sits under every decode collective (via the
+ctx's communicators): every executed fused step — prefill ticks included —
+replays its collectives into the Stage-2 balancer, and if a share moves the
+decode step is re-jitted so the next call traces against the new plans (a
+plan-cache re-trace — see ``comm_report``).
 """
 
 from __future__ import annotations
@@ -62,9 +67,16 @@ class ServeEngine:
         self.rng = np.random.default_rng(seed)
         self._next_rid = 0
         self._finished: Dict[int, List[int]] = {}
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, ctx,
-                                             self.dcfg))
+        self._decode = self._build_decode()
+
+    def _build_decode(self):
+        return jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg,
+                                             self.ctx, self.dcfg))
+
+    def comm_report(self) -> Dict[str, object]:
+        """Per-axis FlexLink tuning + plan-cache stats for this engine."""
+        return self.ctx.comm_report()
 
     # -- client API -----------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 16,
@@ -82,6 +94,11 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.p, self.cache, jnp.asarray(tokens[:, None]),
             jnp.asarray(self.pos))
+        # Stage-2 hook on EVERY executed fused step (prefill ticks included
+        # — with long prompts they are most of the collective traffic); a
+        # share move means new RoutePlans -> re-jit the step.
+        if self.ctx.observe_executed_step():
+            self._decode = self._build_decode()
         return np.asarray(logits)
 
     def _admit_wave(self) -> None:

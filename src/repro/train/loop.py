@@ -40,11 +40,7 @@ def run_loop(step_fn_builder: Callable[[], Callable],
         batch = next(batches)
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         # Stage-2 hook: feed executed-step timings to the balancers
-        rebal = False
-        for comm in (ctx._tp_comm, ctx._dp_comm):
-            if comm is not None:
-                rebal |= comm.observe_executed_step()
-        if rebal:
+        if ctx.observe_executed_step():
             step_fn = step_fn_builder()     # adopt the new share plan
         loss = float(metrics["loss"])
         history.append(loss)

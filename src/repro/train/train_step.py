@@ -31,14 +31,13 @@ def is_expert_param(path) -> bool:
 
 
 def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx):
-    """psum per the topology above (FlexLink on the data axis)."""
+    """Reduce per the topology above — every collective goes through the
+    ctx, so the RoutePlan engine is the only communication backend."""
     ep = cfg.moe is not None and cfg.moe.impl == "ep_a2a"
 
     def sync(path, g):
         if ep and is_expert_param(path):
-            if ctx.pod_axis and ctx.pod_size > 1:
-                g = jax.lax.psum(g, ctx.pod_axis)
-            return g
+            return ctx.pod_psum(g)
         return ctx.grad_all_reduce(g)
 
     return jax.tree_util.tree_map_with_path(sync, grads)
@@ -58,9 +57,7 @@ def make_train_step(cfg: ArchConfig, ctx: ParallelCtx, opt: AdamWConfig,
         grads = sync_grads(grads, cfg, ctx)
         params, opt_state, om = apply_updates(params, grads, opt_state, opt)
         # report the global mean loss
-        gloss = ctx.dp_psum(loss)
-        if ctx.pod_axis and ctx.pod_size > 1:
-            gloss = jax.lax.psum(gloss, ctx.pod_axis)
+        gloss = ctx.pod_psum(ctx.dp_psum(loss))
         metrics = {"loss": gloss, **om}
         return params, opt_state, metrics
 

@@ -1,7 +1,7 @@
 """Stage-2 runtime balancer (Evaluator + LoadBalancer) tests."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.balancer import Evaluator, LoadBalancer
 from repro.core.simulator import MiB, PathTimingModel
@@ -96,3 +96,54 @@ def test_property_share_conservation(times):
         bal.observe(t)
     assert sum(bal.shares.values()) == SHARE_GRID
     assert all(v >= 0 for v in bal.shares.values())
+
+
+# ---------------------------------------------------------------------------
+# _maybe_adjust target selection (regression: the old guard
+# `shares.get(primary, 0) >= 0` was vacuously true, so share could be
+# "moved" to a primary this balancer does not even track)
+# ---------------------------------------------------------------------------
+
+def _hammer(bal, timings, n=20):
+    for _ in range(n):
+        bal.observe(timings)
+
+
+def test_untracked_primary_is_never_a_target():
+    """A balancer over secondary paths only must route moves to the fastest
+    tracked path, not conjure a share entry for the absent primary."""
+    bal = LoadBalancer({"pcie": 50, "rdma": 50}, "nvlink")
+    _hammer(bal, {"pcie": 5.0, "rdma": 1.0})
+    assert "nvlink" not in bal.shares
+    assert bal.adjustments
+    assert all(a.target == "rdma" for a in bal.adjustments)
+    assert sum(bal.shares.values()) == SHARE_GRID
+
+
+def test_primary_reactivation_from_zero_default_on():
+    """Primary share 0: by default runtime moves may re-activate it (the
+    NVLink-first rule applies even from zero)."""
+    bal = LoadBalancer({"nvlink": 0, "pcie": 50, "rdma": 50}, "nvlink")
+    _hammer(bal, {"nvlink": 1.0, "pcie": 5.0, "rdma": 1.0})
+    assert bal.adjustments
+    assert bal.adjustments[0].target == "nvlink"
+    assert bal.shares["nvlink"] > 0
+
+
+def test_primary_reactivation_can_be_pinned_off():
+    bal = LoadBalancer({"nvlink": 0, "pcie": 50, "rdma": 50}, "nvlink",
+                       allow_primary_reactivation=False)
+    _hammer(bal, {"nvlink": 1.0, "pcie": 5.0, "rdma": 1.0})
+    assert bal.shares["nvlink"] == 0          # stays deactivated
+    assert bal.adjustments
+    assert all(a.target == "rdma" for a in bal.adjustments)
+
+
+def test_slow_primary_moves_to_fastest_secondary():
+    """When the primary itself is slowest the move must go to the fastest
+    path, never back to the source."""
+    bal = LoadBalancer({"nvlink": 80, "pcie": 10, "rdma": 10}, "nvlink")
+    _hammer(bal, {"nvlink": 9.0, "pcie": 1.0, "rdma": 3.0})
+    assert bal.adjustments
+    assert all(a.source == "nvlink" and a.target == "pcie"
+               for a in bal.adjustments)

@@ -15,10 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.core import collectives as mp
 
@@ -266,3 +266,51 @@ def test_tree_all_reduce_matches_psum():
                   in_specs=(P("x"),), out_specs=P("x"), check_vma=False)
     np.testing.assert_allclose(np.asarray(jax.jit(f)(x)),
                                np.asarray(jax.jit(r)(x)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("substeps", [1, 2, 4])
+def test_staged_ring_bf16_fp32_kernel_bit_exact_vs_psum(substeps):
+    """The chunk-pipelined staged ring with the Pallas fp32-accumulate
+    kernel matches lax.psum BIT-EXACTLY for bf16 payloads whose sums are
+    representable: the kernel accumulates in fp32 (one rounding per step on
+    exact values), so no low bits are lost across the N-1 ring steps."""
+    from repro.kernels import ops as kops
+    mesh = mesh2d()
+    # integer-valued bf16: all partial sums over 4 ranks stay exact
+    x = jnp.arange(4 * 6 * 8, dtype=jnp.float32).reshape(4 * 6, 8)
+    x = (x % 61.0).astype(jnp.bfloat16)
+
+    def flex(xs):
+        return mp.flex_all_reduce(xs, "x", shares={"primary": 0,
+                                                   "staged": 100},
+                                  ortho_name="y",
+                                  accumulate=kops.ring_accumulate_fn(),
+                                  substeps=substeps)
+
+    f = shard_map(flex, mesh=mesh, in_specs=(P("x"),), out_specs=P("x"),
+                  check_vma=False)
+    r = shard_map(lambda xs: lax.psum(xs, "x"), mesh=mesh,
+                  in_specs=(P("x"),), out_specs=P("x"), check_vma=False)
+    got = np.asarray(jax.jit(f)(x).astype(jnp.float32))
+    want = np.asarray(jax.jit(r)(x).astype(jnp.float32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_staged_ring_default_accumulate_is_kernel_bf16_exact():
+    """Without an explicit accumulate, the routing layer injects the Pallas
+    fp32 kernel on the staged path for floating payloads (the plan's
+    ACC_AUTO policy) — same bit-exact result as passing it by hand."""
+    mesh = mesh2d()
+    x = jnp.arange(4 * 5 * 4, dtype=jnp.float32).reshape(4 * 5, 4)
+    x = (x % 29.0).astype(jnp.bfloat16)
+
+    f = shard_map(lambda xs: mp.flex_all_reduce(
+                      xs, "x", shares={"primary": 0, "staged": 100},
+                      ortho_name="y"),
+                  mesh=mesh, in_specs=(P("x"),), out_specs=P("x"),
+                  check_vma=False)
+    r = shard_map(lambda xs: lax.psum(xs, "x"), mesh=mesh,
+                  in_specs=(P("x"),), out_specs=P("x"), check_vma=False)
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(f)(x).astype(jnp.float32)),
+        np.asarray(jax.jit(r)(x).astype(jnp.float32)))

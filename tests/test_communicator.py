@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import lax, shard_map
+from jax import lax
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.communicator import (CommConfig, FlexCommunicator,
@@ -121,6 +122,47 @@ def test_report_contains_prediction():
     comm = FlexCommunicator("x", 8, CommConfig(profile="h800"))
     comm.tune(Collective.ALL_GATHER, 256 * 2**20)
     rep = comm.report()
+    cache = rep.pop("plan_cache")
+    assert set(cache) >= {"hits", "misses", "retraces", "size"}
     (key, entry), = rep.items()
     assert entry["predicted_algbw_GBps"] >= entry["nccl_algbw_GBps"] * 0.98
     assert entry["converged"]
+
+
+@pytest.mark.parametrize("root", [0, 1, 3])
+def test_broadcast_any_root(root):
+    mesh = mesh2d()
+    comm = FlexCommunicator("x", 4, CommConfig(profile="h800"))
+    x = (jnp.arange(4 * 3 * 2, dtype=jnp.float32).reshape(4 * 3, 2)
+         * 0.5 - 1.0)
+
+    f = shard_map(lambda xs: comm.broadcast(xs, root=root), mesh=mesh,
+                  in_specs=(P("x"),), out_specs=P("x"), check_vma=False)
+    got = np.asarray(jax.jit(f)(x)).reshape(4, 3, 2)
+    want = np.tile(np.asarray(x).reshape(4, 3, 2)[root], (4, 1, 1))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_broadcast_preserves_dtype_and_shape():
+    mesh = mesh2d()
+    comm = FlexCommunicator("x", 4, CommConfig(profile="h800"))
+    x = jnp.arange(4 * 2, dtype=jnp.int32).reshape(4 * 2)
+    f = shard_map(lambda xs: comm.broadcast(xs, root=1), mesh=mesh,
+                  in_specs=(P("x"),), out_specs=P("x"), check_vma=False)
+    out = jax.jit(f)(x)
+    assert out.dtype == x.dtype and out.shape == x.shape
+
+
+def test_observe_executed_step_replays_issued_calls():
+    """The host-side Stage-2 hook replays traced calls into the balancer and
+    reports whether any share moved (-> caller re-traces)."""
+    comm = FlexCommunicator("x", 8, CommConfig(profile="h800"))
+    x = jnp.zeros((512, 512), jnp.float32)
+    comm.plan_for(Collective.ALL_GATHER, x)
+    assert comm.issued_calls()
+    changed = False
+    for _ in range(40):                     # enough windows to trigger moves
+        changed |= comm.observe_executed_step()
+    assert isinstance(changed, bool)
+    comm.reset_issued()
+    assert not comm.issued_calls()
