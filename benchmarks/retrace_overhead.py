@@ -1,0 +1,160 @@
+"""Retrace-overhead harness: how much re-jit time the plan-keyed
+executable cache avoids under a forced Stage-2 oscillation (DESIGN.md §7).
+
+A small train StepProgram runs on a (2 data x 4 model) CPU mesh while the
+harness toggles every communicator's balancer between two quantized share
+splits after each tick — the worst-case Stage-2 oscillation.  Two runs:
+
+* ``cached``   — executable-cache capacity 8: after the two plans are
+  traced once each, every later tick is a cache hit;
+* ``uncached`` — capacity 1 as the control: each flip evicts the other
+  plan's executable, so every tick pays the full re-trace + compile,
+  which is exactly what every host loop paid before the StepProgram
+  runtime existed.
+
+The difference of the steady-state tick times is the re-jit cost one
+oscillation return used to pay; the harness emits ``BENCH_retrace.json``
+so CI accumulates the trajectory (non-gating).
+
+Run:  PYTHONPATH=src python -m benchmarks.retrace_overhead \
+          --flips 6 --out BENCH_retrace.json
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import statistics        # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.communicator import CommConfig, comm_destroy_all  # noqa: E402
+from repro.data.pipeline import make_batches                      # noqa: E402
+from repro.launch import shapes as SH                             # noqa: E402
+from repro.launch.mesh import make_mesh                           # noqa: E402
+from repro.launch.steps import build_train_program                # noqa: E402
+from repro.models.config import ArchConfig                        # noqa: E402
+from repro.models.transformer import init_params                  # noqa: E402
+from repro.optim.adamw import AdamWConfig, init_state             # noqa: E402
+
+FLIP_UNITS = 20   # grid units moved per flip — well past one 16-chunk unit,
+                  # so the quantized split (and the plan signature) changes
+
+
+class Flipper:
+    """Toggle every balancer between its Stage-1 split (A) and a split with
+    FLIP_UNITS grid units moved from its largest-share path to its
+    smallest (B) — a deterministic stand-in for Stage-2 oscillation.  The
+    (src, dst) pairs are captured on the first forward flip and reversed
+    exactly, so the toggle is an involution for ANY Stage-1 split (shares
+    sum to the 100-unit grid over <=3 paths, so the largest is always
+    >= 34 >= FLIP_UNITS)."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.at_b = False
+        self._moves = None   # [(balancer, src, dst)], fixed on first flip
+
+    def toggle(self) -> None:
+        if self._moves is None:
+            self._moves = []
+            for comm in self.ctx.comms():
+                for bal in comm._balancers.values():
+                    order = sorted(bal.shares, key=bal.shares.get)
+                    self._moves.append((bal, order[-1], order[0]))
+        sign = 1 if not self.at_b else -1
+        for bal, src, dst in self._moves:
+            bal.shares[src] -= sign * FLIP_UNITS
+            bal.shares[dst] += sign * FLIP_UNITS
+            assert all(s >= 0 for s in bal.shares.values()), bal.shares
+        self.at_b = not self.at_b
+
+
+def _mini_cfg() -> ArchConfig:
+    return ArchConfig("lm-mini", "dense", n_layers=4, d_model=256,
+                      n_heads=8, n_kv_heads=4, d_ff=1024, vocab=2048,
+                      param_dtype="float32")
+
+
+def run_oscillation(capacity: int, flips: int) -> dict:
+    """One forced-oscillation run; returns per-tick wall times + stats."""
+    comm_destroy_all()
+    cfg = _mini_cfg()
+    mesh = make_mesh((2, 4), ("data", "model"))
+    shape = SH.InputShape("bench", "train", 64, 8)
+    # runtime_balancing=False: the harness drives the share moves itself,
+    # so the real balancer must not add non-deterministic moves on top.
+    comm = CommConfig(backend="flexlink", profile="h800",
+                      runtime_balancing=False)
+    program, ctx = build_train_program(
+        cfg, mesh, comm=comm,
+        opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=flips + 1),
+        shape=shape, name=f"bench-cap{capacity}")
+    program.cache.capacity = capacity
+    batches = make_batches(cfg, seq_len=64, batch_per_shard=8)
+    flipper = Flipper(ctx)
+    times = []
+    with mesh:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = init_state(params)
+        for _ in range(flips + 1):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            t0 = time.perf_counter()
+            params, opt_state, m = program(params, opt_state, batch)
+            float(m["loss"])                       # force host sync
+            times.append(time.perf_counter() - t0)
+            flipper.toggle()                       # next tick: other plan
+    return {"capacity": capacity, "tick_s": [round(t, 4) for t in times],
+            "exec_cache": program.cache.report()}
+
+
+def run(flips: int = 6) -> dict:
+    cached = run_oscillation(capacity=8, flips=flips)
+    uncached = run_oscillation(capacity=1, flips=flips)
+    # ticks 0 and 1 trace the two plans in BOTH runs; steady state starts
+    # at tick 2, where cached hits and uncached re-traces.
+    steady_hit = statistics.median(cached["tick_s"][2:])
+    steady_rejit = statistics.median(uncached["tick_s"][2:])
+    per_return = max(steady_rejit - steady_hit, 0.0)
+    rec = {
+        "bench": "retrace_overhead",
+        "mesh": "2x4", "arch": "lm-mini", "flips": flips,
+        "cached": cached,
+        "uncached": uncached,
+        "steady_tick_s_cached": round(steady_hit, 4),
+        "steady_tick_s_uncached": round(steady_rejit, 4),
+        "retrace_s_avoided_per_return": round(per_return, 4),
+        "retrace_s_avoided_total": round(per_return * (flips - 1), 4),
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--flips", type=int, default=6,
+                    help="forced share oscillations (ticks = flips + 1)")
+    ap.add_argument("--out", default="BENCH_retrace.json")
+    args = ap.parse_args(argv)
+    rec = run(flips=args.flips)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+    cache_rep = rec["cached"]["exec_cache"]
+    print(f"cached:   {cache_rep['rebuilds']} rebuilds, "
+          f"{cache_rep['hits']} hits, steady tick "
+          f"{rec['steady_tick_s_cached']}s")
+    unc_rep = rec["uncached"]["exec_cache"]
+    print(f"uncached: {unc_rep['rebuilds']} rebuilds, "
+          f"{unc_rep['evictions']} evictions, steady tick "
+          f"{rec['steady_tick_s_uncached']}s")
+    print(f"re-jit time avoided: {rec['retrace_s_avoided_per_return']}s "
+          f"per oscillation return "
+          f"({rec['retrace_s_avoided_total']}s over {args.flips} flips) "
+          f"-> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,6 +21,12 @@ onto the plan grain and plans are memoized in an explicit
 :class:`~repro.core.routing.PlanCache` keyed by ``(op, bucket, shares)``,
 whose hit/miss/re-trace counters ``report()`` surfaces — Stage 2 moves one
 unit at a time, so the cache stays tiny (DESIGN.md §2).
+
+Two hooks serve the StepProgram runtime (DESIGN.md §7): per-program
+:class:`ReplayRecorder`\\ s keep interleaved step functions' Stage-2 replay
+logs disjoint on one memoized communicator, and ``plan_signature()``
+freezes the current quantized plans into the executable-cache key that
+lets an oscillation back to a known plan reuse its compiled step.
 """
 
 from __future__ import annotations
@@ -61,18 +67,90 @@ def bucket_for(nbytes: int) -> int:
     return SIZE_BUCKETS[-1]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class CommConfig:
+    """Frozen: ``dataclasses.astuple`` of this config is part of the
+    ``comm_init_rank`` memo key, so post-init mutation would silently alias
+    (or split) communicators.  Build a new config instead of mutating."""
+
     backend: str = "flexlink"          # "flexlink" | "nccl"
     profile: str = "tpu_v5e"
     runtime_balancing: bool = True
     measurement_noise: float = 0.0     # simulator noise for the balancer loop
     seed: int = 0
-    #: registry-isolation tag: part of the comm_init_rank memo key.  Tools
-    #: that TRACE steps without executing them (dry-run, shape probes) must
-    #: set a distinct tag so their traced calls don't pollute a live
-    #: workload's Stage-2 replay log on the same axis/config.
+    #: registry-isolation tag: part of the comm_init_rank memo key.  Live
+    #: workloads no longer need it — per-program ReplayRecorders keep their
+    #: Stage-2 replay logs disjoint on a shared communicator — but tools
+    #: that must not share BALANCER state either (dry-run, shape probes)
+    #: still set a distinct tag to get their own registry entry.
     tag: str = ""
+
+
+class ReplayRecorder:
+    """Two-phase issued-call log for ONE step program.
+
+    ``record`` collects the (op, nbytes) of every ``plan_for`` during
+    tracing; the first observed step after a trace PROMOTES the pending
+    list to the replay log (replacing the previous one).  This keeps true
+    per-step multiplicity (a 48-layer step replays 48 calls — the paper's
+    "last 10 collective calls" window is per call, not per step) while
+    re-traces after a Stage-2 share move replace the log instead of
+    double-counting into it.  One recorder per step program: interleaved
+    programs on a shared communicator each keep their own multiset.
+    """
+
+    __slots__ = ("_pending", "_trace_log", "touched")
+
+    def __init__(self):
+        self._pending: list = []
+        self._trace_log: list = []
+        #: every (op, bucket) slot this program's traces ever resolved —
+        #: its plan *footprint*.  The executable-cache signature is
+        #: restricted to these slots, so another program tuning or moving
+        #: a slot this one never touches cannot spuriously re-key it.
+        self.touched: set = set()
+
+    def record(self, op: Collective, nbytes: int) -> None:
+        self._pending.append((op, nbytes))
+
+    def touch(self, op: Collective, bucket: int) -> None:
+        self.touched.add((op, bucket))
+
+    def issued_calls(self) -> list:
+        """The replay multiset for one executed step: the calls traced
+        since the last observed step if any (a fresh trace), else the last
+        promoted trace."""
+        return list(self._pending) if self._pending else list(self._trace_log)
+
+    def promote(self) -> None:
+        if self._pending:
+            self._trace_log = list(self._pending)
+            self._pending.clear()
+
+    def reset(self) -> None:
+        self._pending.clear()
+        self._trace_log.clear()
+        self.touched.clear()
+
+
+class _ActiveRecorder:
+    """Re-entrant-safe scope: route ``plan_for`` records to one recorder."""
+
+    __slots__ = ("_comm", "_rec", "_prev")
+
+    def __init__(self, comm: "FlexCommunicator", rec: ReplayRecorder):
+        self._comm = comm
+        self._rec = rec
+        self._prev: Optional[ReplayRecorder] = None
+
+    def __enter__(self):
+        self._prev = self._comm._active_recorder
+        self._comm._active_recorder = self._rec
+        return self._rec
+
+    def __exit__(self, *exc):
+        self._comm._active_recorder = self._prev
+        return False
 
 
 class FlexCommunicator:
@@ -95,42 +173,62 @@ class FlexCommunicator:
         #: with hit/miss/re-trace stats — the jit-variant cache of
         #: DESIGN.md §2.
         self.plan_cache = PlanCache()
-        #: two-phase issued-call replay log.  ``_pending`` collects the
-        #: (op, nbytes) of every plan_for during tracing; the first executed
-        #: step after a trace PROMOTES it to ``_trace_log`` (replacing the
-        #: previous one).  This keeps true per-step multiplicity (a 48-layer
-        #: step replays 48 calls — the paper's "last 10 collective calls"
-        #: window is per call, not per step) while re-traces after a Stage-2
-        #: share move replace the log instead of double-counting into it.
-        #: KNOWN LIMIT: two DIFFERENT step functions sharing this memoized
-        #: communicator overwrite each other's log on interleaved traces —
-        #: give concurrent workloads distinct ``CommConfig.tag``s, or see
-        #: the per-step recorder item in ROADMAP.md.
-        self._pending: list = []
-        self._trace_log: list = []
+        #: per-program replay recorders (DESIGN.md §7).  Each StepProgram
+        #: registers its own ReplayRecorder, so interleaved train / serve /
+        #: dry-run programs sharing this memoized communicator keep
+        #: disjoint replay multisets.  The default recorder catches direct
+        #: (program-less) use of the data plane — the pre-runtime behavior.
+        self._recorders: Dict[str, ReplayRecorder] = {}
+        self._default_recorder = ReplayRecorder()
+        self._active_recorder = self._default_recorder
+
+    # -- replay recorders ------------------------------------------------------
+
+    def register_recorder(self, name: str) -> ReplayRecorder:
+        """Create (or return) the replay recorder for one step program.
+        Idempotent: communicators are memoized across ctx rebuilds, so a
+        re-registered program keeps its log."""
+        return self._recorders.setdefault(name, ReplayRecorder())
+
+    def recorder(self, name: str) -> ReplayRecorder:
+        return self._recorders[name]
+
+    def unregister_recorder(self, name: str) -> None:
+        rec = self._recorders.pop(name, None)
+        if rec is not None and rec is self._active_recorder:
+            self._active_recorder = self._default_recorder
+
+    def recording(self, rec: ReplayRecorder):
+        """Context manager routing every ``plan_for`` traced inside it to
+        ``rec`` — a StepProgram wraps each executable call in this so its
+        traces land in its own recorder."""
+        return _ActiveRecorder(self, rec)
 
     def issued_calls(self):
-        """The replay multiset for one executed step: the calls traced since
-        the last executed step if any (a fresh trace), else the last
-        promoted trace."""
-        return list(self._pending) if self._pending else list(self._trace_log)
+        """Default-recorder replay multiset (direct, program-less use)."""
+        return self._default_recorder.issued_calls()
 
     def reset_issued(self) -> None:
-        self._pending.clear()
-        self._trace_log.clear()
+        """Clear EVERY replay log — the default recorder and all registered
+        program recorders.  Explicit-isolation tool only (tests, retiring a
+        workload)."""
+        self._default_recorder.reset()
+        for rec in self._recorders.values():
+            rec.reset()
 
-    def observe_executed_step(self) -> bool:
+    def observe_executed_step(
+            self, recorder: Optional[ReplayRecorder] = None) -> bool:
         """Host-side Stage-2 hook: record one executed step's collectives.
 
-        Returns True when the balancer changed any share (the caller should
-        re-trace with the new plan — a quantized-plan change registers in
-        the plan cache as a re-trace, DESIGN.md §2).
+        Replays ``recorder`` (default: the program-less default recorder)
+        into the balancers.  Returns True when any share moved — the
+        caller's next plan lookup registers as a re-trace in the plan cache
+        and flips the executable-cache signature (DESIGN.md §2, §7).
         """
-        if self._pending:
-            self._trace_log = list(self._pending)
-            self._pending.clear()
+        rec = recorder if recorder is not None else self._default_recorder
+        rec.promote()
         before = {k: dict(b.shares) for k, b in self._balancers.items()}
-        for op, nbytes in self._trace_log:
+        for op, nbytes in rec.issued_calls():
             self.record_call(op, nbytes)
         after = {k: dict(b.shares) for k, b in self._balancers.items()}
         return before != after
@@ -213,30 +311,67 @@ class FlexCommunicator:
         return max(routing.DEFAULT_STAGED_SUBSTEPS,
                    min(n_chunks, routing.MAX_STAGED_SUBSTEPS))
 
-    def plan_for(self, op: Collective, x: jax.Array) -> RoutePlan:
-        """Memoized RoutePlan for one call (trace-time; Stage-2 observation
-        happens host-side via ``observe_executed_step``)."""
-        nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
-        bucket = bucket_for(nbytes)
+    def _bucket_plan(self, op: Collective, bucket: int) -> RoutePlan:
+        """Current quantized plan for one (op, bucket) slot, resolved
+        through the PlanCache (so a Stage-2 share move registers as a
+        re-trace on the slot).  Pure host arithmetic — no replay-log
+        side effects."""
         if self.config.backend == "nccl" or self.n_ranks <= 1:
-            # no Stage-2 loop in baseline/degenerate mode: don't grow the
-            # replay log
             return self.plan_cache.lookup(
                 op, bucket,
                 lambda: routing.build_plan(op, self.axis_name, None,
                                            self.ortho_name))
-        if self.config.runtime_balancing:
-            # the replay log only feeds Stage 2 — don't grow it on
-            # communicators whose host loop never drains it
-            self._pending.append((op, nbytes))
 
         def build() -> RoutePlan:
-            shares = self.shares_for(op, nbytes)
+            shares = self.shares_for(op, bucket)
             return routing.build_plan(
                 op, self.axis_name, shares, self.ortho_name,
                 staged_substeps=self.staged_substeps_for(op, bucket, shares))
 
         return self.plan_cache.lookup(op, bucket, build)
+
+    def plan_for(self, op: Collective, x: jax.Array) -> RoutePlan:
+        """Memoized RoutePlan for one call (trace-time; Stage-2 observation
+        happens host-side via ``observe_executed_step``)."""
+        nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
+        bucket = bucket_for(nbytes)
+        # footprint tracking is unconditional (even nccl / balancing-off):
+        # the executable-cache signature needs to know which slots this
+        # program's step closes over
+        self._active_recorder.touch(op, bucket)
+        if (self.config.backend != "nccl" and self.n_ranks > 1
+                and self.config.runtime_balancing):
+            # the replay log only feeds Stage 2 — don't grow it on
+            # communicators whose host loop never drains it (baseline /
+            # degenerate / balancing-off modes)
+            self._active_recorder.record(op, nbytes)
+        return self._bucket_plan(op, bucket)
+
+    def plan_signature(self, touched: Optional[set] = None) -> Tuple:
+        """Frozen identity of the tuned slots' CURRENT quantized plans —
+        the executable-cache key half owned by this communicator.
+
+        ``touched`` (a set of (op, bucket), normally a program recorder's
+        footprint) restricts the signature to the slots one program's step
+        actually closes over, so a sibling program tuning or oscillating
+        a slot this one never uses cannot spuriously re-key it; ``None``
+        signs over every tuned slot.
+
+        Each slot is refreshed through the PlanCache first, so a Stage-2
+        move that changed the quantized split is recorded as hit/retrace
+        on the slot BEFORE the snapshot (``PlanCache.plan_signature``) is
+        taken — an executable-cache hit on a previously-seen signature
+        therefore still shows up in plan-cache stats as the paper's
+        "return to a known plan" event.
+        """
+        slots = sorted(self._tuned, key=lambda k: (k[0].value, k[1]))
+        if touched is not None:
+            slots = [k for k in slots if k in touched]
+        for op, bucket in slots:
+            self._bucket_plan(op, bucket)
+        want = {(op.value, bucket) for op, bucket in slots}
+        return tuple(r for r in self.plan_cache.plan_signature()
+                     if (r[0], r[1]) in want)
 
     # -- data plane (NCCL-shaped; call inside shard_map) ----------------------
 
@@ -283,6 +418,10 @@ class FlexCommunicator:
                     op, self.n_ranks, bucket),
             }
         out["plan_cache"] = self.plan_cache.report()
+        if self._recorders:
+            out["programs"] = {
+                name: {"replay_len": len(rec.issued_calls())}
+                for name, rec in sorted(self._recorders.items())}
         return out
 
 

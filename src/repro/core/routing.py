@@ -447,6 +447,18 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._plans)
 
+    def plan_signature(self) -> Tuple:
+        """Frozen snapshot of the slot→plan mapping: what every ``(op,
+        bucket)`` slot LAST resolved to, in a canonical order.  This is the
+        raw half of the executable-cache key (runtime/exec_cache.py); the
+        communicator's ``plan_signature()`` refreshes each slot through
+        :meth:`lookup` first so Stage-2 moves register as hit/retrace
+        before the snapshot is taken.
+        """
+        rows = [(op.value, bucket, key[2])
+                for (op, bucket), key in self._slot.items()]
+        return tuple(sorted(rows, key=lambda r: (r[0], r[1])))
+
     def lookup(self, collective: Collective, bucket: int,
                builder: Callable[[], RoutePlan]) -> RoutePlan:
         plan = builder()

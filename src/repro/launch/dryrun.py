@@ -17,8 +17,8 @@ from repro.configs import ALIASES, ARCH_IDS, get_config       # noqa: E402
 from repro.core.communicator import CommConfig                # noqa: E402
 from repro.launch import shapes as SH                         # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_dims  # noqa: E402
-from repro.launch.steps import (build_prefill_step, build_serve_step,
-                                build_train_step, eval_shape_opt_state,
+from repro.launch.steps import (build_prefill_program, build_serve_program,
+                                build_train_program, eval_shape_opt_state,
                                 eval_shape_params)             # noqa: E402
 
 """Multi-pod dry-run driver.
@@ -67,23 +67,37 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     params_sds = eval_shape_params(cfg)
     batch_sds = _sds_batch(cfg, shape, mesh)
 
-    with mesh:
-        if shape.kind == "train":
-            step, ctx = build_train_step(cfg, mesh, comm=comm, shape=shape,
-                                         remat=remat)
-            opt_sds = eval_shape_opt_state(params_sds)
-            lowered = step.lower(params_sds, opt_sds, batch_sds)
-        elif shape.kind == "prefill":
-            step, ctx = build_prefill_step(cfg, mesh, comm=comm, shape=shape)
-            lowered = step.lower(params_sds, batch_sds)
-        else:
-            step, ctx, dcfg = build_serve_step(cfg, mesh, shape, comm=comm)
-            lowered = step.lower(params_sds, batch_sds["cache"],
-                                 batch_sds["token"], batch_sds["pos"])
-        t_lower = time.time() - t0
-        hlo_text = lowered.as_text()
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+    prog = None
+    try:
+        with mesh:
+            # StepPrograms here too: the dry-run lowers through the exact
+            # same builder (and replay-recorder scope) the live loops
+            # execute, so the lowered HLO is byte-for-byte what
+            # training/serving runs.
+            if shape.kind == "train":
+                prog, ctx = build_train_program(cfg, mesh, comm=comm,
+                                                shape=shape, remat=remat)
+                opt_sds = eval_shape_opt_state(params_sds)
+                lowered = prog.lower(params_sds, opt_sds, batch_sds)
+            elif shape.kind == "prefill":
+                prog, ctx = build_prefill_program(cfg, mesh, comm=comm,
+                                                  shape=shape)
+                lowered = prog.lower(params_sds, batch_sds)
+            else:
+                prog, ctx, dcfg = build_serve_program(cfg, mesh, shape,
+                                                      comm=comm)
+                lowered = prog.lower(params_sds, batch_sds["cache"],
+                                     batch_sds["token"], batch_sds["pos"])
+            t_lower = time.time() - t0
+            hlo_text = lowered.as_text()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    finally:
+        # retire the probe program even on failure: a --all sweep builds
+        # one per (arch, shape, mesh) against memoized communicators and
+        # main() catches per-pair exceptions
+        if prog is not None:
+            prog.close()
 
     cost = compiled.cost_analysis() or {}
     # older JAX returns a one-element list of dicts (one per computation)

@@ -49,6 +49,9 @@ def main(argv=None) -> int:
     total_toks = sum(len(v) for v in fin.values())
     print(f"served {len(fin)} requests, {total_toks} tokens "
           f"in {dt:.1f}s ({total_toks / dt:.1f} tok/s)")
+    ec = engine.comm_report()["executable_cache"]
+    print(f"decode executable cache: {ec['rebuilds']} rebuilds, "
+          f"{ec['hits']} hits, {ec['evictions']} evictions")
     for rid in sorted(fin)[:4]:
         print(f"  req {rid}: {fin[rid][:10]}")
     assert len(fin) == args.requests

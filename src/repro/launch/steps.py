@@ -8,6 +8,15 @@ memoized per (axis, config) by ``comm_init_rank``, so rebuilding a step
 after a Stage-2 share move re-traces against the SAME balancer state — only
 the RoutePlans change (a plan-cache re-trace, visible in
 ``ctx.comm_report()``).
+
+Two tiers per step kind:
+
+* ``build_*_step``    — one jitted callable + ctx (tests, single traces);
+* ``build_*_program`` — a :class:`~repro.runtime.program.StepProgram`
+  wrapping the SAME builder: the plan-keyed executable cache plus a
+  per-program Stage-2 replay recorder (DESIGN.md §7).  The launchers and
+  the dry-run all go through programs, so what the dry-run lowers is
+  byte-for-byte what the live loops execute.
 """
 
 from __future__ import annotations
@@ -29,6 +38,7 @@ from repro.models.tp import ParallelCtx
 from repro.models.transformer import (decode_step, forward, lm_logits_local,
                                       lm_loss, param_specs)
 from repro.optim.adamw import AdamWConfig, AdamWState
+from repro.runtime.program import StepProgram
 from repro.train.train_step import make_train_step
 
 
@@ -51,26 +61,81 @@ def _batch_specs(cfg: ArchConfig, shape: SH.InputShape, mesh) -> Dict:
     return SH.input_partition_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
 
 
-def build_train_step(cfg: ArchConfig, mesh: Mesh, *,
-                     comm: Optional[CommConfig] = None,
-                     opt: Optional[AdamWConfig] = None,
-                     shape: Optional[SH.InputShape] = None,
-                     remat: bool = True):
-    """jit(shard_map(train_step)) with full param/opt/batch shardings."""
+def _train_builder(cfg: ArchConfig, mesh: Mesh, *,
+                   comm: Optional[CommConfig],
+                   opt: Optional[AdamWConfig],
+                   shape: Optional[SH.InputShape],
+                   remat: bool):
     ctx = make_ctx(mesh, comm)
     opt = opt or AdamWConfig()
     shape = shape or SH.SHAPES["train_4k"]
     psp = param_specs(cfg)
     osp = opt_state_specs(psp)
     bsp = _batch_specs(cfg, shape, mesh)
-    step = make_train_step(cfg, ctx, opt, remat=remat)
-    sharded = shard_map(step, mesh=mesh,
-                        in_specs=(psp, osp, bsp),
-                        out_specs=(psp, osp, P()),
-                        check_vma=False)
-    # donate params + optimizer state: they are consumed and re-emitted
-    # every step — aliasing halves the peak parameter memory.
-    return jax.jit(sharded, donate_argnums=(0, 1)), ctx
+
+    def builder():
+        # a FRESH closure + jit per build: jax.jit memoizes per function
+        # identity, so re-jitting a stale function object would silently
+        # reuse the pre-share-move trace.
+        step = make_train_step(cfg, ctx, opt, remat=remat)
+        sharded = shard_map(step, mesh=mesh,
+                            in_specs=(psp, osp, bsp),
+                            out_specs=(psp, osp, P()),
+                            check_vma=False)
+        # donate params + optimizer state: they are consumed and re-emitted
+        # every step — aliasing halves the peak parameter memory.
+        return jax.jit(sharded, donate_argnums=(0, 1))
+
+    return builder, ctx
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, *,
+                     comm: Optional[CommConfig] = None,
+                     opt: Optional[AdamWConfig] = None,
+                     shape: Optional[SH.InputShape] = None,
+                     remat: bool = True):
+    """jit(shard_map(train_step)) with full param/opt/batch shardings."""
+    builder, ctx = _train_builder(cfg, mesh, comm=comm, opt=opt,
+                                  shape=shape, remat=remat)
+    return builder(), ctx
+
+
+def build_train_program(cfg: ArchConfig, mesh: Mesh, *,
+                        comm: Optional[CommConfig] = None,
+                        opt: Optional[AdamWConfig] = None,
+                        shape: Optional[SH.InputShape] = None,
+                        remat: bool = True,
+                        name: str = ""):
+    """The train step as a StepProgram: plan-keyed executable cache +
+    isolated Stage-2 replay recorder."""
+    builder, ctx = _train_builder(cfg, mesh, comm=comm, opt=opt,
+                                  shape=shape, remat=remat)
+    return StepProgram(builder, ctx, name=name), ctx
+
+
+def _prefill_builder(cfg: ArchConfig, mesh: Mesh, *,
+                     comm: Optional[CommConfig],
+                     shape: Optional[SH.InputShape],
+                     remat: bool):
+    ctx = make_ctx(mesh, comm)
+    shape = shape or SH.SHAPES["prefill_32k"]
+    psp = param_specs(cfg)
+    bsp = _batch_specs(cfg, shape, mesh)
+    pods, dp, tp = mesh_dims(mesh)
+    ba = SH.batch_axes(pods)
+
+    def builder():
+        def prefill(params, batch):
+            x, _ = forward(params, batch["tokens"], cfg, ctx,
+                           vis_embed=batch.get("vis_embed"),
+                           enc_embed=batch.get("enc_embed"), remat=remat)
+            return lm_logits_local(params, x[:, -1:], cfg, ctx)[:, 0]
+
+        sharded = shard_map(prefill, mesh=mesh, in_specs=(psp, bsp),
+                            out_specs=P(ba, "model"), check_vma=False)
+        return jax.jit(sharded)
+
+    return builder, ctx
 
 
 def build_prefill_step(cfg: ArchConfig, mesh: Mesh, *,
@@ -78,47 +143,60 @@ def build_prefill_step(cfg: ArchConfig, mesh: Mesh, *,
                        shape: Optional[SH.InputShape] = None,
                        remat: bool = True):
     """Forward-only prefill: returns last-position local-vocab logits."""
-    ctx = make_ctx(mesh, comm)
-    shape = shape or SH.SHAPES["prefill_32k"]
-    psp = param_specs(cfg)
-    bsp = _batch_specs(cfg, shape, mesh)
-
-    def prefill(params, batch):
-        x, _ = forward(params, batch["tokens"], cfg, ctx,
-                       vis_embed=batch.get("vis_embed"),
-                       enc_embed=batch.get("enc_embed"), remat=remat)
-        return lm_logits_local(params, x[:, -1:], cfg, ctx)[:, 0]
-
-    pods, dp, tp = mesh_dims(mesh)
-    ba = SH.batch_axes(pods)
-    sharded = shard_map(prefill, mesh=mesh, in_specs=(psp, bsp),
-                        out_specs=P(ba, "model"), check_vma=False)
-    return jax.jit(sharded), ctx
+    builder, ctx = _prefill_builder(cfg, mesh, comm=comm, shape=shape,
+                                    remat=remat)
+    return builder(), ctx
 
 
-def build_serve_step(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
-                     comm: Optional[CommConfig] = None):
-    """One-token decode with a seq_len KV cache (decode_32k / long_500k)."""
+def build_prefill_program(cfg: ArchConfig, mesh: Mesh, *,
+                          comm: Optional[CommConfig] = None,
+                          shape: Optional[SH.InputShape] = None,
+                          remat: bool = True,
+                          name: str = ""):
+    builder, ctx = _prefill_builder(cfg, mesh, comm=comm, shape=shape,
+                                    remat=remat)
+    return StepProgram(builder, ctx, name=name), ctx
+
+
+def _serve_builder(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
+                   comm: Optional[CommConfig]):
     ctx = make_ctx(mesh, comm)
     pods, dp, tp = mesh_dims(mesh)
     dcfg = SH.decode_config(cfg, shape, tp=tp, dp=dp)
     psp = param_specs(cfg)
     isp = SH.input_partition_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
-
-    def serve(params, cache, token, pos):
-        logits_l, cache = decode_step(params, cache, token, pos, cfg, ctx,
-                                      dcfg)
-        return logits_l, cache
-
     tok_b = isp["token"][0]
     out_logits = P(tok_b, "model")      # [B, V_local] — vocab stays sharded
-    sharded = shard_map(serve, mesh=mesh,
-                        in_specs=(psp, isp["cache"], isp["token"],
-                                  isp["pos"]),
-                        out_specs=(out_logits, isp["cache"]),
-                        check_vma=False)
-    # donate the KV cache: it is updated in place every decode step.
-    return jax.jit(sharded, donate_argnums=(1,)), ctx, dcfg
+
+    def builder():
+        def serve(params, cache, token, pos):
+            logits_l, cache = decode_step(params, cache, token, pos, cfg,
+                                          ctx, dcfg)
+            return logits_l, cache
+
+        sharded = shard_map(serve, mesh=mesh,
+                            in_specs=(psp, isp["cache"], isp["token"],
+                                      isp["pos"]),
+                            out_specs=(out_logits, isp["cache"]),
+                            check_vma=False)
+        # donate the KV cache: it is updated in place every decode step.
+        return jax.jit(sharded, donate_argnums=(1,))
+
+    return builder, ctx, dcfg
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
+                     comm: Optional[CommConfig] = None):
+    """One-token decode with a seq_len KV cache (decode_32k / long_500k)."""
+    builder, ctx, dcfg = _serve_builder(cfg, mesh, shape, comm=comm)
+    return builder(), ctx, dcfg
+
+
+def build_serve_program(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
+                        comm: Optional[CommConfig] = None,
+                        name: str = ""):
+    builder, ctx, dcfg = _serve_builder(cfg, mesh, shape, comm=comm)
+    return StepProgram(builder, ctx, name=name), ctx, dcfg
 
 
 def eval_shape_params(cfg: ArchConfig):

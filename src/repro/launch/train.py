@@ -22,7 +22,7 @@ from repro.core.communicator import CommConfig
 from repro.data.pipeline import make_batches
 from repro.launch import shapes as SH
 from repro.launch.mesh import make_mesh, make_production_mesh, mesh_dims
-from repro.launch.steps import build_train_step
+from repro.launch.steps import build_train_program
 from repro.models.transformer import init_params
 from repro.optim.adamw import AdamWConfig, init_state
 from repro.train.loop import LoopConfig, run_loop
@@ -66,18 +66,20 @@ def main(argv=None) -> int:
         params = init_params(jax.random.PRNGKey(0), cfg)
         opt_state = init_state(params)
 
-        def builder():
-            step, _ = build_train_step(cfg, mesh, comm=comm, opt=opt,
-                                       shape=shape)
-            return step
-
-        _, ctx = build_train_step(cfg, mesh, comm=comm, opt=opt, shape=shape)
+        # StepProgram: plan-keyed executable cache + per-program Stage-2
+        # replay recorder — the loop never re-jits a plan it already
+        # compiled (DESIGN.md §7).
+        program, ctx = build_train_program(cfg, mesh, comm=comm, opt=opt,
+                                           shape=shape)
         batches = make_batches(cfg, seq_len=args.seq_len,
                                batch_per_shard=args.batch)
         loop = LoopConfig(total_steps=args.steps, log_every=5,
                           ckpt_dir=args.ckpt_dir or None)
-        params, opt_state, hist = run_loop(builder, params, opt_state,
-                                           batches, ctx, loop)
+        try:
+            params, opt_state, hist = run_loop(program, params, opt_state,
+                                               batches, ctx, loop)
+        finally:
+            program.close()     # retire the recorder on the memoized comms
     print(f"final loss: {hist[-1]:.4f} (from {hist[0]:.4f})")
     return 0
 

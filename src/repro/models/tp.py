@@ -16,6 +16,7 @@ function on an axis sees the same RoutePlan engine.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, Optional, Tuple
 
@@ -76,18 +77,66 @@ class ParallelCtx:
                      if c is not None)
 
     def observe_executed_step(self) -> bool:
-        """Host-side Stage-2 hook over every communicator.
+        """Host-side Stage-2 hook over every communicator's DEFAULT
+        recorder (direct, program-less use of the data plane).
 
         Returns True when any balancer moved a share — the caller should
         rebuild/re-trace its jitted step so the new RoutePlans take effect
         (the plan cache records the event as a re-trace).  A fresh trace
         REPLACES the replay log rather than appending to it, so re-traces
         don't double-count and no reset is needed between rebuilds.
+        StepProgram-driven loops use :meth:`observe_program` instead, which
+        replays one program's isolated recorder.
         """
         changed = False
         for comm in self.comms():
             changed |= comm.observe_executed_step()
         return changed
+
+    # -- StepProgram registration (runtime/program.py, DESIGN.md §7) ----------
+
+    def register_program(self, name: str) -> str:
+        """Register one per-program ReplayRecorder with every communicator
+        (idempotent — memoized comms keep a re-registered program's log)."""
+        for comm in self.comms():
+            comm.register_recorder(name)
+        return name
+
+    def unregister_program(self, name: str) -> None:
+        for comm in self.comms():
+            comm.unregister_recorder(name)
+
+    @contextlib.contextmanager
+    def recording(self, name: str):
+        """Scope every collective traced inside to ``name``'s recorders —
+        a StepProgram wraps each executable call (and dry-run lowering) in
+        this so interleaved programs keep disjoint replay logs."""
+        with contextlib.ExitStack() as stack:
+            for comm in self.comms():
+                stack.enter_context(comm.recording(comm.recorder(name)))
+            yield
+
+    def observe_program(self, name: str) -> bool:
+        """Stage-2 feedback from ONE program's replay logs; True when any
+        share moved (the program's next signature lookup re-keys)."""
+        changed = False
+        for comm in self.comms():
+            changed |= comm.observe_executed_step(comm.recorder(name))
+        return changed
+
+    def plan_signature(self, program: Optional[str] = None) -> Tuple:
+        """Frozen tuple of the communicators' current quantized plans —
+        the StepProgram executable-cache key.  With ``program`` set, each
+        communicator's half is restricted to the slots that program's
+        traces actually touched (its recorder footprint), so sibling
+        programs on shared communicators don't re-key each other.
+        Refreshing resolves each slot through the plan cache (hit/retrace
+        stats)."""
+        sigs = []
+        for c in self.comms():
+            touched = c.recorder(program).touched if program else None
+            sigs.append((c.axis_name, c.plan_signature(touched)))
+        return tuple(sigs)
 
     def reset_issued(self) -> None:
         """Clear every communicator's issued-call replay log.  Only for

@@ -1,0 +1,9 @@
+"""Host-side step runtime: plan-keyed executable cache + StepProgram
+lifecycle (DESIGN.md §7)."""
+
+from repro.runtime.exec_cache import (DEFAULT_CAPACITY, ExecCacheStats,
+                                      ExecutableCache)
+from repro.runtime.program import StepProgram, program_scope
+
+__all__ = ["DEFAULT_CAPACITY", "ExecCacheStats", "ExecutableCache",
+           "StepProgram", "program_scope"]

@@ -1,0 +1,148 @@
+"""StepProgram — the runtime that owns the trace→execute→observe→rebuild
+lifecycle of one jitted step function (DESIGN.md §7).
+
+Before this layer, every host loop hand-rolled the same protocol: call the
+step, feed the executed collectives to Stage 2 via
+``ctx.observe_executed_step()``, and re-jit from scratch whenever a share
+moved — even when the balancer oscillated back to a plan that was already
+compiled, and with all programs on one axis sharing (and corrupting) a
+single per-communicator replay log.  A StepProgram fixes both:
+
+* it registers a **per-program ReplayRecorder** with each of its ctx's
+  communicators and scopes every trace to it, so interleaved train / serve
+  / dry-run programs on one memoized communicator keep disjoint Stage-2
+  replay multisets (no ``CommConfig.tag`` needed for live workloads);
+* it fronts an **ExecutableCache** keyed by the frozen tuple of every
+  communicator's current quantized plans: a Stage-2 move to a
+  previously-seen signature reuses the compiled callable (an exec-cache
+  *hit*), while the plan cache still records the move as hit+retrace — the
+  two stat blocks together separate "plans changed" from "compilation
+  needed".
+
+Usage::
+
+    program = StepProgram(builder, ctx)        # builder: () -> jitted step
+    out = program(*args)                       # trace/compile on demand
+    program.observe()                          # Stage-2 feedback; a share
+                                               # move re-keys the NEXT call
+    # or equivalently:  out = program.step(*args)
+
+The builder must return a FRESH jit wrapper around a fresh closure each
+call (``jax.jit`` memoizes per function identity, so re-jitting the same
+function object would silently reuse the stale trace).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import itertools
+from typing import Any, Callable, Dict, Tuple
+
+from repro.runtime.exec_cache import DEFAULT_CAPACITY, ExecutableCache
+
+_PROGRAM_IDS = itertools.count()
+
+
+class StepProgram:
+    """One step function's runtime: executable cache + replay recorder.
+
+    ``ctx`` is any object with the ParallelCtx program API —
+    ``register_program`` / ``unregister_program`` / ``recording`` /
+    ``observe_program`` / ``plan_signature`` (``models/tp.py``).  A ctx
+    with no live communicators degrades gracefully: the signature is
+    constant, so exactly one executable is ever built.
+    """
+
+    def __init__(self, builder: Callable[[], Callable], ctx, *,
+                 name: str = "", capacity: int = DEFAULT_CAPACITY):
+        # auto-names are globally unique: two programs must never share a
+        # recorder unless the caller explicitly aliases them by name.
+        self.name = name or f"program-{next(_PROGRAM_IDS)}"
+        self.ctx = ctx
+        self._builder = builder
+        self.cache = ExecutableCache(capacity)
+        ctx.register_program(self.name)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def signature(self) -> Tuple:
+        """The executable-cache key: the current quantized plans of every
+        slot THIS program's traces touch (its recorder footprint) — a
+        sibling program tuning or oscillating a slot this step never
+        closes over must not re-key it.  Refreshing the signature resolves
+        each slot through the plan cache, so Stage-2 moves register there
+        as hit/retrace even when the executable itself is a cache hit."""
+        return self.ctx.plan_signature(self.name)
+
+    def __call__(self, *args, **kwargs):
+        """Run one step through the plan-keyed executable cache.
+
+        On a signature hit the cached callable runs with no trace; on a
+        miss a fresh step is built and traced under this program's
+        recorder, then installed under the POST-trace signature — the
+        first trace of a workload tunes Stage-1 buckets, so only the
+        post-trace signature names the plans the executable actually
+        closed over.
+        """
+        fn = self.cache.get(self.signature())
+        if fn is not None:
+            with self.ctx.recording(self.name):
+                return fn(*args, **kwargs)
+        fn = self._builder()
+        with self.ctx.recording(self.name):
+            out = fn(*args, **kwargs)
+        self.cache.put(self.signature(), fn)
+        return out
+
+    def observe(self) -> bool:
+        """Stage-2 feedback for one executed step: replay THIS program's
+        recorded collectives into the balancers.  Returns True when a
+        share moved — no manual rebuild is needed; the next ``__call__``
+        sees a new signature and rebuilds (or re-uses) automatically."""
+        return self.ctx.observe_program(self.name)
+
+    def step(self, *args, **kwargs):
+        """Execute + observe in one call — the common host-loop tick."""
+        out = self(*args, **kwargs)
+        self.observe()
+        return out
+
+    def lower(self, *args, **kwargs):
+        """Lower (trace without executing) a freshly built step — the
+        dry-run path.  Uses the same builder as a live call, so dry-run
+        lowers exactly what training/serving runs, but records into a
+        throwaway scratch recorder: a lowered step is never executed, so
+        its traced collectives must not land in the replay log a later
+        live call would feed to Stage 2.  The lowered object is not
+        cached (it is not an executable)."""
+        fn = self._builder()
+        scratch = self.ctx.register_program(f"{self.name}/lower")
+        try:
+            with self.ctx.recording(scratch):
+                return fn.lower(*args, **kwargs)
+        finally:
+            self.ctx.unregister_program(scratch)
+
+    def close(self) -> None:
+        """Retire the program: drop its recorders from the (memoized)
+        communicators and its compiled executables."""
+        self.ctx.unregister_program(self.name)
+        self.cache.clear()
+
+    # -- reporting -------------------------------------------------------------
+
+    def report(self) -> Dict[str, Any]:
+        return {"program": self.name,
+                "executable_cache": self.cache.report()}
+
+
+@contextlib.contextmanager
+def program_scope(builder: Callable[[], Callable], ctx, **kwargs):
+    """``with program_scope(builder, ctx) as prog:`` — a StepProgram that
+    unregisters its recorders on exit (for tools and tests that build
+    programs against long-lived memoized communicators)."""
+    prog = StepProgram(builder, ctx, **kwargs)
+    try:
+        yield prog
+    finally:
+        prog.close()

@@ -15,9 +15,14 @@ tokens do enter the state — the standard trade-off of batched SSM serving).
 
 The FlexLink RoutePlan engine sits under every decode collective (via the
 ctx's communicators): every executed fused step — prefill ticks included —
-replays its collectives into the Stage-2 balancer, and if a share moves the
-decode step is re-jitted so the next call traces against the new plans (a
-plan-cache re-trace — see ``comm_report``).
+replays its collectives into the Stage-2 balancer through the engine's
+:class:`~repro.runtime.program.StepProgram`.  A share move re-keys the next
+fused step onto the plan-keyed executable cache, so an oscillation back to
+a previously-compiled plan reuses the jitted callable (exec-cache hit)
+while the plan cache records the move as hit+retrace — both stat blocks
+surface in ``comm_report``.  The per-program replay recorder keeps this
+engine's Stage-2 feedback disjoint from any other program (a training
+loop, another engine) sharing the same memoized communicators.
 """
 
 from __future__ import annotations
@@ -32,6 +37,7 @@ import numpy as np
 from repro.models.config import ArchConfig
 from repro.models.tp import ParallelCtx
 from repro.models.transformer import (DecodeConfig, decode_step, init_cache)
+from repro.runtime.program import StepProgram
 
 
 @dataclasses.dataclass
@@ -67,16 +73,21 @@ class ServeEngine:
         self.rng = np.random.default_rng(seed)
         self._next_rid = 0
         self._finished: Dict[int, List[int]] = {}
-        self._decode = self._build_decode()
+        self._program = StepProgram(self._decode_builder, ctx)
 
-    def _build_decode(self):
+    def _decode_builder(self):
+        """A FRESH jit wrapper per build — jax.jit memoizes per function
+        identity, so the StepProgram's rebuilds must not alias traces."""
         return jax.jit(
             lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg,
                                              self.ctx, self.dcfg))
 
     def comm_report(self) -> Dict[str, object]:
-        """Per-axis FlexLink tuning + plan-cache stats for this engine."""
-        return self.ctx.comm_report()
+        """Per-axis FlexLink tuning + plan-cache stats for this engine,
+        plus its StepProgram's executable-cache stats."""
+        rep = dict(self.ctx.comm_report())
+        rep["executable_cache"] = self._program.cache.report()
+        return rep
 
     # -- client API -----------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 16,
@@ -91,14 +102,13 @@ class ServeEngine:
 
     # -- internals --------------------------------------------------------------
     def _fused_step(self, tokens: np.ndarray) -> np.ndarray:
-        logits, self.cache = self._decode(
+        # StepProgram tick: execute through the plan-keyed executable cache
+        # and replay this engine's collectives into Stage 2 (prefill ticks
+        # included — with long prompts they are most of the collective
+        # traffic).  A share move re-keys the next call; no manual re-jit.
+        logits, self.cache = self._program.step(
             self.p, self.cache, jnp.asarray(tokens[:, None]),
             jnp.asarray(self.pos))
-        # Stage-2 hook on EVERY executed fused step (prefill ticks included
-        # — with long prompts they are most of the collective traffic); a
-        # share move means new RoutePlans -> re-jit the step.
-        if self.ctx.observe_executed_step():
-            self._decode = self._build_decode()
         return np.asarray(logits)
 
     def _admit_wave(self) -> None:
@@ -179,3 +189,10 @@ class ServeEngine:
             if not self.queue and not any(self.active):
                 break
             self.tick()
+
+    def close(self) -> None:
+        """Retire the engine's StepProgram: drop its replay recorders from
+        the (memoized, process-global) communicators and its compiled
+        executables.  Call when discarding an engine in a process that
+        keeps serving through other engines on the same axes."""
+        self._program.close()

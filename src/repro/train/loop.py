@@ -1,19 +1,22 @@
-"""Host-side training loop: data feeding, metrics, checkpointing, and the
-Stage-2 FlexLink feedback hook (the host replays each executed step's
-collective calls into the balancer; if shares move, the step is re-jitted —
-the jit-variant cache of DESIGN.md §2)."""
+"""Host-side training loop: data feeding, metrics, checkpointing.
+
+The Stage-2 trace→execute→observe→rebuild lifecycle lives in the
+StepProgram runtime (runtime/program.py, DESIGN.md §7): each tick executes
+through the plan-keyed executable cache and feeds the executed step's
+collectives back to the balancers; a share move re-keys the next tick onto
+a cached executable (oscillation back to a known plan) or a fresh trace."""
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator, Optional, Union
 
-import jax
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.models.tp import ParallelCtx
+from repro.runtime.program import StepProgram
 
 
 @dataclasses.dataclass
@@ -24,34 +27,49 @@ class LoopConfig:
     ckpt_dir: Optional[str] = None
 
 
-def run_loop(step_fn_builder: Callable[[], Callable],
+def run_loop(step: Union[StepProgram, Callable[[], Callable]],
              params, opt_state,
              batches: Iterator[Dict[str, np.ndarray]],
              ctx: ParallelCtx, loop: LoopConfig,
              log: Callable[[str], None] = print):
-    """Drive training.  ``step_fn_builder`` returns a fresh (re-)jitted step
-    closing over the communicators' *current* shares; it is rebuilt whenever
-    Stage-2 rebalancing moves a share."""
+    """Drive training through a :class:`StepProgram`.
+
+    ``step`` is the program itself, or (legacy) a zero-arg builder
+    returning a fresh jitted step — wrapped into a program here so old
+    callers get the executable cache and replay isolation for free.
+    """
+    program = step if isinstance(step, StepProgram) \
+        else StepProgram(step, ctx)
+    owned = program is not step     # wrapped here -> retired here, so the
+    # memoized communicators don't accumulate one recorder per run_loop call
     ckpt = Checkpointer(loop.ckpt_dir) if loop.ckpt_dir else None
-    step_fn = step_fn_builder()
     history = []
     t0 = time.time()
-    for i in range(loop.total_steps):
-        batch = next(batches)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        # Stage-2 hook: feed executed-step timings to the balancers
-        if ctx.observe_executed_step():
-            step_fn = step_fn_builder()     # adopt the new share plan
-        loss = float(metrics["loss"])
-        history.append(loss)
-        if loop.log_every and (i % loop.log_every == 0
-                               or i == loop.total_steps - 1):
-            dt = time.time() - t0
-            log(f"step {i:5d}  loss {loss:.4f}  "
-                f"gnorm {float(metrics['grad_norm']):.3f}  "
-                f"lr {float(metrics['lr']):.2e}  {dt:.1f}s")
-        if ckpt and loop.ckpt_every and (i + 1) % loop.ckpt_every == 0:
-            ckpt.save(i + 1, params, opt_state)
-    if ckpt:
-        ckpt.save(loop.total_steps, params, opt_state)
+    try:
+        for i in range(loop.total_steps):
+            batch = next(batches)
+            # execute (plan-keyed executable cache) + Stage-2 feedback; a
+            # share move re-keys the next tick — no manual rebuild
+            params, opt_state, metrics = program.step(params, opt_state,
+                                                      batch)
+            loss = float(metrics["loss"])
+            history.append(loss)
+            if loop.log_every and (i % loop.log_every == 0
+                                   or i == loop.total_steps - 1):
+                dt = time.time() - t0
+                log(f"step {i:5d}  loss {loss:.4f}  "
+                    f"gnorm {float(metrics['grad_norm']):.3f}  "
+                    f"lr {float(metrics['lr']):.2e}  {dt:.1f}s")
+            if ckpt and loop.ckpt_every and (i + 1) % loop.ckpt_every == 0:
+                ckpt.save(i + 1, params, opt_state)
+        if ckpt:
+            ckpt.save(loop.total_steps, params, opt_state)
+        ec = program.cache.report()
+        if loop.log_every:
+            log(f"executable cache: {ec['rebuilds']} rebuilds, "
+                f"{ec['hits']} hits, {ec['evictions']} evictions over "
+                f"{loop.total_steps} steps")
+    finally:
+        if owned:
+            program.close()
     return params, opt_state, history
