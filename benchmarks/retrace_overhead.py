@@ -1,5 +1,7 @@
 """Retrace-overhead harness: how much re-jit time the plan-keyed
-executable cache avoids under a forced Stage-2 oscillation (DESIGN.md §7).
+executable cache avoids under a forced Stage-2 oscillation (DESIGN.md §7),
+plus a measured-feedback demonstration (DESIGN.md §8): a StepProgram loop
+whose Stage 2 runs on wall-clock step durations under forced path skew.
 
 A small train StepProgram runs on a (2 data x 4 model) CPU mesh while the
 harness toggles every communicator's balancer between two quantized share
@@ -111,9 +113,107 @@ def run_oscillation(capacity: int, flips: int) -> dict:
             "exec_cache": program.cache.report()}
 
 
-def run(flips: int = 6) -> dict:
+class SkewClock:
+    """Injectable StepProgram clock with forced per-path skew: every
+    (start, stop) sample pair advances by a duration computed from the
+    communicators' CURRENT share fractions, with ``slow_path`` slowed by
+    ``factor`` — wall-clock behavior the analytic simulator knows nothing
+    about, so any resulting share movement is measurement-driven."""
+
+    def __init__(self, ctx, slow_path: str, factor: float, base: float = 1e-3):
+        self.ctx = ctx
+        self.slow = slow_path
+        self.factor = factor
+        self.base = base
+        self.t = 0.0
+        self._ticks = 0
+
+    def _step_duration(self) -> float:
+        dur = 0.0
+        for comm in self.ctx.comms():
+            for sc in comm._slots.values():
+                dur += max((f * (self.factor if p == self.slow else 1.0)
+                            for p, f in sc.fractions().items() if f > 0),
+                           default=0.0)
+        return self.base * max(dur, 1e-6)
+
+    def __call__(self) -> float:
+        self._ticks += 1
+        if self._ticks % 2 == 0:        # closing a (start, stop) pair
+            self.t += self._step_duration()
+        return self.t
+
+
+def run_measured(steps: int = 30) -> dict:
+    """Measured-feedback loop: Stage 2 on wall-clock durations only.
+
+    The mini model's payloads land in latency-bound buckets where Stage 1
+    keeps everything on the primary, so each slot's balancer is forced to
+    a multi-path split first (fast window/period so the short bench run
+    sees adjustments); the SkewClock then makes the PRIMARY the truly
+    slow path — the opposite of what the simulator believes at this size
+    — and the trajectory shows Stage 2 draining it anyway."""
+    from repro.core.balancer import LoadBalancer
+    comm_destroy_all()
+    cfg = _mini_cfg()
+    mesh = make_mesh((2, 4), ("data", "model"))
+    shape = SH.InputShape("bench", "train", 64, 8)
+    comm = CommConfig(backend="flexlink", profile="h800", timing="measured")
+    program, ctx = build_train_program(
+        cfg, mesh, comm=comm,
+        opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps + 1),
+        shape=shape, name="bench-measured")
+    clock = SkewClock(ctx, slow_path="nvlink", factor=6.0)
+    program._clock = clock
+    batches = make_batches(cfg, seq_len=64, batch_per_shard=8)
+    with mesh:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = init_state(params)
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        # trace + Stage-1 tune (params/opt donated: must be reassigned)
+        params, opt_state, m = program.step(params, opt_state, batch)
+        start = {}
+        for c in ctx.comms():
+            for key, sc in c._slots.items():
+                sc.balancer = LoadBalancer(
+                    {"nvlink": 60, "pcie": 25, "rdma": 15}, "nvlink",
+                    window=3, invoke_period=3)
+                sc.probe_period = 6
+                start[f"{c.axis_name}:{key[0].value}@{key[1]}"] = dict(
+                    sc.balancer.shares)
+        for _ in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            params, opt_state, m = program.step(params, opt_state, batch)
+        float(m["loss"])
+    trajectory = {}
+    primary_drained = 0
+    for c in ctx.comms():
+        for key, sc in c._slots.items():
+            name = f"{c.axis_name}:{key[0].value}@{key[1]}"
+            adjs = sc.balancer.adjustments
+            primary_drained += sum(a.source == "nvlink" for a in adjs)
+            trajectory[name] = {
+                "start_shares": start.get(name),
+                "final_shares": dict(sc.balancer.shares),
+                "adjustments": len(adjs),
+                "history": sc.history(k=12),
+            }
+    rec = {
+        "timing_source": ctx.timing_kind(),
+        "steps": steps,
+        "skew": {"slow_path": "nvlink", "factor": 6.0},
+        "primary_drain_moves": primary_drained,
+        "sources": {c.axis_name: c.timing.report() for c in ctx.comms()},
+        "trajectory": trajectory,
+    }
+    program.close()
+    return rec
+
+
+def run(flips: int = 6, measured_steps: int = 30) -> dict:
     cached = run_oscillation(capacity=8, flips=flips)
     uncached = run_oscillation(capacity=1, flips=flips)
+    measured = run_measured(steps=measured_steps)
     # ticks 0 and 1 trace the two plans in BOTH runs; steady state starts
     # at tick 2, where cached hits and uncached re-traces.
     steady_hit = statistics.median(cached["tick_s"][2:])
@@ -128,6 +228,7 @@ def run(flips: int = 6) -> dict:
         "steady_tick_s_uncached": round(steady_rejit, 4),
         "retrace_s_avoided_per_return": round(per_return, 4),
         "retrace_s_avoided_total": round(per_return * (flips - 1), 4),
+        "measured_feedback": measured,
     }
     return rec
 
@@ -153,6 +254,11 @@ def main(argv=None) -> int:
           f"per oscillation return "
           f"({rec['retrace_s_avoided_total']}s over {args.flips} flips) "
           f"-> {args.out}")
+    meas = rec["measured_feedback"]
+    print(f"measured feedback: source={meas['timing_source']}, "
+          f"{meas['primary_drain_moves']} primary-drain moves under "
+          f"{meas['skew']['factor']}x wall-clock skew on "
+          f"{meas['skew']['slow_path']} over {meas['steps']} steps")
     return 0
 
 

@@ -35,3 +35,35 @@ for phase, mib in (("256MB", 256), ("8MB", 8)):
           f"({len(bal.adjustments)} adjustments so far)")
 print("  -> secondary shares shrink for latency-bound small messages, "
       "exactly the paper's Fig. 5 adaptation")
+
+print("== Control plane: the communicator's own Stage-2 trajectory ==")
+# The same mechanism through the FlexCommunicator control plane
+# (SlotController per size bucket): hammer a small bucket and read the
+# last adjustments straight out of report() — source, target, gap, call.
+from repro.core.communicator import CommConfig, FlexCommunicator
+from repro.core.topology import Collective as C
+
+from repro.core.communicator import bucket_for
+
+comm = FlexCommunicator("x", 8, CommConfig(profile="h800",
+                                           measurement_noise=0.02))
+big = comm.tune(C.ALL_GATHER, 256 * MiB)    # Stage 1 at the big bucket
+# message size shifts at runtime: seed the small bucket's balancer with
+# the big bucket's converged split (the Fig-5 scenario), then let Stage 2
+# walk it back using per-call timings
+small = comm.slot(C.ALL_GATHER, bucket_for(8 * MiB))
+small.balancer.shares = dict(big.shares)
+for _ in range(300):
+    comm.record_call(C.ALL_GATHER, 8 * MiB)
+rep = comm.report()
+print(f"  timing source: {rep['timing_source']}")
+for slot, blk in sorted(rep.items()):
+    if not isinstance(blk, dict) or "stage2_history" not in blk:
+        continue
+    print(f"  {slot}: stage1={blk['stage1_shares']} "
+          f"-> now={blk['current_shares']} "
+          f"({blk['stage2_adjustments']} adjustments, "
+          f"warm={blk['warm']})")
+    for a in blk["stage2_history"][-4:]:
+        print(f"      call {a['call']:4d}  {a['source']} -> {a['target']}"
+              f"  moved={a['moved']}  gap={a['gap']:.2f}  [{a['kind']}]")

@@ -1,0 +1,120 @@
+"""TuningProfile — persistent Stage-1 warm-start store.
+
+Every fresh process used to repay the paper's "~10 s profiling phase"
+because converged Stage-1 shares lived only in process memory.  The
+profile serializes them to JSON keyed by everything the tuning outcome is
+a function of — ``(profile, secondary_algo, op, n_ranks, bucket, grid)``
+— so a later launch on the same topology adopts the shares with ZERO
+Algorithm-1 iterations and, because RoutePlans are a pure function of the
+shares, produces byte-identical ``plan_signature()``s to the cold run that
+wrote it.
+
+Saves merge: the on-disk file is re-read and updated before writing, so
+several communicators (tp + dp axes, sequential launchers) can share one
+cache file.  Writes are atomic (tmp + rename).  Unknown/corrupt files are
+treated as empty rather than fatal — a warm-start cache must never be
+able to break a launch.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.core.topology import Collective
+
+VERSION = 1
+
+Key = Tuple[str, str, str, int, int, int]
+
+
+def _key(profile: str, algo: str, op: Collective | str, n_ranks: int,
+         bucket: int, grid: int) -> Key:
+    op_value = op.value if isinstance(op, Collective) else str(op)
+    return (str(profile), str(algo), op_value, int(n_ranks), int(bucket),
+            int(grid))
+
+
+class TuningProfile:
+    """In-memory view of one warm-start cache file."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._entries: Dict[Key, Dict[str, object]] = {}
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def load(cls, path: Optional[str]) -> "TuningProfile":
+        prof = cls(path)
+        if path and os.path.exists(path):
+            prof._merge_file(path)
+        return prof
+
+    def _merge_file(self, path: str) -> None:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            entries = doc.get("entries", []) if isinstance(doc, dict) else []
+        except (OSError, ValueError):
+            return                  # corrupt cache == empty cache
+        for e in entries:
+            try:
+                key = _key(e["profile"], e.get("secondary_algo", "ring"),
+                           e["op"], e["n_ranks"], e["bucket"], e["grid"])
+                shares = {str(p): int(u) for p, u in e["shares"].items()}
+            except (KeyError, TypeError, ValueError):
+                continue
+            if sum(shares.values()) != key[5]:
+                continue            # does not cover the grid: unusable
+            self._entries.setdefault(key, {}).update(e)
+            self._entries[key]["shares"] = shares
+
+    # -- store API -------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, profile: str, algo: str, op: Collective, n_ranks: int,
+               bucket: int, grid: int) -> Optional[Dict[str, int]]:
+        e = self._entries.get(_key(profile, algo, op, n_ranks, bucket, grid))
+        return dict(e["shares"]) if e else None
+
+    def record(self, profile: str, algo: str, op: Collective, n_ranks: int,
+               bucket: int, grid: int, shares: Mapping[str, int], *,
+               iterations: int = 0, converged: bool = True) -> None:
+        key = _key(profile, algo, op, n_ranks, bucket, grid)
+        self._entries[key] = {
+            "profile": key[0], "secondary_algo": key[1], "op": key[2],
+            "n_ranks": key[3], "bucket": key[4], "grid": key[5],
+            "shares": {str(p): int(u) for p, u in shares.items()},
+            "iterations": int(iterations), "converged": bool(converged),
+        }
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Merge with whatever is on disk, then write atomically."""
+        target = path or self.path
+        if not target:
+            raise ValueError("TuningProfile.save: no path configured")
+        on_disk = TuningProfile.load(target)
+        on_disk._entries.update(self._entries)
+        doc = {"version": VERSION,
+               "entries": [on_disk._entries[k]
+                           for k in sorted(on_disk._entries)]}
+        d = os.path.dirname(os.path.abspath(target))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=2)
+            os.replace(tmp, target)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self.path = target
+        return target
+
+    def report(self) -> Dict[str, object]:
+        return {"path": self.path, "entries": len(self._entries)}

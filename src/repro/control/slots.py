@@ -1,0 +1,146 @@
+"""SlotController — all control state for one (collective, size-bucket).
+
+Before the control plane existed, ``FlexCommunicator`` spread each slot's
+state across parallel dicts (``_tuned`` for the Stage-1 result,
+``_balancers`` for the Stage-2 state) plus ad-hoc plan-construction
+arithmetic.  A SlotController owns one slot end to end:
+
+* how its shares came to be (cold Algorithm-1 run vs. TuningProfile
+  warm-start — ``warm`` + ``tuned.iterations`` record the provenance);
+* the live Stage-2 balancer;
+* a single measurement-ingest method, :meth:`report`, through which every
+  per-call timing flows — whatever TimingSource produced it;
+* measured-mode *probe* moves: from a converged Stage-1 split the
+  per-path estimates are near-equal, so a wall-clock-fed balancer would
+  never see a gap and never learn.  After ``probe_period`` gap-free calls
+  the controller moves one grid unit from a rotating active secondary to
+  the primary (the paper's NVLink-first rule); the resulting share delta
+  gives MeasuredTimingSource the finite-difference sample it needs, and a
+  wrong probe decays harmlessly (the drained path's rate estimate falls,
+  the balancer routes share back).  Probes are recorded as ``kind="probe"``
+  adjustments so reports can tell exploration from reaction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from repro.core.balancer import Adjustment, LoadBalancer
+from repro.core.tuner import MeasureFn, SHARE_GRID, TuneResult, initial_tune
+from repro.core.topology import Collective
+
+#: measured-mode exploration cadence: gap-free calls before a probe move.
+PROBE_PERIOD = 40
+
+#: adjustments kept in the per-slot report history.
+HISTORY_K = 8
+
+
+@dataclasses.dataclass
+class SlotController:
+    """Control state for one ``(collective, size-bucket)`` slot."""
+
+    op: Collective
+    bucket: int
+    tuned: TuneResult
+    balancer: LoadBalancer
+    warm: bool = False
+    probe_period: Optional[int] = None
+    _since_gap: int = 0
+    _probe_idx: int = 0
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def tune_cold(cls, op: Collective, bucket: int, paths: Sequence[str],
+                  primary: str, measure: MeasureFn, *,
+                  probe_period: Optional[int] = None) -> "SlotController":
+        """Run Algorithm 1 for the slot — the paper's profiling phase."""
+        res = initial_tune(list(paths), primary, measure)
+        return cls(op, bucket, res, LoadBalancer(res.shares, primary),
+                   warm=False, probe_period=probe_period)
+
+    @classmethod
+    def warm_start(cls, op: Collective, bucket: int,
+                   shares: Mapping[str, int], primary: str, *,
+                   probe_period: Optional[int] = None) -> "SlotController":
+        """Adopt converged shares from a TuningProfile: zero Algorithm-1
+        iterations, identical downstream RoutePlans (plans are a pure
+        function of the shares)."""
+        shares = dict(shares)
+        res = TuneResult(shares=shares,
+                         active=[p for p, s in shares.items() if s > 0],
+                         iterations=0, converged=True, trace=[])
+        return cls(op, bucket, res, LoadBalancer(res.shares, primary),
+                   warm=True, probe_period=probe_period)
+
+    # -- control-state views --------------------------------------------------
+
+    @property
+    def shares(self) -> Dict[str, int]:
+        return self.balancer.shares
+
+    def fractions(self) -> Dict[str, float]:
+        return self.balancer.fractions()
+
+    # -- Stage-2 ingest --------------------------------------------------------
+
+    def report(self, timings: Mapping[str, float]) -> Optional[Adjustment]:
+        """Feed one call's per-path timings (from whichever TimingSource)
+        into the Stage-2 machinery; returns the adjustment made, if any.
+        In measured mode a long gap-free stretch triggers a probe move so
+        the wall-clock loop keeps receiving share-sensitivity samples."""
+        adj = self.balancer.observe(timings)
+        if adj is not None:
+            self._since_gap = 0
+            return adj
+        if self.probe_period is None:
+            return None
+        self._since_gap += 1
+        if self._since_gap < self.probe_period:
+            return None
+        self._since_gap = 0
+        return self._probe()
+
+    def _probe(self) -> Optional[Adjustment]:
+        bal = self.balancer
+        candidates = sorted(p for p in bal.active if p != bal.primary)
+        if not candidates or bal.primary not in bal.shares:
+            return None
+        source = candidates[self._probe_idx % len(candidates)]
+        self._probe_idx += 1
+        # the balancer validates the move (tracked paths, non-negativity,
+        # the primary-reactivation pin) — probes get no special rights
+        return bal.move(source, bal.primary, 1, kind="probe")
+
+    # -- reporting -------------------------------------------------------------
+
+    def history(self, k: int = HISTORY_K) -> List[Dict[str, object]]:
+        """Last-k Stage-2 adjustments, JSON-ready (satellite: report()
+        surfaces the balancer's actual trajectory)."""
+        return [{"call": a.call_index, "source": a.source,
+                 "target": a.target, "moved": a.moved,
+                 "gap": round(a.gap, 4), "kind": a.kind}
+                for a in self.balancer.last_adjustments(k)]
+
+    def describe(self, model, n_ranks: int) -> Dict[str, object]:
+        """The per-slot block of ``FlexCommunicator.report()``."""
+        return {
+            "stage1_shares": self.tuned.shares,
+            "stage1_iters": self.tuned.iterations,
+            "converged": self.tuned.converged,
+            "warm": self.warm,
+            "current_shares": dict(self.balancer.shares),
+            "stage2_adjustments": len(self.balancer.adjustments),
+            "stage2_history": self.history(),
+            "predicted_algbw_GBps": model.algbw_GBps(
+                self.op, n_ranks, self.bucket, self.balancer.fractions()),
+            "nccl_algbw_GBps": model.nccl_baseline_GBps(
+                self.op, n_ranks, self.bucket),
+        }
+
+    def status(self) -> Dict[str, object]:
+        """Warm/cold provenance for dry-run reporting."""
+        return {"warm": self.warm, "stage1_iters": self.tuned.iterations,
+                "converged": self.tuned.converged}

@@ -1,0 +1,227 @@
+"""TimingSource — where the control plane's numbers come from.
+
+The paper's Stage-2 Evaluator "passively records per-path completion times
+for every collective call".  On hardware those are measurements; this repo
+historically re-queried the analytic simulator, closing Stage 2 on its own
+prophecy.  The TimingSource seam makes the choice explicit:
+
+* :class:`SimTimingSource` — today's behavior, bit-identical: per-call
+  per-path timings come from ``PathTimingModel.measure`` at the balancer's
+  current fractions.
+* :class:`MeasuredTimingSource` — Stage 2 on observation.  The StepProgram
+  runtime times each executed step (block-until-ready wall clock) and
+  reports the duration; the source apportions it over the step's replay
+  multiset and maintains per-slot per-path *rate* estimates (seconds per
+  unit of share).  The simulator is consulted exactly once per path — to
+  bootstrap the apportionment weights — and never again: rates are
+  refined only by finite differences between observed steps whose share
+  vectors differ (the SlotController's probe moves guarantee such steps
+  exist even from a converged Stage-1 split).
+
+Both stages are covered: ``stage1_measure`` adapts the source into the
+``MeasureFn`` Algorithm 1 consumes (Stage 1 is the profiling phase, so it
+always runs against the measurement oracle — the simulator stands in for
+the hardware profiling round on both sources).
+
+Observability caveat, stated rather than hidden: a collective's completion
+time is the *max* over concurrent paths, so one scalar per step cannot
+uniquely attribute slowness.  The finite-difference rule attributes a
+step-time change to the path whose share just shrank — exact when that
+path was the bottleneck, conservatively clamped to zero otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.simulator import PathTimingModel
+from repro.core.topology import Collective
+from repro.core.tuner import MeasureFn, measure_fn
+
+#: EWMA weight for a fresh finite-difference rate observation.
+RATE_EWMA = 0.5
+
+#: one ingested step call: (op, n_ranks, bucket, payload_bytes, fractions).
+StepCall = Tuple[Collective, int, int, int, Mapping[str, float]]
+
+
+class TimingSource:
+    """Protocol + shared plumbing for Stage-1/Stage-2 timing providers."""
+
+    kind: str = "abstract"
+
+    def __init__(self, model: PathTimingModel):
+        self.model = model
+
+    def stage1_measure(self, op: Collective, n_ranks: int,
+                       payload_bytes: int) -> MeasureFn:
+        """Algorithm 1's MeasurePathTimings for one slot — the profiling
+        phase runs against the measurement oracle on every source."""
+        return measure_fn(self.model, op, n_ranks, payload_bytes)
+
+    def timings_for(self, op: Collective, n_ranks: int, payload_bytes: int,
+                    fractions: Mapping[str, float], *,
+                    bucket: Optional[int] = None) -> Dict[str, float]:
+        raise NotImplementedError
+
+    def ingest_step(self, calls: Sequence[StepCall],
+                    elapsed_s: Optional[float]) -> None:
+        """Feed one executed step's wall-clock duration (no-op unless the
+        source actually consumes measurements)."""
+
+    def report(self) -> Dict[str, object]:
+        return {"kind": self.kind}
+
+
+class SimTimingSource(TimingSource):
+    """Stage 2 closed on the analytic simulator — the historical default.
+
+    ``timings_for`` is exactly the pre-control-plane ``record_call`` body:
+    one ``measure`` at the call's true payload and the balancer's current
+    fractions, including the simulator's noise stream in order."""
+
+    kind = "sim"
+
+    def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
+                    bucket=None):
+        return self.model.measure(op, n_ranks, payload_bytes, fractions)
+
+
+@dataclasses.dataclass
+class _SlotRates:
+    """Measured-mode state for one (op, bucket) slot."""
+
+    rates: Dict[str, float] = dataclasses.field(default_factory=dict)
+    last_fractions: Optional[Dict[str, float]] = None
+    last_call_s: Optional[float] = None
+    sim_consults: int = 0           # bootstrap weight queries (per path)
+    updates: int = 0                # finite-difference rate refinements
+
+
+class MeasuredTimingSource(TimingSource):
+    """Stage 2 closed on wall-clock observation.
+
+    Per slot, each path holds a *rate* r_p (seconds per unit share): the
+    estimated per-path completion time at fractions f is ``f_p * r_p``.
+    Rates bootstrap from the simulator (so the very first estimates
+    reproduce its relative weights) and are thereafter refined ONLY from
+    measured step durations:
+
+    * ``ingest_step`` apportions one step's measured duration over the
+      replay multiset proportionally to the calls' estimated times, giving
+      a per-call measured completion time;
+    * when a slot's share vector changed since its previous observation
+      (a Stage-2 move or a SlotController probe), the step-time delta is
+      attributed to the path whose share decreased:
+      ``r_obs = (T_prev - T_now) / Δshare`` — exact if that path was the
+      bottleneck, clamped at zero otherwise — and EWMA-folded into r_p.
+
+    The balancer only ever compares *relative* per-path times, so no
+    absolute wall-clock calibration is needed; compute time inside the
+    measured step cancels out of the gap the same way the simulator's
+    fixed overheads do.
+    """
+
+    kind = "measured"
+
+    def __init__(self, model: PathTimingModel, ewma: float = RATE_EWMA):
+        super().__init__(model)
+        self.ewma = ewma
+        self._slots: Dict[Tuple[Collective, int], _SlotRates] = {}
+        self.steps_ingested = 0
+
+    # -- rate bookkeeping ----------------------------------------------------
+
+    def _slot(self, op: Collective, bucket: int) -> _SlotRates:
+        return self._slots.setdefault((op, bucket), _SlotRates())
+
+    def _ensure_rates(self, op: Collective, n_ranks: int, bucket: int,
+                      payload_bytes: int,
+                      fractions: Mapping[str, float]) -> _SlotRates:
+        st = self._slot(op, bucket)
+        missing = [p for p, f in fractions.items()
+                   if f > 0.0 and p not in st.rates]
+        if missing:
+            # the ONLY simulator consultation in measured mode: bootstrap
+            # apportionment weights for paths first seen carrying share
+            sim = self.model.measure(op, n_ranks, payload_bytes, fractions)
+            for p in missing:
+                st.rates[p] = sim[p] / fractions[p]
+                st.sim_consults += 1
+        return st
+
+    def estimates(self, op: Collective, bucket: int,
+                  fractions: Mapping[str, float]) -> Dict[str, float]:
+        st = self._slot(op, bucket)
+        return {p: (f * st.rates.get(p, 0.0) if f > 0.0 else 0.0)
+                for p, f in fractions.items()}
+
+    # -- TimingSource API ----------------------------------------------------
+
+    def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
+                    bucket=None):
+        bucket = bucket if bucket is not None else int(payload_bytes)
+        self._ensure_rates(op, n_ranks, bucket, payload_bytes, fractions)
+        return self.estimates(op, bucket, fractions)
+
+    def ingest_step(self, calls: Sequence[StepCall],
+                    elapsed_s: Optional[float]) -> None:
+        if elapsed_s is None or elapsed_s <= 0.0 or not calls:
+            return
+        self.steps_ingested += 1
+        # estimated per-call completion times → apportionment weights
+        est: List[float] = []
+        for op, n_ranks, bucket, nbytes, fractions in calls:
+            self._ensure_rates(op, n_ranks, bucket, nbytes, fractions)
+            t = self.estimates(op, bucket, fractions)
+            est.append(max([v for v in t.values()] or [0.0]))
+        total = sum(est)
+        if total <= 0.0:
+            return
+        # per-slot mean measured call time (one slot may replay many calls)
+        meas: Dict[Tuple[Collective, int], List[float]] = {}
+        fracs_now: Dict[Tuple[Collective, int], Mapping[str, float]] = {}
+        for (op, _n, bucket, _b, fractions), t_est in zip(calls, est):
+            meas.setdefault((op, bucket), []).append(
+                elapsed_s * t_est / total)
+            fracs_now[(op, bucket)] = fractions
+        for key, samples in meas.items():
+            st = self._slots[key]
+            t_now = sum(samples) / len(samples)
+            fr_now = dict(fracs_now[key])
+            if st.last_fractions is not None and st.last_call_s is not None \
+                    and fr_now != st.last_fractions:
+                self._finite_difference(st, fr_now, t_now)
+            st.last_fractions, st.last_call_s = fr_now, t_now
+
+    def _finite_difference(self, st: _SlotRates, fr_now: Dict[str, float],
+                           t_now: float) -> None:
+        """Attribute the step-time delta to the drained path (see module
+        docstring for why this is the honest scalar-observation rule)."""
+        deltas = {p: fr_now.get(p, 0.0) - st.last_fractions.get(p, 0.0)
+                  for p in set(fr_now) | set(st.last_fractions)}
+        source = min(deltas, key=deltas.get)
+        shrink = -deltas[source]
+        if shrink <= 0.0:
+            return
+        r_obs = max((st.last_call_s - t_now) / shrink, 0.0)
+        prev = st.rates.get(source, r_obs)
+        st.rates[source] = (1.0 - self.ewma) * prev + self.ewma * r_obs
+        st.updates += 1
+
+    def report(self) -> Dict[str, object]:
+        return {
+            "kind": self.kind,
+            "steps_ingested": self.steps_ingested,
+            "slots": {
+                f"{op.value}@{bucket}": {
+                    "rates_s_per_share": {p: float(r)
+                                          for p, r in st.rates.items()},
+                    "sim_consults": st.sim_consults,
+                    "updates": st.updates,
+                }
+                for (op, bucket), st in sorted(
+                    self._slots.items(), key=lambda kv: (kv[0][0].value,
+                                                         kv[0][1]))},
+        }

@@ -9,6 +9,18 @@ from repro.core.simulator import (PathTimingModel, NCCL_BASELINE_GBPS,
 from repro.core.tuner import (SHARE_GRID, TuneResult, initial_tune,
                               initialize_shares)
 from repro.core.balancer import Evaluator, LoadBalancer
-from repro.core.communicator import (CommConfig, FlexCommunicator,
-                                     comm_init_rank, comm_destroy_all)
 from repro.core import collectives
+
+# The communicator re-exports are lazy (PEP 562): communicator.py imports
+# the control plane (repro.control), which imports core leaf modules —
+# importing it eagerly here would make `import repro.control` re-enter
+# this partially-initialized package and fail.
+_COMMUNICATOR_NAMES = ("CommConfig", "FlexCommunicator", "comm_init_rank",
+                       "comm_destroy_all")
+
+
+def __getattr__(name):
+    if name in _COMMUNICATOR_NAMES:
+        from repro.core import communicator
+        return getattr(communicator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

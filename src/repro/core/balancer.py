@@ -31,6 +31,9 @@ class Adjustment:
     moved: int
     gap: float
     shares_after: Dict[str, int]
+    #: "balance" = the §3.2.2 gap rule fired; "probe" = a measured-mode
+    #: exploration move (control/slots.py) — reports tell them apart.
+    kind: str = "balance"
 
 
 class Evaluator:
@@ -51,15 +54,20 @@ class Evaluator:
 
         The median (not mean) is what makes the balancer ignore transient
         spikes: a single slow call cannot shift the median of a full window.
+
+        A path with NO samples in the window — typically one the balancer
+        just re-activated from share 0, whose timings the caller has not
+        started reporting yet — is skipped rather than stalling the whole
+        trend: returning None here would freeze Stage 2 for a full window
+        every time a path comes back (regression in tests/test_balancer.py).
         """
         if len(self._history) < self.window:
             return None
         out: Dict[str, float] = {}
         for p in active:
             vals = [h[p] for h in self._history if p in h]
-            if not vals:
-                return None
-            out[p] = statistics.median(vals)
+            if vals:
+                out[p] = statistics.median(vals)
         return out
 
 
@@ -97,6 +105,33 @@ class LoadBalancer:
     def fractions(self) -> Dict[str, float]:
         return {p: s / self.grid for p, s in self.shares.items()}
 
+    def last_adjustments(self, k: int = 8) -> List[Adjustment]:
+        """The most recent <=k adjustments, oldest first — the trajectory
+        slice reports surface."""
+        return list(self.adjustments[-k:]) if k > 0 else []
+
+    def move(self, source: str, target: str, units: int = 1, *,
+             gap: float = 0.0, kind: str = "balance") -> Optional[Adjustment]:
+        """Apply one validated share move and record it.  The single place
+        shares change: enforces tracked paths, non-negativity, and the
+        primary-reactivation pin for every caller (the periodic gap rule
+        below and the control plane's probe moves alike)."""
+        if source == target or source not in self.shares \
+                or target not in self.shares:
+            return None
+        if (target == self.primary and self.shares[self.primary] == 0
+                and not self.allow_primary_reactivation):
+            return None
+        moved = min(units, self.shares[source])
+        if moved <= 0:
+            return None
+        self.shares[source] -= moved
+        self.shares[target] += moved
+        adj = Adjustment(self.calls, source, target, moved, gap,
+                         dict(self.shares), kind=kind)
+        self.adjustments.append(adj)
+        return adj
+
     def observe(self, timings: Mapping[str, float]) -> Optional[Adjustment]:
         """Record one collective call; maybe rebalance (periodic).
 
@@ -114,8 +149,8 @@ class LoadBalancer:
         if len(active) < 2:
             return None
         trend = self.evaluator.trend(active)
-        if trend is None:
-            return None
+        if trend is None or len(trend) < 2:
+            return None             # <2 sampled paths: no gap to compare
         slow = max(trend, key=trend.get)
         fast = min(trend, key=trend.get)
         t_fast = trend[fast]
@@ -132,12 +167,4 @@ class LoadBalancer:
             if (self.shares[self.primary] > 0
                     or self.allow_primary_reactivation):
                 target = self.primary
-        moved = min(self.step, self.shares[slow])
-        if moved <= 0:
-            return None
-        self.shares[slow] -= moved
-        self.shares[target] += moved
-        adj = Adjustment(self.calls, slow, target, moved, gap,
-                         dict(self.shares))
-        self.adjustments.append(adj)
-        return adj
+        return self.move(slow, target, self.step, gap=gap)

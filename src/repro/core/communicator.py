@@ -1,16 +1,22 @@
 """FlexCommunicator — the paper's *Communicator* (§3.1) + NCCL-shaped API.
 
-Responsibilities, mirroring Figure 1:
+The communicator is the DATA plane plus its recorders; the CONTROL plane
+lives in ``repro.control`` (DESIGN.md §8) and is delegated to:
 
   * abstract the node's heterogeneous links into a unified path pool
     (``links.NodeProfile``);
-  * run Stage-1 coarse tuning at init (Algorithm 1) per (collective,
-    ring-size, payload-bucket) — the paper's "~10 s profiling phase";
+  * own one :class:`~repro.control.SlotController` per (collective,
+    ring-size, payload-bucket) — Stage-1 tuning (Algorithm 1, the paper's
+    "~10 s profiling phase") runs lazily per slot, or is skipped entirely
+    when the configured :class:`~repro.control.TuningProfile` warm-starts
+    the shares;
   * build a quantized :class:`~repro.core.routing.RoutePlan` per call from
     the current shares and serve every collective through the single
     ``routing.execute`` driver;
-  * feed per-call timings to the Stage-2 Evaluator/LoadBalancer and adopt its
-    adjustments;
+  * route per-call timings from the configured
+    :class:`~repro.control.TimingSource` (simulated by default, wall-clock
+    derived in measured mode) into each slot's Stage-2
+    Evaluator/LoadBalancer and adopt its adjustments;
   * stay NCCL-API compatible: ``all_reduce/all_gather/reduce_scatter/
     all_to_all/broadcast`` with the usual signatures, plus a pure-"NCCL"
     mode (single-path) so the baseline is the same code path minus
@@ -40,6 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.control import (MeasuredTimingSource, PROBE_PERIOD,
+                           SimTimingSource, SlotController, TimingSource,
+                           TuningProfile)
 from repro.core import collectives as mp
 from repro.core import routing
 from repro.core.balancer import LoadBalancer
@@ -48,7 +57,7 @@ from repro.core.pipeline import StageTimes, optimal_chunk_bytes
 from repro.core.routing import PlanCache, RoutePlan
 from repro.core.simulator import PathTimingModel
 from repro.core.topology import Collective
-from repro.core.tuner import SHARE_GRID, TuneResult, initial_tune
+from repro.core.tuner import SHARE_GRID, TuneResult
 
 #: map link-kind order of a profile onto the three route classes of
 #: ``collectives.py``: the primary link, the first secondary (staged/host
@@ -78,6 +87,18 @@ class CommConfig:
     runtime_balancing: bool = True
     measurement_noise: float = 0.0     # simulator noise for the balancer loop
     seed: int = 0
+    #: Stage-2 TimingSource kind: "sim" closes the loop on the analytic
+    #: simulator (historical behavior, bit-identical); "measured" on
+    #: wall-clock step durations reported by the StepProgram runtime
+    #: (control/timing.py — the simulator then only seeds apportionment
+    #: weights).
+    timing: str = "sim"
+    #: secondary-path collective algorithm fed to PathTimingModel: "ring"
+    #: (the paper's design) or "tree" (§6 future work, recursive doubling).
+    secondary_algo: str = "ring"
+    #: TuningProfile JSON path ("" = off): converged Stage-1 shares are
+    #: warm-started from it, skipping the profiling phase entirely.
+    tuning_cache: str = ""
     #: registry-isolation tag: part of the comm_init_rank memo key.  Live
     #: workloads no longer need it — per-program ReplayRecorders keep their
     #: Stage-2 replay logs disjoint on a shared communicator — but tools
@@ -166,9 +187,20 @@ class FlexCommunicator:
         self.profile: NodeProfile = PROFILES[self.config.profile]
         self.model = PathTimingModel(self.profile,
                                      noise=self.config.measurement_noise,
-                                     seed=self.config.seed)
-        self._tuned: Dict[Tuple[Collective, int], TuneResult] = {}
-        self._balancers: Dict[Tuple[Collective, int], LoadBalancer] = {}
+                                     seed=self.config.seed,
+                                     secondary_algo=self.config.secondary_algo)
+        #: Stage-2 TimingSource (control/timing.py): where per-call
+        #: per-path timings come from.
+        self.timing: TimingSource = (
+            MeasuredTimingSource(self.model)
+            if self.config.timing == "measured"
+            else SimTimingSource(self.model))
+        #: control plane: one SlotController per tuned (op, size-bucket).
+        self._slots: Dict[Tuple[Collective, int], SlotController] = {}
+        #: Stage-1 warm-start store (control/profile.py); empty when no
+        #: cache path is configured.
+        self._profile_store = TuningProfile.load(
+            self.config.tuning_cache or None)
         #: quantized-plan cache (op, bucket, plan identity) -> RoutePlan
         #: with hit/miss/re-trace stats — the jit-variant cache of
         #: DESIGN.md §2.
@@ -217,23 +249,34 @@ class FlexCommunicator:
             rec.reset()
 
     def observe_executed_step(
-            self, recorder: Optional[ReplayRecorder] = None) -> bool:
+            self, recorder: Optional[ReplayRecorder] = None, *,
+            elapsed_s: Optional[float] = None) -> bool:
         """Host-side Stage-2 hook: record one executed step's collectives.
 
         Replays ``recorder`` (default: the program-less default recorder)
-        into the balancers.  Returns True when any share moved — the
-        caller's next plan lookup registers as a re-trace in the plan cache
-        and flips the executable-cache signature (DESIGN.md §2, §7).
+        into the slot controllers.  ``elapsed_s`` is the step's measured
+        wall-clock duration (block-until-ready timing from the StepProgram
+        runtime); a MeasuredTimingSource apportions it over the replay
+        multiset before the per-call replay, a SimTimingSource ignores it.
+        Returns True when any share moved — the caller's next plan lookup
+        registers as a re-trace in the plan cache and flips the
+        executable-cache signature (DESIGN.md §2, §7).
         """
         rec = recorder if recorder is not None else self._default_recorder
         rec.promote()
-        before = {k: dict(b.shares) for k, b in self._balancers.items()}
-        for op, nbytes in rec.issued_calls():
+        calls = rec.issued_calls()
+        if (elapsed_s is not None and calls and self._balancing_active):
+            self.timing.ingest_step(
+                [(op, self.n_ranks, bucket_for(n), n,
+                  self.slot(op, bucket_for(n)).fractions())
+                 for op, n in calls], elapsed_s)
+        before = {k: dict(s.shares) for k, s in self._slots.items()}
+        for op, nbytes in calls:
             self.record_call(op, nbytes)
-        after = {k: dict(b.shares) for k, b in self._balancers.items()}
+        after = {k: dict(s.shares) for k, s in self._slots.items()}
         return before != after
 
-    # -- control plane -------------------------------------------------------
+    # -- control plane (delegated to repro.control) ---------------------------
 
     @property
     def path_names(self) -> Tuple[str, ...]:
@@ -244,41 +287,98 @@ class FlexCommunicator:
     def route_of(self, path_name: str) -> str:
         return ROUTE_BY_SLOT[self.path_names.index(path_name)]
 
+    @property
+    def _balancing_active(self) -> bool:
+        return (self.config.runtime_balancing
+                and self.config.backend != "nccl" and self.n_ranks > 1)
+
+    # transitional read-only views of the slot registry: external tools
+    # (benchmarks, tests) reach the live Stage-1/Stage-2 objects through
+    # the historical dict attributes.
+    @property
+    def _tuned(self) -> Dict[Tuple[Collective, int], TuneResult]:
+        return {k: s.tuned for k, s in self._slots.items()}
+
+    @property
+    def _balancers(self) -> Dict[Tuple[Collective, int], LoadBalancer]:
+        return {k: s.balancer for k, s in self._slots.items()}
+
+    def slot(self, op: Collective, bucket: int) -> SlotController:
+        """The SlotController for one (op, size-bucket); created on first
+        use — warm from the TuningProfile when it has a matching entry,
+        else by running Algorithm 1 cold."""
+        key = (op, bucket)
+        sc = self._slots.get(key)
+        if sc is not None:
+            return sc
+        primary = self.profile.primary.name
+        probe = PROBE_PERIOD if self.timing.kind == "measured" else None
+        if self.config.backend == "nccl" or self.n_ranks <= 1:
+            sc = SlotController.tune_cold(
+                op, bucket, [primary], primary,
+                self.timing.stage1_measure(op, self.n_ranks, bucket))
+        else:
+            saved = self._profile_store.lookup(
+                self.config.profile, self.config.secondary_algo, op,
+                self.n_ranks, bucket, SHARE_GRID)
+            if saved is not None and set(saved) <= set(self.path_names):
+                sc = SlotController.warm_start(op, bucket, saved, primary,
+                                               probe_period=probe)
+            else:
+                sc = SlotController.tune_cold(
+                    op, bucket, list(self.path_names), primary,
+                    self.timing.stage1_measure(op, self.n_ranks, bucket),
+                    probe_period=probe)
+        self._slots[key] = sc
+        return sc
+
     def tune(self, op: Collective, payload_bytes: int) -> TuneResult:
         """Stage 1 (Algorithm 1) for one (op, size-bucket); memoized."""
-        key = (op, bucket_for(payload_bytes))
-        if key not in self._tuned:
-            names = self.path_names
-            primary = self.profile.primary.name
-
-            def measure(fracs: Mapping[str, float]) -> Dict[str, float]:
-                return self.model.measure(op, self.n_ranks, key[1], fracs)
-
-            if self.config.backend == "nccl" or self.n_ranks <= 1:
-                res = initial_tune([primary], primary, measure)
-            else:
-                res = initial_tune(list(names), primary, measure)
-            self._tuned[key] = res
-            self._balancers[key] = LoadBalancer(res.shares, primary)
-        return self._tuned[key]
+        return self.slot(op, bucket_for(payload_bytes)).tuned
 
     def shares_for(self, op: Collective, payload_bytes: int) -> Dict[str, int]:
         """Current grid-unit shares keyed by *route class*."""
-        key = (op, bucket_for(payload_bytes))
-        self.tune(op, payload_bytes)
-        bal = self._balancers[key]
-        return {self.route_of(p): s for p, s in bal.shares.items() if s > 0}
+        sc = self.slot(op, bucket_for(payload_bytes))
+        return {self.route_of(p): s for p, s in sc.shares.items() if s > 0}
 
     def record_call(self, op: Collective, payload_bytes: int) -> None:
-        """Stage 2: observe one call's (simulated) timings, maybe rebalance."""
-        if not self.config.runtime_balancing or self.config.backend == "nccl":
+        """Stage 2: report one call's timings to its slot controller.  The
+        timings come from the configured TimingSource — the simulator
+        (default) or wall-clock-derived estimates (measured mode)."""
+        if not self._balancing_active:
             return
-        key = (op, bucket_for(payload_bytes))
-        self.tune(op, payload_bytes)
-        bal = self._balancers[key]
-        timings = self.model.measure(op, self.n_ranks, payload_bytes,
-                                     bal.fractions())
-        bal.observe(timings)
+        sc = self.slot(op, bucket_for(payload_bytes))
+        timings = self.timing.timings_for(op, self.n_ranks, payload_bytes,
+                                          sc.fractions(), bucket=sc.bucket)
+        sc.report(timings)
+
+    def save_tuning(self, path: Optional[str] = None) -> int:
+        """Record every tuned slot's Stage-1 shares into the profile store
+        and write it to ``path`` (default: ``config.tuning_cache``).
+        Single-path modes (nccl backend, degenerate rings) are never
+        recorded — their "tuning" is trivial and would collide with the
+        real entries.  Returns the number of entries recorded."""
+        n = 0
+        if self.config.backend == "nccl" or self.n_ranks <= 1:
+            return n
+        for (op, bucket), sc in self._slots.items():
+            self._profile_store.record(
+                self.config.profile, self.config.secondary_algo, op,
+                self.n_ranks, bucket, SHARE_GRID, sc.tuned.shares,
+                iterations=sc.tuned.iterations,
+                converged=sc.tuned.converged)
+            n += 1
+        target = path or self.config.tuning_cache
+        if target and n:
+            self._profile_store.save(target)
+        return n
+
+    def tuning_status(self) -> Dict[str, Dict[str, object]]:
+        """Warm/cold provenance per tuned slot (dry-run reporting)."""
+        return {f"{op.value}@{bucket}": sc.status()
+                for (op, bucket), sc in sorted(
+                    self._slots.items(),
+                    key=lambda kv: (kv[0][0].value, kv[0][1]))}
 
     # -- plan construction ----------------------------------------------------
 
@@ -364,7 +464,7 @@ class FlexCommunicator:
         therefore still shows up in plan-cache stats as the paper's
         "return to a known plan" event.
         """
-        slots = sorted(self._tuned, key=lambda k: (k[0].value, k[1]))
+        slots = sorted(self._slots, key=lambda k: (k[0].value, k[1]))
         if touched is not None:
             slots = [k for k in slots if k in touched]
         for op, bucket in slots:
@@ -404,19 +504,10 @@ class FlexCommunicator:
 
     def report(self) -> Dict[str, object]:
         out: Dict[str, object] = {}
-        for (op, bucket), res in self._tuned.items():
-            bal = self._balancers[(op, bucket)]
-            out[f"{op.value}@{bucket}"] = {
-                "stage1_shares": res.shares,
-                "stage1_iters": res.iterations,
-                "converged": res.converged,
-                "current_shares": dict(bal.shares),
-                "stage2_adjustments": len(bal.adjustments),
-                "predicted_algbw_GBps": self.model.algbw_GBps(
-                    op, self.n_ranks, bucket, bal.fractions()),
-                "nccl_algbw_GBps": self.model.nccl_baseline_GBps(
-                    op, self.n_ranks, bucket),
-            }
+        for (op, bucket), sc in self._slots.items():
+            out[f"{op.value}@{bucket}"] = sc.describe(self.model,
+                                                      self.n_ranks)
+        out["timing_source"] = self.timing.kind
         out["plan_cache"] = self.plan_cache.report()
         if self._recorders:
             out["programs"] = {

@@ -27,6 +27,20 @@ INITIAL_PRIMARY_UNITS = 80
 MeasureFn = Callable[[Mapping[str, float]], Mapping[str, float]]
 
 
+def measure_fn(provider, op: Collective, n_ranks: int,
+               payload_bytes: float) -> MeasureFn:
+    """Adapt any timing provider exposing ``measure(op, n_ranks, payload,
+    fracs)`` — the analytic simulator, a hardware profiler, a replayed
+    trace — into the MeasureFn Algorithm 1 consumes.  The tuner is
+    source-agnostic: it sees completion times, never where they came from
+    (the TimingSource seam of ``repro.control.timing`` builds on this)."""
+
+    def measure(fracs: Mapping[str, float]) -> Mapping[str, float]:
+        return provider.measure(op, n_ranks, payload_bytes, fracs)
+
+    return measure
+
+
 @dataclasses.dataclass
 class TuneTrace:
     """One Algorithm-1 iteration, for Fig-5-style reporting and tests."""

@@ -41,10 +41,13 @@ def _sds_batch(cfg, shape, mesh):
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             backend: str = "flexlink", mesh_split=None,
-            remat=True, variant: str = "") -> dict:
+            remat=True, variant: str = "",
+            tuning_cache: str = "", secondary_algo: str = "ring") -> dict:
     """mesh_split: optional (data, model) reshape of the 256-chip pod —
     the TP-degree tuning lever of EXPERIMENTS §Perf.  remat: True | False |
-    "dots" (selective checkpointing)."""
+    "dots" (selective checkpointing).  tuning_cache: TuningProfile JSON —
+    Stage-1 shares warm-start from it and are saved back after lowering,
+    so a later dry-run (or live launch) skips the profiling phase."""
     cfg = get_config(arch)
     shape = SH.SHAPES[shape_name]
     if mesh_split is not None and not multi_pod:
@@ -60,7 +63,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     # config fields give the dry-run its own memoized communicator; the tag
     # just makes the isolation intent explicit in the registry key.
     comm = CommConfig(backend=backend, profile="tpu_v5e",
-                      runtime_balancing=False, tag="dryrun")
+                      runtime_balancing=False, tag="dryrun",
+                      tuning_cache=tuning_cache,
+                      secondary_algo=secondary_algo)
     pods, dp, tp = mesh_dims(mesh)
     t0 = time.time()
 
@@ -92,6 +97,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             hlo_text = lowered.as_text()
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
+            # warm/cold Stage-1 provenance per slot, before the program is
+            # retired — and persist the shares for the next launch
+            tuning_status = ctx.tuning_status()
+            if tuning_cache:
+                ctx.save_tuning_profile(tuning_cache)
     finally:
         # retire the probe program even on failure: a --all sweep builds
         # one per (arch, shape, mesh) against memoized communicators and
@@ -164,6 +174,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "backend": backend, "chips": chips, "ok": True,
         "variant": variant, "remat": str(remat),
+        "tuning": tuning_status,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory_analysis": mem_report,
         "hlo_cost_analysis_raw": {
@@ -191,7 +202,20 @@ def main(argv=None) -> int:
                     help="run every (arch x shape) pair")
     ap.add_argument("--out", default="results/dryrun",
                     help="output dir (one json per pair)")
+    ap.add_argument("--mesh-split", default="",
+                    help="d,m reshape of the single pod (e.g. 2,4) — "
+                         "small splits make CI smoke runs cheap")
+    ap.add_argument("--tuning-cache", default="",
+                    help="TuningProfile JSON: warm-start Stage-1 and save "
+                         "the converged shares back after lowering")
+    ap.add_argument("--secondary-algo", choices=["ring", "tree"],
+                    default="ring")
+    ap.add_argument("--assert-warm", action="store_true",
+                    help="exit nonzero unless EVERY tuned slot was "
+                         "warm-started with zero Stage-1 iterations")
     args = ap.parse_args(argv)
+    mesh_split = (tuple(int(x) for x in args.mesh_split.split(","))
+                  if args.mesh_split else None)
 
     pairs = []
     archs = sorted(ALIASES) if args.all else [args.arch]
@@ -204,6 +228,8 @@ def main(argv=None) -> int:
 
     os.makedirs(args.out, exist_ok=True)
     failures = 0
+    cold_slots = 0
+    checked_slots = 0
     for arch, shape_name, mesh_name in pairs:
         tag = f"{arch}__{shape_name}__{mesh_name}__{args.backend}"
         path = os.path.join(args.out, tag + ".json")
@@ -213,7 +239,9 @@ def main(argv=None) -> int:
         print(f"[run ] {tag}", flush=True)
         try:
             rec = run_one(arch, shape_name, mesh_name == "multi",
-                          args.backend)
+                          args.backend, mesh_split=mesh_split,
+                          tuning_cache=args.tuning_cache,
+                          secondary_algo=args.secondary_algo)
         except Exception as e:
             traceback.print_exc()
             rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -225,11 +253,26 @@ def main(argv=None) -> int:
         extra = ""
         if rec.get("ok"):
             r = rec["roofline"]
+            slots = [s for ax in rec.get("tuning", {}).values()
+                     for s in ax.values()]
+            warm = sum(s["warm"] for s in slots)
+            cold_slots += len(slots) - warm
+            checked_slots += len(slots)
             extra = (f" dominant={r['dominant']}"
                      f" tc={r['t_compute']:.2e} tm={r['t_memory']:.2e}"
                      f" tl={r['t_collective']:.2e}"
-                     f" compile={rec['compile_s']}s")
+                     f" compile={rec['compile_s']}s"
+                     f" slots={warm}/{len(slots)} warm")
         print(f"[{status:4s}] {tag}{extra}", flush=True)
+    if args.assert_warm and (cold_slots or not checked_slots):
+        # zero checked slots (every pair skipped as cached, or nothing
+        # tuned) must fail too: a vacuous pass verifies nothing
+        what = (f"{cold_slots} slot(s) ran Stage-1 cold" if cold_slots
+                else "no tuned slots were checked (cached/skipped runs?)")
+        print(f"[FAIL] --assert-warm: {what} (expected a full warm-start "
+              f"from {args.tuning_cache or '<no --tuning-cache>'})",
+              flush=True)
+        return 2
     return 1 if failures else 0
 
 

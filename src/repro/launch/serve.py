@@ -14,7 +14,8 @@ import jax
 import numpy as np
 
 from repro.configs import ALIASES, get_config
-from repro.models.tp import single_device_ctx
+from repro.core.communicator import CommConfig
+from repro.models.tp import ParallelCtx
 from repro.models.transformer import init_params
 from repro.serving.engine import ServeConfig, ServeEngine
 
@@ -27,13 +28,30 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--tuning-cache", default="",
+                    help="TuningProfile JSON: warm-start Stage-1 shares "
+                         "and persist them back when draining finishes")
+    ap.add_argument("--timing", choices=["sim", "measured"], default="sim",
+                    help="Stage-2 TimingSource (control/timing.py)")
+    ap.add_argument("--secondary-algo", choices=["ring", "tree"],
+                    default="ring")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
 
-    ctx = single_device_ctx()
+    # single-device ctx, but with the comm config plumbed so a multi-axis
+    # deployment of this launcher inherits the control-plane flags
+    ctx = ParallelCtx(comm_config=CommConfig(
+        profile="tpu_v5e", timing=args.timing,
+        secondary_algo=args.secondary_algo,
+        tuning_cache=args.tuning_cache))
+    if not ctx.comms() and (args.timing != "sim" or args.tuning_cache
+                            or args.secondary_algo != "ring"):
+        print("note: single-device launch has no communicators — "
+              "--timing/--tuning-cache/--secondary-algo take effect only "
+              "with parallel axes")
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, ctx,
                          ServeConfig(slots=args.slots, cache_len=96))
@@ -52,6 +70,9 @@ def main(argv=None) -> int:
     ec = engine.comm_report()["executable_cache"]
     print(f"decode executable cache: {ec['rebuilds']} rebuilds, "
           f"{ec['hits']} hits, {ec['evictions']} evictions")
+    if args.tuning_cache:
+        n = engine.save_tuning(args.tuning_cache)
+        print(f"tuning profile: {n} slots -> {args.tuning_cache}")
     for rid in sorted(fin)[:4]:
         print(f"  req {rid}: {fin[rid][:10]}")
     assert len(fin) == args.requests

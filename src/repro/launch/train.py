@@ -42,6 +42,15 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", choices=["flexlink", "nccl"],
                     default="flexlink")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--tuning-cache", default="",
+                    help="TuningProfile JSON: warm-start Stage-1 shares "
+                         "from it and persist them back at the end")
+    ap.add_argument("--timing", choices=["sim", "measured"], default="sim",
+                    help="Stage-2 TimingSource: analytic simulator or "
+                         "wall-clock step durations (control/timing.py)")
+    ap.add_argument("--secondary-algo", choices=["ring", "tree"],
+                    default="ring",
+                    help="secondary-path collective algorithm (paper §6)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -58,7 +67,10 @@ def main(argv=None) -> int:
     pods, dp, tp = mesh_dims(mesh)
     assert args.batch % (dp * pods) == 0
 
-    comm = CommConfig(backend=args.backend, profile="tpu_v5e")
+    comm = CommConfig(backend=args.backend, profile="tpu_v5e",
+                      timing=args.timing,
+                      secondary_algo=args.secondary_algo,
+                      tuning_cache=args.tuning_cache)
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                       total_steps=args.steps)
 
@@ -74,7 +86,8 @@ def main(argv=None) -> int:
         batches = make_batches(cfg, seq_len=args.seq_len,
                                batch_per_shard=args.batch)
         loop = LoopConfig(total_steps=args.steps, log_every=5,
-                          ckpt_dir=args.ckpt_dir or None)
+                          ckpt_dir=args.ckpt_dir or None,
+                          tuning_cache=args.tuning_cache or None)
         try:
             params, opt_state, hist = run_loop(program, params, opt_state,
                                                batches, ctx, loop)

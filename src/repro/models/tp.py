@@ -116,13 +116,43 @@ class ParallelCtx:
                 stack.enter_context(comm.recording(comm.recorder(name)))
             yield
 
-    def observe_program(self, name: str) -> bool:
+    def observe_program(self, name: str,
+                        elapsed_s: Optional[float] = None) -> bool:
         """Stage-2 feedback from ONE program's replay logs; True when any
-        share moved (the program's next signature lookup re-keys)."""
+        share moved (the program's next signature lookup re-keys).
+
+        ``elapsed_s`` is the executed step's measured wall-clock duration
+        (StepProgram measured mode).  Each communicator apportions it over
+        its OWN replay multiset — the balancer only compares relative
+        per-path times, so the tp and dp axes sharing one step's duration
+        does not bias either loop."""
         changed = False
         for comm in self.comms():
-            changed |= comm.observe_executed_step(comm.recorder(name))
+            changed |= comm.observe_executed_step(comm.recorder(name),
+                                                  elapsed_s=elapsed_s)
         return changed
+
+    def timing_kind(self) -> str:
+        """The active TimingSource kind: "measured" if ANY communicator
+        balances on wall-clock observation, else "sim" ("none" without
+        live communicators — single-device ctx)."""
+        kinds = {c.timing.kind for c in self.comms()}
+        if "measured" in kinds:
+            return "measured"
+        return "sim" if kinds else "none"
+
+    # -- TuningProfile warm-start plumbing (control/profile.py) ---------------
+
+    def save_tuning_profile(self, path: Optional[str] = None) -> int:
+        """Persist every communicator's converged Stage-1 shares to the
+        warm-start cache (``path`` overrides each config's
+        ``tuning_cache``).  Returns total entries recorded."""
+        return sum(c.save_tuning(path) for c in self.comms())
+
+    def tuning_status(self) -> Dict[str, Dict[str, object]]:
+        """Warm/cold Stage-1 provenance per axis per slot (dry-run and
+        loop reporting)."""
+        return {c.axis_name: c.tuning_status() for c in self.comms()}
 
     def plan_signature(self, program: Optional[str] = None) -> Tuple:
         """Frozen tuple of the communicators' current quantized plans —

@@ -36,7 +36,10 @@ from __future__ import annotations
 
 import contextlib
 import itertools
-from typing import Any, Callable, Dict, Tuple
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
 
 from repro.runtime.exec_cache import DEFAULT_CAPACITY, ExecutableCache
 
@@ -54,13 +57,23 @@ class StepProgram:
     """
 
     def __init__(self, builder: Callable[[], Callable], ctx, *,
-                 name: str = "", capacity: int = DEFAULT_CAPACITY):
+                 name: str = "", capacity: int = DEFAULT_CAPACITY,
+                 clock: Callable[[], float] = time.perf_counter):
         # auto-names are globally unique: two programs must never share a
         # recorder unless the caller explicitly aliases them by name.
         self.name = name or f"program-{next(_PROGRAM_IDS)}"
         self.ctx = ctx
         self._builder = builder
         self.cache = ExecutableCache(capacity)
+        # measured-feedback hook (control/timing.py): when any of the
+        # ctx's communicators runs a MeasuredTimingSource, every executed
+        # step is timed block-until-ready and the duration rides the next
+        # observe() into Stage 2.  ``clock`` is injectable so tests and
+        # benchmarks can force path skew deterministically.
+        self._clock = clock
+        self._measured = getattr(ctx, "timing_kind",
+                                 lambda: "sim")() == "measured"
+        self._last_elapsed_s: Optional[float] = None
         ctx.register_program(self.name)
 
     # -- lifecycle -------------------------------------------------------------
@@ -87,19 +100,34 @@ class StepProgram:
         fn = self.cache.get(self.signature())
         if fn is not None:
             with self.ctx.recording(self.name):
-                return fn(*args, **kwargs)
+                return self._timed(fn, args, kwargs)
         fn = self._builder()
         with self.ctx.recording(self.name):
-            out = fn(*args, **kwargs)
+            out = self._timed(fn, args, kwargs)
         self.cache.put(self.signature(), fn)
+        return out
+
+    def _timed(self, fn, args, kwargs):
+        """Run the step; in measured mode, wall-clock it block-until-ready
+        so observe() can feed the duration to the MeasuredTimingSource.
+        Sim mode stays zero-overhead (no forced host sync)."""
+        if not self._measured:
+            return fn(*args, **kwargs)
+        t0 = self._clock()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        self._last_elapsed_s = self._clock() - t0
         return out
 
     def observe(self) -> bool:
         """Stage-2 feedback for one executed step: replay THIS program's
-        recorded collectives into the balancers.  Returns True when a
-        share moved — no manual rebuild is needed; the next ``__call__``
-        sees a new signature and rebuilds (or re-uses) automatically."""
-        return self.ctx.observe_program(self.name)
+        recorded collectives into the balancers, along with the step's
+        measured wall-clock duration when measured timing is on.  Returns
+        True when a share moved — no manual rebuild is needed; the next
+        ``__call__`` sees a new signature and rebuilds (or re-uses)
+        automatically."""
+        elapsed, self._last_elapsed_s = self._last_elapsed_s, None
+        return self.ctx.observe_program(self.name, elapsed_s=elapsed)
 
     def step(self, *args, **kwargs):
         """Execute + observe in one call — the common host-loop tick."""

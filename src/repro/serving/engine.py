@@ -83,11 +83,18 @@ class ServeEngine:
                                              self.ctx, self.dcfg))
 
     def comm_report(self) -> Dict[str, object]:
-        """Per-axis FlexLink tuning + plan-cache stats for this engine,
-        plus its StepProgram's executable-cache stats."""
+        """Per-axis FlexLink tuning + plan-cache stats for this engine
+        (each axis block includes the active TimingSource kind and the
+        per-slot Stage-2 trajectory), plus its StepProgram's
+        executable-cache stats."""
         rep = dict(self.ctx.comm_report())
         rep["executable_cache"] = self._program.cache.report()
         return rep
+
+    def save_tuning(self, path: Optional[str] = None) -> int:
+        """Persist the engine's converged Stage-1 shares to the warm-start
+        TuningProfile (control/profile.py)."""
+        return self.ctx.save_tuning_profile(path)
 
     # -- client API -----------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 16,

@@ -25,6 +25,10 @@ class LoopConfig:
     log_every: int = 10
     ckpt_every: int = 0           # 0 = only final
     ckpt_dir: Optional[str] = None
+    #: TuningProfile path: when set, the loop persists every axis'
+    #: converged Stage-1 shares at the end so the next launch warm-starts
+    #: with zero Algorithm-1 iterations (control/profile.py).
+    tuning_cache: Optional[str] = None
 
 
 def run_loop(step: Union[StepProgram, Callable[[], Callable]],
@@ -69,6 +73,17 @@ def run_loop(step: Union[StepProgram, Callable[[], Callable]],
             log(f"executable cache: {ec['rebuilds']} rebuilds, "
                 f"{ec['hits']} hits, {ec['evictions']} evictions over "
                 f"{loop.total_steps} steps")
+            status = ctx.tuning_status()
+            if status:
+                warm = sum(s["warm"] for slots in status.values()
+                           for s in slots.values())
+                total = sum(len(slots) for slots in status.values())
+                log(f"stage-1 slots: {warm}/{total} warm-started "
+                    f"(timing source: {ctx.timing_kind()})")
+        if loop.tuning_cache:
+            n = ctx.save_tuning_profile(loop.tuning_cache)
+            if loop.log_every:
+                log(f"tuning profile: {n} slots -> {loop.tuning_cache}")
     finally:
         if owned:
             program.close()

@@ -139,6 +139,44 @@ def test_primary_reactivation_can_be_pinned_off():
     assert all(a.target == "rdma" for a in bal.adjustments)
 
 
+def test_trend_skips_sampleless_paths():
+    """A path with no samples in a full window (e.g. just re-activated)
+    must be skipped, not stall the whole trend (regression: trend()
+    returned None, freezing Stage 2 for a full window)."""
+    ev = Evaluator(window=5)
+    for _ in range(5):
+        ev.record({"pcie": 2.0, "rdma": 1.0})
+    assert ev.trend(["nvlink", "pcie", "rdma"]) == {"pcie": 2.0, "rdma": 1.0}
+    # still None while the window itself is not full
+    ev2 = Evaluator(window=5)
+    ev2.record({"pcie": 2.0})
+    assert ev2.trend(["pcie"]) is None
+
+
+def test_reactivated_primary_does_not_freeze_stage2():
+    """The freeze scenario end to end: the primary holds share again (a
+    reactivation) but the caller's timing feed has not started covering
+    it.  The balancer must keep adjusting over the sampled paths —
+    previously it froze for as long as the primary stayed sample-less."""
+    bal = LoadBalancer({"nvlink": 1, "pcie": 59, "rdma": 40}, "nvlink")
+    for _ in range(30):
+        bal.observe({"pcie": 5.0, "rdma": 1.0})     # no nvlink samples
+    assert bal.adjustments, "Stage 2 froze on the sample-less primary"
+    # moves keep prioritizing the (tracked, share-holding) primary
+    assert all(a.source == "pcie" and a.target == "nvlink"
+               for a in bal.adjustments)
+    assert sum(bal.shares.values()) == SHARE_GRID
+
+
+def test_single_sampled_path_makes_no_move():
+    """With <2 sampled paths there is no gap to compare — no adjustment
+    (and no crash) even though more paths are active."""
+    bal = LoadBalancer({"nvlink": 50, "pcie": 50}, "nvlink")
+    for _ in range(30):
+        bal.observe({"pcie": 5.0})                  # only one path sampled
+    assert not bal.adjustments
+
+
 def test_slow_primary_moves_to_fastest_secondary():
     """When the primary itself is slowest the move must go to the fastest
     path, never back to the source."""

@@ -124,6 +124,7 @@ def test_report_contains_prediction():
     rep = comm.report()
     cache = rep.pop("plan_cache")
     assert set(cache) >= {"hits", "misses", "retraces", "size"}
+    assert rep.pop("timing_source") == "sim"
     (key, entry), = rep.items()
     assert entry["predicted_algbw_GBps"] >= entry["nccl_algbw_GBps"] * 0.98
     assert entry["converged"]

@@ -32,3 +32,42 @@ def test_dryrun_cli_produces_valid_record(tmp_path, arch, shape):
     # axis attribution worked (no all-unknown structure)
     assert any("@model" in k or "@data" in k
                for k in rec["hlo_collective_structure"])
+
+
+def test_dryrun_warm_start_cycle(tmp_path):
+    """Acceptance: a cold dry-run saves its TuningProfile; a warm dry-run
+    pointed at it performs ZERO Stage-1 iterations on every slot
+    (--assert-warm makes the launcher itself enforce it)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    prof = str(tmp_path / "tuning.json")
+    base = [sys.executable, "-m", "repro.launch.dryrun", "--arch", "glm4-9b",
+            "--shape", "decode_32k", "--mesh", "single",
+            "--tuning-cache", prof]
+    cold = subprocess.run(base + ["--out", str(tmp_path / "cold")],
+                          env=env, capture_output=True, text=True,
+                          timeout=480)
+    assert cold.returncode == 0, cold.stdout + cold.stderr
+    warm = subprocess.run(base + ["--out", str(tmp_path / "warm"),
+                                  "--assert-warm"],
+                          env=env, capture_output=True, text=True,
+                          timeout=480)
+    assert warm.returncode == 0, warm.stdout + warm.stderr
+    tag = "glm4-9b__decode_32k__single__flexlink.json"
+    with open(tmp_path / "cold" / tag) as f:
+        rec_cold = json.load(f)
+    with open(tmp_path / "warm" / tag) as f:
+        rec_warm = json.load(f)
+    cold_slots = [s for ax in rec_cold["tuning"].values()
+                  for s in ax.values()]
+    warm_slots = [s for ax in rec_warm["tuning"].values()
+                  for s in ax.values()]
+    assert cold_slots and warm_slots
+    assert all(not s["warm"] and s["stage1_iters"] > 0 for s in cold_slots)
+    assert all(s["warm"] and s["stage1_iters"] == 0 for s in warm_slots)
+    # identical lowered collective structure: the warm shares reproduce
+    # the cold run's plans exactly
+    assert rec_warm["hlo_collective_structure"] == \
+        rec_cold["hlo_collective_structure"]
