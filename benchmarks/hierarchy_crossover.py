@@ -1,0 +1,85 @@
+"""Hierarchical vs flat-ring bandwidth across message sizes + node counts.
+
+The cluster subsystem's acceptance benchmark (DESIGN.md §9): for each
+node count, price the two-tier hierarchical schedule (intra flex
+reduce-scatter → NIC-tier flex all-reduce → intra flex all-gather, each
+tier's shares from Algorithm 1 against its own link pool) against the
+flat single ring spanning every rank — whose node-cut edges ride ONE
+rail at NIC latency on every synchronized step.  The flat ring wins the
+latency-bound small-message regime (one launch, no tier barriers); the
+hierarchy wins as soon as bandwidth matters, because only 1/m of the
+payload ever crosses the NIC tier and it crosses on ALL rails.  The
+crossover point per (collective, node count) is the headline number,
+emitted to ``BENCH_hierarchy.json`` for the CI artifact trail.
+
+Run:  PYTHONPATH=src python -m benchmarks.hierarchy_crossover \
+          --out BENCH_hierarchy.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.cluster import ClusterTimingModel, make_cluster
+from repro.core.simulator import MiB
+from repro.core.topology import Collective
+
+RANKS_PER_NODE = 8
+NODE_COUNTS = (2, 4, 8)
+SIZES_MIB = (0.25, 1, 4, 16, 64, 256)
+OPS = (Collective.ALL_REDUCE, Collective.ALL_GATHER)
+
+
+def run(csv_print=print, out: str = ""):
+    rows = []
+    crossover = {}
+    csv_print("op,n_nodes,MiB,hier_GBps,flat_GBps,winner")
+    for n in NODE_COUNTS:
+        topo = make_cluster("h800", n, nics_per_node=4, nic_gbit=400.0)
+        model = ClusterTimingModel(topo, RANKS_PER_NODE)
+        for op in OPS:
+            for mib in SIZES_MIB:
+                payload = mib * MiB
+                hier = model.algbw_GBps(op, payload,
+                                        schedule="hierarchical")
+                flat = model.algbw_GBps(op, payload, schedule="flat")
+                winner = "hier" if hier > flat else "flat"
+                rows.append({"op": op.value, "n_nodes": n, "MiB": mib,
+                             "hier_GBps": round(hier, 2),
+                             "flat_GBps": round(flat, 2),
+                             "winner": winner})
+                csv_print(f"{op.value},{n},{mib},{hier:.1f},{flat:.1f},"
+                          f"{winner}")
+            crossover[f"{op.value}@{n}nodes"] = model.crossover_bytes(op)
+    for key, b in sorted(crossover.items()):
+        csv_print(f"# crossover {key}: hierarchical wins from "
+                  f"{b / MiB:.2f} MiB" if b is not None else
+                  f"# crossover {key}: flat ring never beaten in range")
+    big = [r for r in rows if r["MiB"] == max(SIZES_MIB)]
+    assert all(r["winner"] == "hier" for r in big), \
+        "hierarchical schedule must win every large-message cell"
+    if out:
+        rec = {"ranks_per_node": RANKS_PER_NODE,
+               "cluster": "h800 + 4x400Gb rail-aligned NICs",
+               "rows": rows, "crossover_bytes": crossover}
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_hierarchy.json")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+    rows = run(out=args.out)
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print(f"hierarchy_crossover,{us:.0f},rows={len(rows)}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,8 +7,8 @@ import sys
 import time
 
 from benchmarks import (fig2_improvement, fig5_runtime, future_tree_allreduce,
-                        table1_idle_bw, table2_bandwidth, roofline_report,
-                        perf_hillclimb)
+                        hierarchy_crossover, table1_idle_bw,
+                        table2_bandwidth, roofline_report, perf_hillclimb)
 
 
 def main() -> None:
@@ -20,6 +20,7 @@ def main() -> None:
         ("roofline_report", roofline_report.run),
         ("perf_hillclimb", perf_hillclimb.run),
         ("future_tree_allreduce", future_tree_allreduce.run),
+        ("hierarchy_crossover", hierarchy_crossover.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -1,0 +1,43 @@
+"""repro.cluster — multi-node fabric model + two-tier hierarchical
+collectives (DESIGN.md §9).
+
+The node count as a first-class axis: a :class:`ClusterTopology` is N×
+one intra-node :class:`~repro.core.links.NodeProfile` plus an inter-node
+NIC tier (rail-aligned RDMA rails, cross-rail spine path, host TCP),
+itself expressed as a NodeProfile so the whole Stage-1/Stage-2 control
+plane applies per tier.  A :class:`ClusterCommunicator` composes one
+FlexCommunicator per tier into hierarchical AllReduce / AllGather /
+ReduceScatter — two-tier RoutePlans through the unchanged routing
+engine — and :class:`ClusterTimingModel` prices the hierarchy against
+the flat inter-node ring (``benchmarks/hierarchy_crossover.py``).
+
+``ClusterCommunicator`` is re-exported lazily: it pulls in the
+communicator stack (jax), while the topology/simulator halves stay
+importable as leaf modules.
+"""
+
+from repro.cluster.simulator import ClusterTimingModel, PHASE_SYNC_US
+from repro.cluster.topology import (ClusterTopology, cluster_for,
+                                    make_cluster, make_nic_tier,
+                                    nic_tier_name)
+
+_LAZY = ("ClusterCommunicator",)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.cluster import communicator
+        return getattr(communicator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "ClusterCommunicator",
+    "ClusterTimingModel",
+    "ClusterTopology",
+    "PHASE_SYNC_US",
+    "cluster_for",
+    "make_cluster",
+    "make_nic_tier",
+    "nic_tier_name",
+]

@@ -1,0 +1,152 @@
+"""ClusterCommunicator — two-tier hierarchical collectives (DESIGN.md §9).
+
+One :class:`~repro.core.communicator.FlexCommunicator` per fabric tier:
+the *intra* tier on the in-node mesh axis (the paper's FlexLink pool) and
+the *inter* tier on the node axis (the NIC pool of
+``cluster/topology.py``).  A cluster collective is a composition of
+ordinary flex collectives, one RoutePlan per tier, emitted through the
+same ``routing.execute`` engine — so the PlanCache / ``plan_signature()``
+/ ExecutableCache machinery of PRs 1–2 applies unchanged per tier, and
+each tier's SlotControllers run Stage-1/Stage-2 independently against
+their own link pool.
+
+Compositions (the Meta 100k-GPU / NCCL hierarchical forms):
+
+  all_reduce     : intra reduce_scatter → inter all_reduce on the 1/m
+                   shard → intra all_gather.  NIC bytes shrink from
+                   ~2B(N-1)/N to ~2B(n-1)/n of the per-rank payload —
+                   the whole point of the hierarchy.
+  all_gather     : intra all_gather (node block) → inter all_gather of
+                   the blocks; output is node-major, identical to the
+                   flat gather over (node, intra).
+  reduce_scatter : intra reduce_scatter → inter reduce_scatter; rank
+                   (node, i) ends with global segment ``i * n + node``
+                   (intra-major interleaved — the bandwidth-optimal
+                   order; the intra tier runs first so only 1/m of the
+                   payload ever crosses the NIC tier).
+
+Degenerate cases collapse structurally: with no inter tier (N=1) every
+call IS the intra communicator's call — same plans, same signatures
+(the parity test in tests/test_cluster.py); with no intra tier
+(1 rank/node) every call is a flat flex collective on the NIC tier.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster.topology import ClusterTopology
+from repro.control.slots import SlotController
+from repro.core.communicator import FlexCommunicator
+
+
+class ClusterCommunicator:
+    """Hierarchical collectives over (intra_axis × node_axis).
+
+    Not itself a FlexCommunicator: it owns one per tier and composes
+    them.  ``comms()`` exposes the live tier communicators so ctx-level
+    plumbing (program recorders, tuning profiles, reports) treats the
+    cluster as two ordinary communicators.
+    """
+
+    def __init__(self, topology: ClusterTopology,
+                 intra: Optional[FlexCommunicator],
+                 inter: Optional[FlexCommunicator]):
+        if intra is None and inter is None:
+            raise ValueError("cluster needs at least one live tier")
+        if inter is not None and inter.n_ranks != topology.n_nodes:
+            raise ValueError(
+                f"inter tier spans {inter.n_ranks} ranks but topology has "
+                f"{topology.n_nodes} nodes")
+        self.topology = topology
+        self.intra = intra
+        self.inter = inter
+
+    # -- structure -------------------------------------------------------------
+
+    @property
+    def hierarchical(self) -> bool:
+        """True when a collective actually decomposes into two tiers."""
+        return self.intra is not None and self.inter is not None
+
+    @property
+    def n_ranks(self) -> int:
+        m = self.intra.n_ranks if self.intra is not None else 1
+        n = self.inter.n_ranks if self.inter is not None else 1
+        return m * n
+
+    def comms(self) -> Tuple[FlexCommunicator, ...]:
+        return tuple(c for c in (self.intra, self.inter) if c is not None)
+
+    # -- collectives (call inside shard_map over both axes) --------------------
+
+    def all_reduce(self, x: jax.Array, accumulate=None) -> jax.Array:
+        if self.inter is None:
+            return self.intra.all_reduce(x, accumulate)
+        if self.intra is None:
+            return self.inter.all_reduce(x, accumulate)
+        m = self.intra.n_ranks
+        flat = x.reshape(-1)
+        pad = (-flat.shape[0]) % m
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        shard = self.intra.reduce_scatter(flat, accumulate)   # [L/m]
+        red = self.inter.all_reduce(shard, accumulate)
+        full = self.intra.all_gather(red, tiled=True)         # [L]
+        if pad:
+            full = full[:-pad]
+        return full.reshape(x.shape)
+
+    def all_gather(self, x: jax.Array, tiled: bool = True) -> jax.Array:
+        if self.inter is None:
+            return self.intra.all_gather(x, tiled=tiled)
+        if self.intra is None:
+            return self.inter.all_gather(x, tiled=tiled)
+        g = self.intra.all_gather(x, tiled=False)       # [m, *x]
+        g2 = self.inter.all_gather(g, tiled=False)      # [n, m, *x]
+        stacked = g2.reshape((self.n_ranks,) + x.shape)  # node-major
+        if not tiled:
+            return stacked
+        if x.ndim:
+            return stacked.reshape((self.n_ranks * x.shape[0],)
+                                   + x.shape[1:])
+        return stacked.reshape(-1)
+
+    def reduce_scatter(self, x: jax.Array, accumulate=None) -> jax.Array:
+        """Leading dim must divide m*n.  Rank (node, i) receives global
+        segment ``i * n_nodes + node`` (see module docstring)."""
+        if self.inter is None:
+            return self.intra.reduce_scatter(x, accumulate)
+        if self.intra is None:
+            return self.inter.reduce_scatter(x, accumulate)
+        if x.shape[0] % self.n_ranks != 0:
+            raise ValueError(
+                f"leading dim {x.shape[0]} must divide the cluster rank "
+                f"count {self.n_ranks}")
+        s1 = self.intra.reduce_scatter(x, accumulate)   # [lead/m, ...]
+        return self.inter.reduce_scatter(s1, accumulate)
+
+    # -- control-plane plumbing ------------------------------------------------
+
+    def plan_signature(self) -> Tuple:
+        return tuple((c.axis_name, c.plan_signature()) for c in self.comms())
+
+    def summary(self) -> Dict[str, object]:
+        """Topology + cross-tier rollup only — what ``ctx.comm_report()``
+        embeds, since it already carries each tier communicator's full
+        report under its axis key (duplicating them here would double
+        both the JSON and the per-slot describe() work)."""
+        return {
+            "topology": self.topology.describe(),
+            "rollup": SlotController.rollup(
+                sc for c in self.comms() for sc in c.slot_controllers()),
+        }
+
+    def report(self) -> Dict[str, object]:
+        """Standalone full report: per-tier blocks plus the summary."""
+        out = self.summary()
+        out["tiers"] = {c.profile.tier: c.report() for c in self.comms()}
+        return out

@@ -1,0 +1,163 @@
+"""Analytic two-tier timing — hierarchical vs flat inter-node ring.
+
+Extends the intra-node ``PathTimingModel`` to the cluster: one model per
+tier (the inter tier's profile carries its ``inter_hop_us`` switch cost),
+plus the composition arithmetic for the hierarchical schedules of
+``cluster/communicator.py`` and the flat single-ring baseline they are
+measured against (``benchmarks/hierarchy_crossover.py``).
+
+Cost model (per-rank payload B, m ranks/node, n nodes, N = m*n):
+
+* hierarchical all_reduce = t_intra(RS, m, B) + t_inter(AR, n, B_node)
+  + t_intra(AG, m, B/m) + 2 phase barriers, where B_node = B is the
+  *node-aggregate* payload crossing the NIC tier (m ranks each move a
+  B/m shard concurrently over the shared rails);
+* flat ring = one ring over all N ranks.  Every synchronized step
+  includes the node-cut edge, and that edge rides ONE rail (a rank's
+  egress is one NIC), so the flat ring pays per-rail bandwidth and
+  NIC-paced latency on all its steps — exactly why a flat ring spanning
+  nodes dies at scale (Meta 100k-GPU, PAPERS.md) and why the crossover
+  to hierarchical arrives as soon as bandwidth matters.
+
+Phase barriers are real: each tier hand-off is a full synchronization +
+kernel launch (``PHASE_SYNC_US``), which is what lets the flat ring win
+at small message sizes — the crossover the benchmark reports.
+
+Per-tier shares come from running Algorithm 1 against each tier's own
+model (``flex=True``) — the full FlexLink treatment per tier — or
+primary-only (``flex=False``) for the plain NCCL-shaped baselines.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.cluster.topology import ClusterTopology
+from repro.core.simulator import PathTimingModel
+from repro.core.topology import Collective
+from repro.core.tuner import initial_tune, measure_fn
+
+#: per tier hand-off: full-cluster synchronization + next-phase launch.
+PHASE_SYNC_US = 50.0
+
+
+class ClusterTimingModel:
+    """MeasurePathTimings oracle for one (topology, ranks-per-node)."""
+
+    def __init__(self, topology: ClusterTopology, ranks_per_node: int, *,
+                 secondary_algo: str = "ring"):
+        self.topology = topology
+        self.m = int(ranks_per_node)
+        self.intra = PathTimingModel(topology.node,
+                                     secondary_algo=secondary_algo)
+        self.inter = PathTimingModel(topology.nic_tier,
+                                     secondary_algo=secondary_algo)
+        self._shares: Dict[Tuple[str, Collective, int, int],
+                           Dict[str, float]] = {}
+
+    # -- per-tier costs --------------------------------------------------------
+
+    def _fractions(self, tier: str, op: Collective, n: int,
+                   payload: float, flex: bool) -> Dict[str, float]:
+        model = self.intra if tier == "intra" else self.inter
+        if not flex or n <= 1:
+            return {model.profile.primary.name: 1.0}
+        key = (tier, op, n, int(payload))
+        if key not in self._shares:
+            paths = [l.name for l in model.profile.links]
+            res = initial_tune(paths, model.profile.primary.name,
+                               measure_fn(model, op, n, payload))
+            self._shares[key] = res.fractions()
+        return self._shares[key]
+
+    def tier_time(self, tier: str, op: Collective, n: int,
+                  payload: float, *, flex: bool = True) -> float:
+        """One tier-local collective's completion time (s)."""
+        if n <= 1 or payload <= 0:
+            return 0.0
+        model = self.intra if tier == "intra" else self.inter
+        fr = self._fractions(tier, op, n, payload, flex)
+        return model.total_time(op, n, payload, fr)
+
+    # -- composed schedules ----------------------------------------------------
+
+    def hierarchical_time(self, op: Collective, payload_bytes: float, *,
+                          flex: bool = True) -> float:
+        """Completion time of the two-tier schedule for per-rank payload
+        ``payload_bytes`` (the compositions of cluster/communicator.py)."""
+        m, n = self.m, self.topology.n_nodes
+        if n <= 1:
+            return self.tier_time("intra", op, m, payload_bytes, flex=flex)
+        if m <= 1:
+            return self.tier_time("inter", op, n, payload_bytes, flex=flex)
+        B = payload_bytes
+        sync = PHASE_SYNC_US * 1e-6
+        if op is Collective.ALL_REDUCE:
+            return (self.tier_time("intra", Collective.REDUCE_SCATTER, m, B,
+                                   flex=flex)
+                    + self.tier_time("inter", Collective.ALL_REDUCE, n, B,
+                                     flex=flex)
+                    + self.tier_time("intra", Collective.ALL_GATHER, m,
+                                     B / m, flex=flex)
+                    + 2.0 * sync)
+        if op is Collective.ALL_GATHER:
+            # intra gather of the B shard, then the m*B node block crosses
+            # the NIC tier once per remote node
+            return (self.tier_time("intra", Collective.ALL_GATHER, m, B,
+                                   flex=flex)
+                    + self.tier_time("inter", Collective.ALL_GATHER, n,
+                                     m * B, flex=flex)
+                    + sync)
+        if op is Collective.REDUCE_SCATTER:
+            return (self.tier_time("intra", Collective.REDUCE_SCATTER, m, B,
+                                   flex=flex)
+                    + self.tier_time("inter", Collective.REDUCE_SCATTER, n,
+                                     B, flex=flex)
+                    + sync)
+        raise ValueError(f"no hierarchical schedule for {op}")
+
+    def flat_time(self, op: Collective, payload_bytes: float) -> float:
+        """The flat single-ring baseline spanning every rank.
+
+        All N ranks form one ring whose node-cut edges ride ONE rail
+        each; every synchronized step is paced by that edge, so the ring
+        runs at per-rail bandwidth with NIC step latency + switch hop on
+        each of its steps."""
+        m, n = self.m, self.topology.n_nodes
+        N = m * n
+        if N <= 1:
+            return 0.0
+        if n <= 1:
+            return self.tier_time("intra", op, N, payload_bytes, flex=False)
+        from repro.core.topology import RingSchedule
+        rail = self.topology.nic_tier.link("rail")
+        sched = RingSchedule(op, N)
+        per_rail_bw = rail.effective_GBps / self.topology.nics_per_node
+        step_us = rail.step_latency_us + self.topology.nic_tier.inter_hop_us
+        return (rail.fixed_overhead_us * 1e-6
+                + sched.steps * step_us * 1e-6
+                + sched.wire_bytes(payload_bytes) / (per_rail_bw * 1e9))
+
+    # -- derived ---------------------------------------------------------------
+
+    def algbw_GBps(self, op: Collective, payload_bytes: float, *,
+                   schedule: str = "hierarchical",
+                   flex: bool = True) -> float:
+        t = (self.hierarchical_time(op, payload_bytes, flex=flex)
+             if schedule == "hierarchical"
+             else self.flat_time(op, payload_bytes))
+        return (payload_bytes / t) / 1e9 if t > 0 else float("inf")
+
+    def crossover_bytes(self, op: Collective, *,
+                        lo: int = 1 << 12, hi: int = 1 << 30,
+                        flex: bool = True) -> Optional[int]:
+        """Smallest payload (bytes, log2 grid) where the hierarchical
+        schedule beats the flat ring; None if it never does in [lo, hi];
+        ``lo`` itself if it always does."""
+        b = lo
+        while b <= hi:
+            if (self.hierarchical_time(op, b, flex=flex)
+                    < self.flat_time(op, b)):
+                return b
+            b *= 2
+        return None

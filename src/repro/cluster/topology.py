@@ -1,0 +1,212 @@
+"""ClusterTopology — the multi-node fabric model (DESIGN.md §9).
+
+The paper's FlexLink is strictly intra-node: one H800 box whose NVLink /
+PCIe / RDMA links Algorithm 1 aggregates.  At production scale the box is
+the *inner* tier of a two-tier fabric — Meta's 100k-GPU stack composes
+every collective as intra-node fast fabric + inter-node NIC tier, and
+Blink builds a separate topology-aware schedule per tier (PAPERS.md).
+This module makes the node count a first-class axis:
+
+* a :class:`ClusterTopology` is N× one :class:`NodeProfile` (the intra
+  tier) plus an **inter-node NIC tier** expressed as a second
+  ``NodeProfile`` whose links are the cluster's aggregatable inter-node
+  routes: the rail-aligned RDMA rails (the tier's *primary* — NIC ``i``
+  of node ``a`` pairs with NIC ``i`` of node ``b``, no spine crossing),
+  the cross-rail path through the spine switch, and the frontend-NIC
+  host TCP path.  Expressing the tier as a NodeProfile is the point:
+  the whole Stage-1/Stage-2 machinery (tuner, SlotController,
+  PathTimingModel, TuningProfile) applies to it unchanged, keyed by the
+  tier profile's name;
+* ``flatten()`` is the N=1 view — the bare node profile — so every
+  existing single-node code path is the degenerate special case, not a
+  parallel implementation.
+
+Tier profiles are synthesized deterministically from their parameters and
+registered in ``links.PROFILES`` under ``<cluster>:nic``, so
+``CommConfig(profile=...)`` (and therefore communicator memoization and
+the persistent TuningProfile) work for the inter tier exactly as they do
+for a box.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple, Union
+
+from repro.core.links import (LinkKind, LinkSpec, NodeProfile, PROFILES,
+                              register_profile)
+
+#: inter-node tier constants (physically motivated, never fitted to any
+#: FlexLink result — same calibration discipline as links.py):
+#: rail-aligned RDMA write latency ~2us + per-step spine/switch hop 2us;
+#: the cross-rail path pays the spine and congestion; host TCP is the
+#: frontend NIC.  Effective payload fractions mirror the secondary-path
+#: discipline of the intra DB (achievable collective payload well under
+#: raw line rate).
+RAIL_STEP_US = 2.0
+RAIL_FIXED_US = 15.0
+RAIL_EFFICIENCY = 0.45          # effective / raw (bidirectional) for rails
+XRAIL_STEP_US = 6.0
+XRAIL_FIXED_US = 25.0
+XRAIL_EFFICIENCY = 0.30
+TCP_RAW_GBPS = 25.0             # 2x100Gb frontend NICs, bidirectional
+TCP_EFFECTIVE_GBPS = 6.0
+TCP_STEP_US = 20.0
+TCP_FIXED_US = 50.0
+INTER_HOP_US = 2.0              # per-ring-step switch traversal
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTopology:
+    """N homogeneous nodes + the NIC tier between them.
+
+    ``nic_tier`` is a synthetic :class:`NodeProfile` (``tier="inter"``)
+    whose primary is the rail-aligned NIC path; ``nics_per_node`` rails of
+    ``nic_gbit`` Gb/s each, rail-aligned across nodes when
+    ``rail_aligned`` (the pairing :meth:`rail_rings` describes).
+    """
+
+    name: str
+    node: NodeProfile
+    n_nodes: int
+    nic_tier: NodeProfile
+    nics_per_node: int
+    nic_gbit: float
+    rail_aligned: bool = True
+
+    def __post_init__(self):
+        if self.n_nodes < 1:
+            raise ValueError(f"n_nodes must be >= 1, got {self.n_nodes}")
+        if self.nics_per_node < 1:
+            raise ValueError("nics_per_node must be >= 1")
+
+    # -- views -----------------------------------------------------------------
+
+    def flatten(self) -> NodeProfile:
+        """The N=1 view: the bare intra-node profile.  Single-node code
+        paths run against this — the cluster is its strict superset."""
+        return self.node
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.n_nodes > 1
+
+    @property
+    def tiers(self) -> Tuple[str, ...]:
+        return ("intra", "inter") if self.hierarchical else ("intra",)
+
+    def tier_profile(self, tier: str) -> NodeProfile:
+        if tier == "intra":
+            return self.node
+        if tier == "inter":
+            return self.nic_tier
+        raise KeyError(f"unknown tier {tier!r} (intra|inter)")
+
+    def rail_rings(self) -> Dict[int, List[Tuple[int, int]]]:
+        """Rail-aligned NIC pairing: for each rail, the directed ring
+        edges (node a -> node b) that rail's NICs form across nodes.
+        Rail ``i`` of every node talks only to rail ``i`` of the next —
+        the pairing that keeps rail traffic off the spine switch.  With
+        ``rail_aligned=False`` every rail's edges are the same flat ring
+        (all traffic crosses the spine)."""
+        n = self.n_nodes
+        ring = [(a, (a + 1) % n) for a in range(n)] if n > 1 else []
+        return {rail: list(ring) for rail in range(self.nics_per_node)}
+
+    def describe(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "node_profile": self.node.name,
+            "n_nodes": self.n_nodes,
+            "nic_tier": self.nic_tier.name,
+            "nics_per_node": self.nics_per_node,
+            "nic_gbit": self.nic_gbit,
+            "rail_aligned": self.rail_aligned,
+            "tiers": list(self.tiers),
+        }
+
+
+def _gbits(gbps: float) -> float:
+    return gbps / 8.0
+
+
+def nic_tier_name(node_name: str, nics_per_node: int, nic_gbit: float,
+                  rail_aligned: bool = True) -> str:
+    """Deterministic tier-profile name: a pure function of EVERY parameter
+    the tier's constants derive from, shared by every process that builds
+    the same cluster (the TuningProfile and communicator memo keys depend
+    on it).  Non-rail-aligned tiers get their own name — their rail
+    bandwidth differs, so sharing a name would either collide at
+    registration or silently warm-start from the wrong fabric's shares."""
+    base = f"{node_name}:nic{nics_per_node}x{nic_gbit:g}"
+    return base if rail_aligned else base + ":spine"
+
+
+def make_nic_tier(node: NodeProfile, *, nics_per_node: int = 4,
+                  nic_gbit: float = 400.0,
+                  rail_aligned: bool = True) -> NodeProfile:
+    """Synthesize the inter-node tier profile for one NIC configuration.
+
+    Three aggregatable inter-node routes, mapping onto the same
+    (primary, staged, ortho) route slots the intra tier uses:
+
+      rail     : rail-aligned RDMA over all NICs in parallel — the tier's
+                 primary (no spine crossing when rail-aligned);
+      xrail    : cross-rail RDMA through the spine switch — extra hop
+                 latency, congestion-discounted bandwidth;
+      host_tcp : frontend-NIC TCP — slow, but idle during collectives.
+    """
+    raw = nics_per_node * _gbits(nic_gbit) * 2.0   # bidirectional GB/s
+    rail_eff = RAIL_EFFICIENCY if rail_aligned else XRAIL_EFFICIENCY
+    links = (
+        LinkSpec("rail", LinkKind.NIC_RAIL, raw_GBps=raw,
+                 effective_GBps=rail_eff * raw,
+                 step_latency_us=RAIL_STEP_US,
+                 fixed_overhead_us=RAIL_FIXED_US),
+        LinkSpec("xrail", LinkKind.RDMA, raw_GBps=raw,
+                 effective_GBps=XRAIL_EFFICIENCY * raw,
+                 step_latency_us=XRAIL_STEP_US,
+                 fixed_overhead_us=XRAIL_FIXED_US),
+        LinkSpec("host_tcp", LinkKind.DCN, raw_GBps=TCP_RAW_GBPS,
+                 effective_GBps=TCP_EFFECTIVE_GBPS,
+                 step_latency_us=TCP_STEP_US,
+                 fixed_overhead_us=TCP_FIXED_US),
+    )
+    return NodeProfile(name=nic_tier_name(node.name, nics_per_node,
+                                          nic_gbit, rail_aligned),
+                       links=links, tier="inter",
+                       inter_hop_us=INTER_HOP_US)
+
+
+def make_cluster(node: Union[str, NodeProfile], n_nodes: int, *,
+                 nics_per_node: int = 4, nic_gbit: float = 400.0,
+                 rail_aligned: bool = True,
+                 name: str = "") -> ClusterTopology:
+    """Build (and register the tier profiles of) one cluster topology.
+
+    ``node`` is a profile name from ``links.PROFILES`` or a NodeProfile.
+    The NIC tier profile is registered under a deterministic name so
+    ``CommConfig(profile=nic_tier.name)`` resolves in any process that
+    built the same cluster.
+    """
+    prof = PROFILES[node] if isinstance(node, str) else node
+    register_profile(prof)
+    nic = register_profile(make_nic_tier(prof, nics_per_node=nics_per_node,
+                                         nic_gbit=nic_gbit,
+                                         rail_aligned=rail_aligned))
+    return ClusterTopology(
+        name=name or f"{n_nodes}x{prof.name}",
+        node=prof, n_nodes=n_nodes, nic_tier=nic,
+        nics_per_node=nics_per_node, nic_gbit=nic_gbit,
+        rail_aligned=rail_aligned)
+
+
+def cluster_for(profile: str, n_nodes: int) -> ClusterTopology:
+    """Default cluster for one intra-node profile — what the launchers
+    synthesize for ``--nodes N`` when no named cluster is given.  GPU
+    boxes get the 4x400Gb rail config; the TPU profile gets a 2x200Gb
+    DCN-class tier."""
+    if profile.startswith("tpu"):
+        return make_cluster(profile, n_nodes, nics_per_node=2,
+                            nic_gbit=200.0)
+    return make_cluster(profile, n_nodes, nics_per_node=4, nic_gbit=400.0)

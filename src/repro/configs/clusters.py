@@ -1,0 +1,72 @@
+"""Named cluster topologies — the fabric-side registry (DESIGN.md §9).
+
+The arch configs in this package describe the *model*; these describe the
+*machine room*: N nodes of one ``links.NodeProfile`` plus their inter-node
+NIC tier (``repro.cluster.topology``).  Every entry is built through
+``make_cluster``, which registers the synthesized NIC-tier profile in
+``links.PROFILES`` — so selecting a cluster by name (``--cluster`` on the
+launchers) is all a process needs for the tier's CommConfig, simulator
+constants and TuningProfile keys to line up with any other process using
+the same cluster.
+
+Building an entry lazily (function, not module constant) keeps import
+side effects to the registrations actually requested.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.cluster.topology import ClusterTopology, make_cluster
+
+#: name -> builder.  The reference config is the paper's box scaled out:
+#: 2x/4x H800 nodes with 4 rail-aligned 400Gb NICs each; the TPU entry is
+#: the v5e profile behind a 2x200Gb DCN-class tier.
+_BUILDERS: Dict[str, Callable[[], ClusterTopology]] = {
+    "2xh800_rail4": lambda: make_cluster(
+        "h800", 2, nics_per_node=4, nic_gbit=400.0, name="2xh800_rail4"),
+    "4xh800_rail4": lambda: make_cluster(
+        "h800", 4, nics_per_node=4, nic_gbit=400.0, name="4xh800_rail4"),
+    "2xgb200_rail8": lambda: make_cluster(
+        "gb200", 2, nics_per_node=8, nic_gbit=400.0, name="2xgb200_rail8"),
+    "2xtpu_v5e_dcn": lambda: make_cluster(
+        "tpu_v5e", 2, nics_per_node=2, nic_gbit=200.0,
+        name="2xtpu_v5e_dcn"),
+    "4xtpu_v5e_dcn": lambda: make_cluster(
+        "tpu_v5e", 4, nics_per_node=2, nic_gbit=200.0,
+        name="4xtpu_v5e_dcn"),
+}
+
+CLUSTER_IDS: List[str] = sorted(_BUILDERS)
+
+_CACHE: Dict[str, ClusterTopology] = {}
+
+
+def get_cluster(name: str) -> ClusterTopology:
+    """Resolve one named cluster (building + registering it on first use)."""
+    if name not in _BUILDERS:
+        raise KeyError(
+            f"unknown cluster {name!r}; known: {', '.join(CLUSTER_IDS)}")
+    if name not in _CACHE:
+        _CACHE[name] = _BUILDERS[name]()
+    return _CACHE[name]
+
+
+def all_clusters() -> Dict[str, ClusterTopology]:
+    return {n: get_cluster(n) for n in CLUSTER_IDS}
+
+
+def resolve_cluster(cluster_name: str, nodes: int):
+    """Shared launcher logic: (ClusterTopology | None, effective nodes).
+
+    ``nodes <= 0`` means the flag was not given (launchers default
+    ``--nodes`` to 0): a named cluster then implies its node count —
+    silently running it single-node would report a hierarchy that never
+    lowered.  An EXPLICIT ``--nodes`` always wins: ``--nodes 1`` with a
+    cluster is a deliberate flat run on the cluster's node type, and an
+    explicit multi-node count must match the topology (the ParallelCtx
+    validation enforces it)."""
+    if not cluster_name:
+        return None, max(nodes, 1)
+    cluster = get_cluster(cluster_name)
+    return cluster, (nodes if nodes > 0 else cluster.n_nodes)

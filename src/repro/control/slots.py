@@ -13,22 +13,35 @@ arithmetic.  A SlotController owns one slot end to end:
 * measured-mode *probe* moves: from a converged Stage-1 split the
   per-path estimates are near-equal, so a wall-clock-fed balancer would
   never see a gap and never learn.  After ``probe_period`` gap-free calls
-  the controller moves one grid unit from a rotating active secondary to
-  the primary (the paper's NVLink-first rule); the resulting share delta
+  the controller moves share from a rotating active secondary to the
+  primary (the paper's NVLink-first rule); the resulting share delta
   gives MeasuredTimingSource the finite-difference sample it needs, and a
   wrong probe decays harmlessly (the drained path's rate estimate falls,
   the balancer routes share back).  Probes are recorded as ``kind="probe"``
   adjustments so reports can tell exploration from reaction.
+
+  Probes are **quantization-aware** when the owner supplies a
+  ``plan_quantizer`` (the communicator does): SHARE_GRID is finer than
+  the RoutePlan chunk grid, so a 1-unit probe usually rounds away — the
+  executed plan never changes and the wall-clock loop measures nothing.
+  The probe is therefore *snapped to the plan grain*: promoted to the
+  smallest move that flips the quantized plan, or skipped entirely when
+  the source path cannot afford a whole grain step (a sub-grain probe
+  would burn an adjustment without producing a sample).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence
 
 from repro.core.balancer import Adjustment, LoadBalancer
 from repro.core.tuner import MeasureFn, SHARE_GRID, TuneResult, initial_tune
 from repro.core.topology import Collective
+
+#: maps grid-unit shares -> the quantized plan identity (any hashable);
+#: two share vectors with equal quantizations execute the same RoutePlan.
+PlanQuantizer = Callable[[Mapping[str, int]], object]
 
 #: measured-mode exploration cadence: gap-free calls before a probe move.
 PROBE_PERIOD = 40
@@ -47,24 +60,42 @@ class SlotController:
     balancer: LoadBalancer
     warm: bool = False
     probe_period: Optional[int] = None
+    #: which cluster fabric tier this slot balances ("intra" | "inter") —
+    #: reporting rolls slots up per tier (DESIGN.md §9).
+    tier: str = "intra"
+    #: share-vector -> quantized-plan identity; when set, probe moves are
+    #: snapped to the plan grain (see module docstring).
+    plan_quantizer: Optional[PlanQuantizer] = None
     _since_gap: int = 0
     _probe_idx: int = 0
+    #: memo for _probe_units: (source, target, shares-state) -> units.
+    #: The snapping search rebuilds plans per candidate move; shares only
+    #: change on an adjustment, so recomputing every probe_period calls
+    #: of a steady slot would be pure waste.
+    _probe_memo: Optional[tuple] = None
 
     # -- construction ---------------------------------------------------------
 
     @classmethod
     def tune_cold(cls, op: Collective, bucket: int, paths: Sequence[str],
                   primary: str, measure: MeasureFn, *,
-                  probe_period: Optional[int] = None) -> "SlotController":
+                  probe_period: Optional[int] = None,
+                  tier: str = "intra",
+                  plan_quantizer: Optional[PlanQuantizer] = None
+                  ) -> "SlotController":
         """Run Algorithm 1 for the slot — the paper's profiling phase."""
         res = initial_tune(list(paths), primary, measure)
         return cls(op, bucket, res, LoadBalancer(res.shares, primary),
-                   warm=False, probe_period=probe_period)
+                   warm=False, probe_period=probe_period, tier=tier,
+                   plan_quantizer=plan_quantizer)
 
     @classmethod
     def warm_start(cls, op: Collective, bucket: int,
                    shares: Mapping[str, int], primary: str, *,
-                   probe_period: Optional[int] = None) -> "SlotController":
+                   probe_period: Optional[int] = None,
+                   tier: str = "intra",
+                   plan_quantizer: Optional[PlanQuantizer] = None
+                   ) -> "SlotController":
         """Adopt converged shares from a TuningProfile: zero Algorithm-1
         iterations, identical downstream RoutePlans (plans are a pure
         function of the shares)."""
@@ -73,7 +104,8 @@ class SlotController:
                          active=[p for p, s in shares.items() if s > 0],
                          iterations=0, converged=True, trace=[])
         return cls(op, bucket, res, LoadBalancer(res.shares, primary),
-                   warm=True, probe_period=probe_period)
+                   warm=True, probe_period=probe_period, tier=tier,
+                   plan_quantizer=plan_quantizer)
 
     # -- control-state views --------------------------------------------------
 
@@ -110,9 +142,39 @@ class SlotController:
             return None
         source = candidates[self._probe_idx % len(candidates)]
         self._probe_idx += 1
+        units = self._probe_units(source, bal.primary)
+        if units <= 0:
+            return None   # sub-grain probe: would round away — skip
         # the balancer validates the move (tracked paths, non-negativity,
         # the primary-reactivation pin) — probes get no special rights
-        return bal.move(source, bal.primary, 1, kind="probe")
+        return bal.move(source, bal.primary, units, kind="probe")
+
+    def _probe_units(self, source: str, target: str) -> int:
+        """Snap the probe delta to the RoutePlan quantization grain.
+
+        Without a quantizer: the historical 1-unit move.  With one: the
+        smallest move that CHANGES the quantized plan (so the executed
+        RoutePlan flips and the measured loop gets its finite-difference
+        sample), or 0 when even draining the source entirely would not —
+        the regression contract: a sub-grain probe is either skipped or
+        promoted to one grain step, never executed as a no-op."""
+        if self.plan_quantizer is None:
+            return 1
+        shares = dict(self.balancer.shares)
+        key = (source, target, tuple(sorted(shares.items())))
+        if self._probe_memo is not None and self._probe_memo[0] == key:
+            return self._probe_memo[1]
+        base = self.plan_quantizer(shares)
+        units = 0
+        for k in range(1, shares.get(source, 0) + 1):
+            cand = dict(shares)
+            cand[source] -= k
+            cand[target] = cand.get(target, 0) + k
+            if self.plan_quantizer(cand) != base:
+                units = k
+                break
+        self._probe_memo = (key, units)
+        return units
 
     # -- reporting -------------------------------------------------------------
 
@@ -127,6 +189,7 @@ class SlotController:
     def describe(self, model, n_ranks: int) -> Dict[str, object]:
         """The per-slot block of ``FlexCommunicator.report()``."""
         return {
+            "tier": self.tier,
             "stage1_shares": self.tuned.shares,
             "stage1_iters": self.tuned.iterations,
             "converged": self.tuned.converged,
@@ -134,6 +197,7 @@ class SlotController:
             "current_shares": dict(self.balancer.shares),
             "stage2_adjustments": len(self.balancer.adjustments),
             "stage2_history": self.history(),
+            "evaluator": self.balancer.evaluator.describe(),
             "predicted_algbw_GBps": model.algbw_GBps(
                 self.op, n_ranks, self.bucket, self.balancer.fractions()),
             "nccl_algbw_GBps": model.nccl_baseline_GBps(
@@ -144,3 +208,22 @@ class SlotController:
         """Warm/cold provenance for dry-run reporting."""
         return {"warm": self.warm, "stage1_iters": self.tuned.iterations,
                 "converged": self.tuned.converged}
+
+    @staticmethod
+    def rollup(slots: Iterable["SlotController"]) -> Dict[str, Dict[str, int]]:
+        """Per-tier summary of many slots — the compact block that keeps
+        ``report()`` readable once a cluster runs 2 tiers x N slots: one
+        row per tier instead of a wall of per-slot dicts (the per-slot
+        detail stays available underneath)."""
+        out: Dict[str, Dict[str, int]] = {}
+        for sc in slots:
+            row = out.setdefault(sc.tier, {
+                "slots": 0, "warm": 0, "converged": 0,
+                "stage2_adjustments": 0, "probes": 0})
+            row["slots"] += 1
+            row["warm"] += int(sc.warm)
+            row["converged"] += int(sc.tuned.converged)
+            row["stage2_adjustments"] += len(sc.balancer.adjustments)
+            row["probes"] += sum(1 for a in sc.balancer.adjustments
+                                 if a.kind == "probe")
+        return out

@@ -70,6 +70,10 @@ class Evaluator:
                 out[p] = statistics.median(vals)
         return out
 
+    def describe(self) -> Dict[str, int]:
+        """Window occupancy for reporting (SlotController.describe)."""
+        return {"window": self.window, "samples": len(self._history)}
+
 
 class LoadBalancer:
     """Periodically rebalances shares based on the Evaluator's trend."""

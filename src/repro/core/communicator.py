@@ -303,32 +303,57 @@ class FlexCommunicator:
     def _balancers(self) -> Dict[Tuple[Collective, int], LoadBalancer]:
         return {k: s.balancer for k, s in self._slots.items()}
 
+    def _plan_units(self, op: Collective,
+                    shares: Mapping[str, int]) -> Tuple:
+        """Quantized-plan identity of grid-unit ``shares`` (keyed by LINK
+        name): mirrors ``build_plan``'s share→chunk_units mapping, so the
+        slot's probe snapping (control/slots.py) compares exactly what the
+        data plane would execute.  (The bucket-dependent staged pipeline
+        depth is not part of this identity — a probe that changes only the
+        depth still re-keys the plan, it just probes one grain further.)"""
+        routed = {self.route_of(p): u for p, u in shares.items()}
+        plan = routing.build_plan(op, self.axis_name, routed, self.ortho_name)
+        return plan.chunk_units
+
+    def slot_controllers(self) -> Tuple[SlotController, ...]:
+        """Every tuned slot's controller — the public surface for
+        cross-communicator reporting (e.g. the cluster rollup)."""
+        return tuple(self._slots.values())
+
     def slot(self, op: Collective, bucket: int) -> SlotController:
         """The SlotController for one (op, size-bucket); created on first
         use — warm from the TuningProfile when it has a matching entry,
-        else by running Algorithm 1 cold."""
+        else by running Algorithm 1 cold.  Each slot carries its fabric
+        tier (the profile's — "inter" on a cluster's NIC-tier
+        communicator) and the plan quantizer that snaps measured-mode
+        probes to the RoutePlan grain."""
         key = (op, bucket)
         sc = self._slots.get(key)
         if sc is not None:
             return sc
         primary = self.profile.primary.name
         probe = PROBE_PERIOD if self.timing.kind == "measured" else None
+        quantizer = lambda shares, _op=op: self._plan_units(_op, shares)  # noqa: E731
         if self.config.backend == "nccl" or self.n_ranks <= 1:
             sc = SlotController.tune_cold(
                 op, bucket, [primary], primary,
-                self.timing.stage1_measure(op, self.n_ranks, bucket))
+                self.timing.stage1_measure(op, self.n_ranks, bucket),
+                tier=self.profile.tier)
         else:
             saved = self._profile_store.lookup(
                 self.config.profile, self.config.secondary_algo, op,
                 self.n_ranks, bucket, SHARE_GRID)
             if saved is not None and set(saved) <= set(self.path_names):
                 sc = SlotController.warm_start(op, bucket, saved, primary,
-                                               probe_period=probe)
+                                               probe_period=probe,
+                                               tier=self.profile.tier,
+                                               plan_quantizer=quantizer)
             else:
                 sc = SlotController.tune_cold(
                     op, bucket, list(self.path_names), primary,
                     self.timing.stage1_measure(op, self.n_ranks, bucket),
-                    probe_period=probe)
+                    probe_period=probe, tier=self.profile.tier,
+                    plan_quantizer=quantizer)
         self._slots[key] = sc
         return sc
 
@@ -507,6 +532,8 @@ class FlexCommunicator:
         for (op, bucket), sc in self._slots.items():
             out[f"{op.value}@{bucket}"] = sc.describe(self.model,
                                                       self.n_ranks)
+        out["tier"] = self.profile.tier
+        out["rollup"] = SlotController.rollup(self._slots.values())
         out["timing_source"] = self.timing.kind
         out["plan_cache"] = self.plan_cache.report()
         if self._recorders:

@@ -30,11 +30,17 @@ class LinkKind(enum.Enum):
     ICI_ORTHO = "ici_ortho"    # TPU: idle orthogonal-axis torus links
     HOST_PCIE = "host_pcie"    # TPU: chip<->host DMA
     DCN = "dcn"                # TPU: pod-axis data-center network
+    NIC_RAIL = "nic_rail"      # inter-node tier: rail-aligned RDMA NICs —
+    #                            the primary fabric of the NIC tier
+    #                            (repro.cluster, DESIGN.md §9)
 
 
 #: Link kinds that count as the "primary" path (NVLink-centric logic in
-#: Algorithm 1 favors these).
-PRIMARY_KINDS = frozenset({LinkKind.NVLINK, LinkKind.ICI_PRIMARY})
+#: Algorithm 1 favors these).  NIC_RAIL is the primary of the *inter-node*
+#: tier: within that tier the rail-aligned rails play the role NVLink plays
+#: inside the box.
+PRIMARY_KINDS = frozenset({LinkKind.NVLINK, LinkKind.ICI_PRIMARY,
+                           LinkKind.NIC_RAIL})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,13 +80,26 @@ class LinkSpec:
 
 @dataclasses.dataclass(frozen=True)
 class NodeProfile:
-    """A machine profile: the set of aggregatable links + contention rule."""
+    """A machine profile: the set of aggregatable links + contention rule.
+
+    A profile can describe either fabric *tier* of a cluster
+    (``repro.cluster``, DESIGN.md §9): ``tier="intra"`` is one box's link
+    pool (the seed meaning — every pre-cluster profile), ``tier="inter"``
+    is the NIC tier between boxes, whose "primary" is the rail-aligned
+    NIC path.  ``inter_hop_us`` is the extra per-ring-step latency an
+    inter-node hop pays for switch traversal — zero inside a box.
+    """
 
     name: str
     links: Tuple[LinkSpec, ...]
     #: bandwidth ceiling (GB/s, unidirectional payload) for all routes with
     #: ``shares_pcie_switch=True`` together; None = no contention.
     pcie_switch_ceiling_GBps: Optional[float] = None
+    #: which cluster tier this profile describes: "intra" | "inter".
+    tier: str = "intra"
+    #: per-ring-step switch-traversal latency (us) added by the timing
+    #: model on every step — the inter-node hop cost (simulator.py).
+    inter_hop_us: float = 0.0
 
     def link(self, name: str) -> LinkSpec:
         for l in self.links:
@@ -222,6 +241,27 @@ TPU_V5E = NodeProfile(
 PROFILES: Dict[str, NodeProfile] = {
     p.name: p for p in (H800, H100, A800, GB200, GB300, TPU_V5E)
 }
+
+
+def register_profile(profile: NodeProfile) -> NodeProfile:
+    """Add a (possibly synthesized) profile to the DB under its name.
+
+    Idempotent for an equal re-registration — cluster tier profiles are
+    synthesized deterministically from their parameters (repro.cluster),
+    so re-building the same cluster must resolve to the same entry; a
+    *conflicting* re-use of a name is an error, because ``CommConfig``
+    refers to profiles by name and silent replacement would re-key
+    memoized communicators.
+    """
+    existing = PROFILES.get(profile.name)
+    if existing is not None:
+        if existing != profile:
+            raise ValueError(
+                f"profile name {profile.name!r} already registered with "
+                f"different parameters")
+        return existing
+    PROFILES[profile.name] = profile
+    return profile
 
 
 def idle_bw_opportunity(profile: NodeProfile) -> float:

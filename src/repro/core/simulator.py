@@ -169,13 +169,16 @@ class PathTimingModel:
             # Table-2 calibration only applies to the machine it came from.
             fit = _fit_primary(op, n) if self.profile.name == "h800" else None
             if fit is None:
-                # No baseline row (e.g. reduce_scatter, or TPU profile):
-                # fall back to hardware-DB constants.
+                # No baseline row (e.g. reduce_scatter, or TPU profile, or
+                # a cluster NIC tier): fall back to hardware-DB constants.
+                # Inter-node profiles pay the switch-traversal hop on every
+                # ring step (links.NodeProfile.inter_hop_us).
                 link = self.profile.primary
                 sched = RingSchedule(op, n)
+                step_us = link.step_latency_us + self.profile.inter_hop_us
                 fit = CalibratedPrimary(
                     link.effective_GBps,
-                    sched.steps * link.step_latency_us * 1e-6
+                    sched.steps * step_us * 1e-6
                     + link.fixed_overhead_us * 1e-6)
             self._primary_fit[key] = fit
         return self._primary_fit[key]
@@ -204,7 +207,10 @@ class PathTimingModel:
             lat *= AR_STEP_PENALTY
         elif op is Collective.REDUCE_SCATTER:
             lat *= RS_STEP_PENALTY
-        return lat
+        # inter-node tiers add a fixed switch-traversal hop per step — it
+        # does not scale with the ring size (one spine crossing per step,
+        # regardless of how many NIC handoffs synchronize behind it).
+        return lat + self.profile.inter_hop_us * 1e-6
 
     # -- per-path timing -----------------------------------------------------
     def path_time(self, link_name: str, op: Collective, n_ranks: int,

@@ -22,10 +22,8 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("acc_dtype",))
-def accumulate(a: jax.Array, b: jax.Array, *, acc_dtype=jnp.float32):
-    """Ring-step accumulate for arbitrary-shaped chunks (pads to tiles)."""
-    assert a.shape == b.shape and a.dtype == b.dtype
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _accumulate(a: jax.Array, b: jax.Array, acc_dtype):
     n = a.size
     cols = _ca.LANE
     rows = -(-n // cols)
@@ -36,6 +34,28 @@ def accumulate(a: jax.Array, b: jax.Array, *, acc_dtype=jnp.float32):
     out = _ca.chunk_accumulate_2d(af, bf, acc_dtype=acc_dtype,
                                   interpret=_interpret())
     return out.reshape(-1)[:n].reshape(a.shape)
+
+
+def _accumulate_fwd(a, b, acc_dtype):
+    return _accumulate(a, b, acc_dtype), None
+
+
+def _accumulate_bwd(acc_dtype, _res, g):
+    # d(a + b)/da = d(a + b)/db = identity: the cotangent passes through
+    # to both operands exactly.  Without this VJP the raw pallas_call is
+    # opaque to AD, and any differentiated collective on the staged ring
+    # (every bf16-param train step under ACC_AUTO) fails to lower.
+    return g, g
+
+
+_accumulate.defvjp(_accumulate_fwd, _accumulate_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("acc_dtype",))
+def accumulate(a: jax.Array, b: jax.Array, *, acc_dtype=jnp.float32):
+    """Ring-step accumulate for arbitrary-shaped chunks (pads to tiles)."""
+    assert a.shape == b.shape and a.dtype == b.dtype
+    return _accumulate(a, b, acc_dtype)
 
 
 def ring_accumulate_fn(acc_dtype=jnp.float32):

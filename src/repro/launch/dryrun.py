@@ -16,7 +16,8 @@ import numpy as np       # noqa: E402
 from repro.configs import ALIASES, ARCH_IDS, get_config       # noqa: E402
 from repro.core.communicator import CommConfig                # noqa: E402
 from repro.launch import shapes as SH                         # noqa: E402
-from repro.launch.mesh import make_production_mesh, mesh_dims  # noqa: E402
+from repro.launch.mesh import (make_production_mesh, mesh_dims,
+                               mesh_nodes)                     # noqa: E402
 from repro.launch.steps import (build_prefill_program, build_serve_program,
                                 build_train_program, eval_shape_opt_state,
                                 eval_shape_params)             # noqa: E402
@@ -39,18 +40,50 @@ def _sds_batch(cfg, shape, mesh):
     return SH.input_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
 
 
+def default_node_split(nodes: int):
+    """(data, model) split for an N-node mesh with no --mesh-split: the
+    largest power-of-two pod slice that fits the 512 forced CPU devices
+    (nodes * d * m <= 512), model axis first up to the production 16."""
+    budget = max(512 // max(nodes, 1), 1)
+    m = min(budget, 16)
+    return (max(budget // m, 1), m)
+
+
+def node_layout(nodes: int, mesh_split):
+    """The (data, model) split an N-node run uses — ONE derivation shared
+    by run_one (which builds the mesh from it) and main (which names the
+    result-cache file from it), so the cache tag can never describe a
+    different layout than the one that actually ran."""
+    return (tuple(mesh_split) if mesh_split is not None
+            else default_node_split(nodes))
+
+
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             backend: str = "flexlink", mesh_split=None,
             remat=True, variant: str = "",
-            tuning_cache: str = "", secondary_algo: str = "ring") -> dict:
+            tuning_cache: str = "", secondary_algo: str = "ring",
+            nodes: int = 1, cluster_name: str = "") -> dict:
     """mesh_split: optional (data, model) reshape of the 256-chip pod —
     the TP-degree tuning lever of EXPERIMENTS §Perf.  remat: True | False |
     "dots" (selective checkpointing).  tuning_cache: TuningProfile JSON —
     Stage-1 shares warm-start from it and are saved back after lowering,
-    so a later dry-run (or live launch) skips the profiling phase."""
+    so a later dry-run (or live launch) skips the profiling phase.
+    nodes > 1 prepends a simulated "node" axis (repro.cluster): the step
+    lowers the two-tier hierarchical gradient sync and the NIC tier's
+    slots tune (and warm-start) like any other."""
     cfg = get_config(arch)
     shape = SH.SHAPES[shape_name]
-    if mesh_split is not None and not multi_pod:
+    from repro.configs.clusters import resolve_cluster
+    cluster, nodes = resolve_cluster(cluster_name, nodes)
+    if nodes > 1:
+        if multi_pod:
+            raise ValueError("--nodes does not combine with the multi-pod "
+                             "mesh (pick one outer axis)")
+        from repro.launch.mesh import make_cluster_mesh
+        split = node_layout(nodes, mesh_split)
+        mesh = make_cluster_mesh(nodes, *split)
+        mesh_name = f"nodes{nodes}x{split[0]}x{split[1]}"
+    elif mesh_split is not None and not multi_pod:
         import jax as _jax
         mesh = _jax.make_mesh(tuple(mesh_split), ("data", "model"))
         mesh_name = f"single{mesh_split[0]}x{mesh_split[1]}"
@@ -62,7 +95,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     # any Stage-2 replay log (plan_for skips the append), and the differing
     # config fields give the dry-run its own memoized communicator; the tag
     # just makes the isolation intent explicit in the registry key.
-    comm = CommConfig(backend=backend, profile="tpu_v5e",
+    # A named cluster sets the intra profile: its node type IS the machine
+    # the run models (the ParallelCtx cross-check would reject a mismatch).
+    comm = CommConfig(backend=backend,
+                      profile=cluster.node.name if cluster else "tpu_v5e",
                       runtime_balancing=False, tag="dryrun",
                       tuning_cache=tuning_cache,
                       secondary_algo=secondary_algo)
@@ -81,16 +117,19 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             # training/serving runs.
             if shape.kind == "train":
                 prog, ctx = build_train_program(cfg, mesh, comm=comm,
-                                                shape=shape, remat=remat)
+                                                shape=shape, remat=remat,
+                                                cluster=cluster)
                 opt_sds = eval_shape_opt_state(params_sds)
                 lowered = prog.lower(params_sds, opt_sds, batch_sds)
             elif shape.kind == "prefill":
                 prog, ctx = build_prefill_program(cfg, mesh, comm=comm,
-                                                  shape=shape)
+                                                  shape=shape,
+                                                  cluster=cluster)
                 lowered = prog.lower(params_sds, batch_sds)
             else:
                 prog, ctx, dcfg = build_serve_program(cfg, mesh, shape,
-                                                      comm=comm)
+                                                      comm=comm,
+                                                      cluster=cluster)
                 lowered = prog.lower(params_sds, batch_sds["cache"],
                                      batch_sds["token"], batch_sds["pos"])
             t_lower = time.time() - t0
@@ -136,8 +175,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                                          HBM_BW, ICI_BW)
     from repro.roofline.analytic import cost_model
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
-    cm = cost_model(cfg, shape, tp=tp, dp=dp, pods=pods, backend=backend,
-                    remat=remat)
+    # the node axis is an outer data-parallel dimension for the analytic
+    # cost model (its collective bytes ride the NIC tier, not ICI)
+    cm = cost_model(cfg, shape, tp=tp, dp=dp * mesh_nodes(mesh), pods=pods,
+                    backend=backend, remat=remat)
     t_compute = cm.flops_total / (chips * PEAK_FLOPS)
     t_memory = cm.hbm_bytes / (chips * HBM_BW)
     t_collective = cm.collective_bytes / (chips * ICI_BW)
@@ -205,6 +246,14 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh-split", default="",
                     help="d,m reshape of the single pod (e.g. 2,4) — "
                          "small splits make CI smoke runs cheap")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="simulated node count: prepends a 'node' axis "
+                         "(repro.cluster) so the step lowers the two-tier "
+                         "hierarchical gradient sync; combine with "
+                         "--mesh-split to keep smoke runs cheap")
+    ap.add_argument("--cluster", default="",
+                    help="named cluster topology from configs/clusters.py "
+                         "(default: synthesized from the tpu_v5e profile)")
     ap.add_argument("--tuning-cache", default="",
                     help="TuningProfile JSON: warm-start Stage-1 and save "
                          "the converged shares back after lowering")
@@ -216,6 +265,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     mesh_split = (tuple(int(x) for x in args.mesh_split.split(","))
                   if args.mesh_split else None)
+    from repro.configs.clusters import resolve_cluster
+    _, nodes = resolve_cluster(args.cluster, args.nodes)
 
     pairs = []
     archs = sorted(ALIASES) if args.all else [args.arch]
@@ -232,6 +283,16 @@ def main(argv=None) -> int:
     checked_slots = 0
     for arch, shape_name, mesh_name in pairs:
         tag = f"{arch}__{shape_name}__{mesh_name}__{args.backend}"
+        if nodes > 1:
+            # encode the full layout (base mesh, node count, split, named
+            # cluster) so runs differing in ANY of them never share a
+            # cache file
+            split = node_layout(nodes, mesh_split)
+            extra = f"nodes{nodes}x{split[0]}x{split[1]}"
+            if args.cluster:
+                extra += f"-{args.cluster}"
+            tag = (f"{arch}__{shape_name}__{mesh_name}-{extra}__"
+                   f"{args.backend}")
         path = os.path.join(args.out, tag + ".json")
         if os.path.exists(path):
             print(f"[skip] {tag} (cached)")
@@ -241,7 +302,8 @@ def main(argv=None) -> int:
             rec = run_one(arch, shape_name, mesh_name == "multi",
                           args.backend, mesh_split=mesh_split,
                           tuning_cache=args.tuning_cache,
-                          secondary_algo=args.secondary_algo)
+                          secondary_algo=args.secondary_algo,
+                          nodes=nodes, cluster_name=args.cluster)
         except Exception as e:
             traceback.print_exc()
             rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,

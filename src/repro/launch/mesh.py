@@ -3,6 +3,9 @@
 Single pod: (16, 16) = 256 chips, axes ("data", "model").
 Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
 pod axis crosses DCN.
+Multi-node: (N, d, m), axes ("node", "data", "model") — the node axis
+crosses the cluster's NIC tier (repro.cluster, DESIGN.md §9); on CPU it
+is simulated by mesh reshape exactly like ``--mesh-split``.
 
 Functions, not module-level constants: importing this module never touches
 jax device state (the dry-run sets XLA_FLAGS before any jax init).
@@ -31,8 +34,18 @@ def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def make_cluster_mesh(nodes: int, dp: int, tp: int):
+    """Simulated multi-node mesh: ("node", "data", "model")."""
+    return jax.make_mesh((nodes, dp, tp), ("node", "data", "model"))
+
+
 def mesh_dims(mesh) -> Tuple[int, int, int]:
-    """(pods, dp, tp) for a ("pod"?, "data", "model") mesh."""
+    """(pods, dp, tp) for a ("pod"?, ["node",] "data", "model") mesh."""
     sizes = mesh_axis_sizes(mesh)
     return (sizes.get("pod", 1), sizes.get("data", 1),
             sizes.get("model", 1))
+
+
+def mesh_nodes(mesh) -> int:
+    """Node-axis size (1 when the mesh has no "node" axis)."""
+    return mesh_axis_sizes(mesh).get("node", 1)

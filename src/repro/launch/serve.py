@@ -35,6 +35,13 @@ def main(argv=None) -> int:
                     help="Stage-2 TimingSource (control/timing.py)")
     ap.add_argument("--secondary-algo", choices=["ring", "tree"],
                     default="ring")
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="cluster node count: registers the NIC-tier "
+                         "profile (so --tuning-cache keys line up with "
+                         "multi-node launches) and records the topology "
+                         "on the ctx.  This launcher itself is "
+                         "single-device — the decode wave never crosses "
+                         "the NIC tier (launch/shapes.py)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -43,15 +50,22 @@ def main(argv=None) -> int:
 
     # single-device ctx, but with the comm config plumbed so a multi-axis
     # deployment of this launcher inherits the control-plane flags
-    ctx = ParallelCtx(comm_config=CommConfig(
+    comm = CommConfig(
         profile="tpu_v5e", timing=args.timing,
         secondary_algo=args.secondary_algo,
-        tuning_cache=args.tuning_cache))
+        tuning_cache=args.tuning_cache)
+    cluster = None
+    if args.nodes > 1:
+        from repro.cluster.topology import cluster_for
+        cluster = cluster_for(comm.profile, args.nodes)
+    ctx = ParallelCtx(comm_config=comm, cluster=cluster)
     if not ctx.comms() and (args.timing != "sim" or args.tuning_cache
-                            or args.secondary_algo != "ring"):
+                            or args.secondary_algo != "ring"
+                            or args.nodes > 1):
         print("note: single-device launch has no communicators — "
-              "--timing/--tuning-cache/--secondary-algo take effect only "
-              "with parallel axes")
+              "--timing/--tuning-cache/--secondary-algo/--nodes take "
+              "effect only with parallel axes (the decode wave itself "
+              "never crosses the NIC tier; see launch/shapes.py)")
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, ctx,
                          ServeConfig(slots=args.slots, cache_len=96))

@@ -172,14 +172,22 @@ def cache_specs(cfg: ArchConfig, shape: InputShape, dcfg: DecodeConfig, *,
 # partition specs for the inputs (mesh axes: ["pod",] "data", "model")
 # ---------------------------------------------------------------------------
 
-def batch_axes(pods: int):
-    return ("pod", "data") if pods > 1 else ("data",)
+def batch_axes(pods: int, nodes: int = 1):
+    """The mesh axes the global batch is split over, outermost first:
+    pod (DCN), node (cluster NIC tier), data (in-node DP)."""
+    axes = []
+    if pods > 1:
+        axes.append("pod")
+    if nodes > 1:
+        axes.append("node")
+    axes.append("data")
+    return tuple(axes)
 
 
 def input_partition_specs(cfg: ArchConfig, shape: InputShape, *,
-                          tp: int, dp: int, pods: int = 1):
+                          tp: int, dp: int, pods: int = 1, nodes: int = 1):
     from jax.sharding import PartitionSpec as P
-    ba = batch_axes(pods)
+    ba = batch_axes(pods, nodes)
     if shape.kind in ("train", "prefill"):
         specs = {"tokens": P(ba, None), "labels": P(ba, None)}
         if cfg.family == "vlm":
@@ -187,6 +195,9 @@ def input_partition_specs(cfg: ArchConfig, shape: InputShape, *,
         if cfg.family == "encdec":
             specs["enc_embed"] = P(ba, None, None)
         return specs
+    # decode stays within one node (no node-axis collective in the decode
+    # step): a multi-node mesh replicates the decode wave over the node
+    # axis rather than sharding the KV cache across the NIC tier.
     dcfg = decode_config(cfg, shape, tp=tp, dp=dp)
     if shape.global_batch == 1:
         tok = P(None, None)

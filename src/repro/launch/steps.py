@@ -31,7 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.communicator import CommConfig
-from repro.launch.mesh import mesh_dims
+from repro.launch.mesh import mesh_dims, mesh_nodes
 from repro.launch import shapes as SH
 from repro.models.config import ArchConfig
 from repro.models.tp import ParallelCtx
@@ -42,14 +42,21 @@ from repro.runtime.program import StepProgram
 from repro.train.train_step import make_train_step
 
 
-def make_ctx(mesh: Mesh, comm: Optional[CommConfig] = None) -> ParallelCtx:
+def make_ctx(mesh: Mesh, comm: Optional[CommConfig] = None,
+             cluster=None) -> ParallelCtx:
+    """A mesh with a "node" axis gets the cluster wiring (DESIGN.md §9):
+    the NIC-tier communicator on that axis and hierarchical gradient
+    reduction.  ``cluster`` names the ClusterTopology; the default is
+    synthesized from the comm profile (cluster_for)."""
     pods, dp, tp = mesh_dims(mesh)
+    nodes = mesh_nodes(mesh)
     return ParallelCtx(
         tp_axis="model" if tp > 1 else None,
         dp_axis="data" if dp > 1 else None,
+        node_axis="node" if nodes > 1 else None,
         pod_axis="pod" if pods > 1 else None,
-        tp_size=tp, dp_size=dp, pod_size=pods,
-        comm_config=comm or CommConfig())
+        tp_size=tp, dp_size=dp, node_size=nodes, pod_size=pods,
+        comm_config=comm or CommConfig(), cluster=cluster)
 
 
 def opt_state_specs(psp) -> AdamWState:
@@ -58,15 +65,16 @@ def opt_state_specs(psp) -> AdamWState:
 
 def _batch_specs(cfg: ArchConfig, shape: SH.InputShape, mesh) -> Dict:
     pods, dp, tp = mesh_dims(mesh)
-    return SH.input_partition_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
+    return SH.input_partition_specs(cfg, shape, tp=tp, dp=dp, pods=pods,
+                                    nodes=mesh_nodes(mesh))
 
 
 def _train_builder(cfg: ArchConfig, mesh: Mesh, *,
                    comm: Optional[CommConfig],
                    opt: Optional[AdamWConfig],
                    shape: Optional[SH.InputShape],
-                   remat: bool):
-    ctx = make_ctx(mesh, comm)
+                   remat: bool, cluster=None):
+    ctx = make_ctx(mesh, comm, cluster=cluster)
     opt = opt or AdamWConfig()
     shape = shape or SH.SHAPES["train_4k"]
     psp = param_specs(cfg)
@@ -93,10 +101,10 @@ def build_train_step(cfg: ArchConfig, mesh: Mesh, *,
                      comm: Optional[CommConfig] = None,
                      opt: Optional[AdamWConfig] = None,
                      shape: Optional[SH.InputShape] = None,
-                     remat: bool = True):
+                     remat: bool = True, cluster=None):
     """jit(shard_map(train_step)) with full param/opt/batch shardings."""
     builder, ctx = _train_builder(cfg, mesh, comm=comm, opt=opt,
-                                  shape=shape, remat=remat)
+                                  shape=shape, remat=remat, cluster=cluster)
     return builder(), ctx
 
 
@@ -105,24 +113,24 @@ def build_train_program(cfg: ArchConfig, mesh: Mesh, *,
                         opt: Optional[AdamWConfig] = None,
                         shape: Optional[SH.InputShape] = None,
                         remat: bool = True,
-                        name: str = ""):
+                        name: str = "", cluster=None):
     """The train step as a StepProgram: plan-keyed executable cache +
     isolated Stage-2 replay recorder."""
     builder, ctx = _train_builder(cfg, mesh, comm=comm, opt=opt,
-                                  shape=shape, remat=remat)
+                                  shape=shape, remat=remat, cluster=cluster)
     return StepProgram(builder, ctx, name=name), ctx
 
 
 def _prefill_builder(cfg: ArchConfig, mesh: Mesh, *,
                      comm: Optional[CommConfig],
                      shape: Optional[SH.InputShape],
-                     remat: bool):
-    ctx = make_ctx(mesh, comm)
+                     remat: bool, cluster=None):
+    ctx = make_ctx(mesh, comm, cluster=cluster)
     shape = shape or SH.SHAPES["prefill_32k"]
     psp = param_specs(cfg)
     bsp = _batch_specs(cfg, shape, mesh)
     pods, dp, tp = mesh_dims(mesh)
-    ba = SH.batch_axes(pods)
+    ba = SH.batch_axes(pods, mesh_nodes(mesh))
 
     def builder():
         def prefill(params, batch):
@@ -141,10 +149,10 @@ def _prefill_builder(cfg: ArchConfig, mesh: Mesh, *,
 def build_prefill_step(cfg: ArchConfig, mesh: Mesh, *,
                        comm: Optional[CommConfig] = None,
                        shape: Optional[SH.InputShape] = None,
-                       remat: bool = True):
+                       remat: bool = True, cluster=None):
     """Forward-only prefill: returns last-position local-vocab logits."""
     builder, ctx = _prefill_builder(cfg, mesh, comm=comm, shape=shape,
-                                    remat=remat)
+                                    remat=remat, cluster=cluster)
     return builder(), ctx
 
 
@@ -152,15 +160,15 @@ def build_prefill_program(cfg: ArchConfig, mesh: Mesh, *,
                           comm: Optional[CommConfig] = None,
                           shape: Optional[SH.InputShape] = None,
                           remat: bool = True,
-                          name: str = ""):
+                          name: str = "", cluster=None):
     builder, ctx = _prefill_builder(cfg, mesh, comm=comm, shape=shape,
-                                    remat=remat)
+                                    remat=remat, cluster=cluster)
     return StepProgram(builder, ctx, name=name), ctx
 
 
 def _serve_builder(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
-                   comm: Optional[CommConfig]):
-    ctx = make_ctx(mesh, comm)
+                   comm: Optional[CommConfig], cluster=None):
+    ctx = make_ctx(mesh, comm, cluster=cluster)
     pods, dp, tp = mesh_dims(mesh)
     dcfg = SH.decode_config(cfg, shape, tp=tp, dp=dp)
     psp = param_specs(cfg)
@@ -186,16 +194,18 @@ def _serve_builder(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
 
 
 def build_serve_step(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
-                     comm: Optional[CommConfig] = None):
+                     comm: Optional[CommConfig] = None, cluster=None):
     """One-token decode with a seq_len KV cache (decode_32k / long_500k)."""
-    builder, ctx, dcfg = _serve_builder(cfg, mesh, shape, comm=comm)
+    builder, ctx, dcfg = _serve_builder(cfg, mesh, shape, comm=comm,
+                                        cluster=cluster)
     return builder(), ctx, dcfg
 
 
 def build_serve_program(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
                         comm: Optional[CommConfig] = None,
-                        name: str = ""):
-    builder, ctx, dcfg = _serve_builder(cfg, mesh, shape, comm=comm)
+                        name: str = "", cluster=None):
+    builder, ctx, dcfg = _serve_builder(cfg, mesh, shape, comm=comm,
+                                        cluster=cluster)
     return StepProgram(builder, ctx, name=name), ctx, dcfg
 
 

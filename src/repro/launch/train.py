@@ -21,7 +21,8 @@ from repro.configs import ALIASES, get_config
 from repro.core.communicator import CommConfig
 from repro.data.pipeline import make_batches
 from repro.launch import shapes as SH
-from repro.launch.mesh import make_mesh, make_production_mesh, mesh_dims
+from repro.launch.mesh import (make_cluster_mesh, make_mesh,
+                               make_production_mesh, mesh_dims, mesh_nodes)
 from repro.launch.steps import build_train_program
 from repro.models.transformer import init_params
 from repro.optim.adamw import AdamWConfig, init_state
@@ -39,6 +40,14 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--mesh-shape", default="",
                     help="e.g. 2,4 = (data=2, model=4); empty = single dev")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="simulated node count: prepends a 'node' axis to "
+                         "the mesh; gradient sync becomes the two-tier "
+                         "hierarchical AllReduce over the cluster's NIC "
+                         "tier (repro.cluster, DESIGN.md §9)")
+    ap.add_argument("--cluster", default="",
+                    help="named cluster topology from configs/clusters.py "
+                         "(default: synthesized from the comm profile)")
     ap.add_argument("--backend", choices=["flexlink", "nccl"],
                     default="flexlink")
     ap.add_argument("--ckpt-dir", default="")
@@ -58,16 +67,29 @@ def main(argv=None) -> int:
         cfg = cfg.reduced()
     shape = SH.InputShape("cli", "train", args.seq_len, args.batch)
 
+    from repro.configs.clusters import resolve_cluster
+    cluster, n_nodes = resolve_cluster(args.cluster, args.nodes)
+
     if args.mesh_shape:
         dims = tuple(int(x) for x in args.mesh_shape.split(","))
+    else:
+        dims = (1, 1)
+    if n_nodes > 1:
+        if len(dims) != 2:
+            raise SystemExit("--nodes combines with a 2-dim (data, model) "
+                             "--mesh-shape only")
+        mesh = make_cluster_mesh(n_nodes, *dims)
+    else:
         mesh = make_mesh(dims, ("data", "model")[-len(dims):]
                          if len(dims) == 2 else ("pod", "data", "model"))
-    else:
-        mesh = make_mesh((1, 1), ("data", "model"))
     pods, dp, tp = mesh_dims(mesh)
-    assert args.batch % (dp * pods) == 0
+    nodes = mesh_nodes(mesh)
+    assert args.batch % (dp * pods * nodes) == 0
 
-    comm = CommConfig(backend=args.backend, profile="tpu_v5e",
+    # a named cluster sets the intra profile: its node type IS the machine
+    # being modelled (ParallelCtx cross-checks cluster vs profile)
+    comm = CommConfig(backend=args.backend,
+                      profile=cluster.node.name if cluster else "tpu_v5e",
                       timing=args.timing,
                       secondary_algo=args.secondary_algo,
                       tuning_cache=args.tuning_cache)
@@ -82,7 +104,7 @@ def main(argv=None) -> int:
         # replay recorder — the loop never re-jits a plan it already
         # compiled (DESIGN.md §7).
         program, ctx = build_train_program(cfg, mesh, comm=comm, opt=opt,
-                                           shape=shape)
+                                           shape=shape, cluster=cluster)
         batches = make_batches(cfg, seq_len=args.seq_len,
                                batch_per_shard=args.batch)
         loop = LoopConfig(total_steps=args.steps, log_every=5,

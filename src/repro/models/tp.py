@@ -45,19 +45,29 @@ class ParallelCtx:
 
     tp_axis    : tensor-parallel axis ("model"); None disables TP collectives
     dp_axis    : data-parallel axis ("data")
+    node_axis  : inter-node axis ("node") — crosses the cluster's NIC tier;
+                 gradient reduction becomes the two-tier hierarchical
+                 AllReduce of ``repro.cluster`` (DESIGN.md §9)
     pod_axis   : pod axis for multi-pod meshes (gradient reduction only)
     tp/dp size : static sizes (mesh-derived; needed before tracing)
+    cluster    : the ClusterTopology behind the node axis; synthesized
+                 from the comm profile (cluster_for) when left None
     """
 
     tp_axis: Optional[str] = None
     dp_axis: Optional[str] = None
+    node_axis: Optional[str] = None
     pod_axis: Optional[str] = None
     tp_size: int = 1
     dp_size: int = 1
+    node_size: int = 1
     pod_size: int = 1
     comm_config: CommConfig = dataclasses.field(default_factory=CommConfig)
+    cluster: Optional[object] = None      # ClusterTopology
     _tp_comm: Optional[FlexCommunicator] = None
     _dp_comm: Optional[FlexCommunicator] = None
+    _node_comm: Optional[FlexCommunicator] = None
+    _cluster_comm: Optional[object] = None  # ClusterCommunicator
 
     def __post_init__(self):
         if self.tp_axis and self.tp_size > 1:
@@ -68,12 +78,46 @@ class ParallelCtx:
             self._dp_comm = comm_init_rank(
                 self.dp_axis, self.dp_size, self.comm_config,
                 ortho_name=self.tp_axis if self.tp_size > 1 else None)
+        if self.node_axis and self.node_size > 1:
+            # deferred import: the cluster package rides on top of the
+            # communicator stack this module fronts
+            from repro.cluster.communicator import ClusterCommunicator
+            from repro.cluster.topology import cluster_for
+            if self.cluster is None:
+                self.cluster = cluster_for(self.comm_config.profile,
+                                           self.node_size)
+            if self.cluster.n_nodes != self.node_size:
+                raise ValueError(
+                    f"cluster {self.cluster.name!r} has "
+                    f"{self.cluster.n_nodes} nodes but the mesh's node "
+                    f"axis spans {self.node_size}")
+            if self.cluster.node.name != self.comm_config.profile:
+                raise ValueError(
+                    f"cluster {self.cluster.name!r} is built from "
+                    f"{self.cluster.node.name!r} nodes but the comm "
+                    f"profile is {self.comm_config.profile!r} — reports, "
+                    f"timing constants and warm-start keys would describe "
+                    f"a fabric that never ran")
+            # the NIC tier is its own communicator: same CommConfig knobs,
+            # the tier profile's link pool — its SlotControllers balance
+            # the inter tier independently of the intra fabric
+            inter_cfg = dataclasses.replace(
+                self.comm_config, profile=self.cluster.nic_tier.name)
+            ortho = (self.dp_axis if self.dp_size > 1
+                     else (self.tp_axis if self.tp_size > 1 else None))
+            self._node_comm = comm_init_rank(
+                self.node_axis, self.node_size, inter_cfg,
+                ortho_name=ortho)
+            self._cluster_comm = ClusterCommunicator(
+                self.cluster, self._dp_comm, self._node_comm)
 
     # -- plan-engine plumbing -------------------------------------------------
 
     def comms(self) -> Tuple[FlexCommunicator, ...]:
-        """The live communicators behind this ctx (tp first, then dp)."""
-        return tuple(c for c in (self._tp_comm, self._dp_comm)
+        """The live communicators behind this ctx (tp, dp, then the
+        cluster's NIC tier)."""
+        return tuple(c for c in (self._tp_comm, self._dp_comm,
+                                 self._node_comm)
                      if c is not None)
 
     def observe_executed_step(self) -> bool:
@@ -177,8 +221,14 @@ class ParallelCtx:
             comm.reset_issued()
 
     def comm_report(self) -> Dict[str, object]:
-        """Tuning + plan-cache stats keyed by mesh axis."""
-        return {c.axis_name: c.report() for c in self.comms()}
+        """Tuning + plan-cache stats keyed by mesh axis; a hierarchical
+        ctx adds the cluster's topology + per-tier rollup (the tier
+        communicators' full reports already sit under their axis keys)."""
+        out: Dict[str, object] = {c.axis_name: c.report()
+                                  for c in self.comms()}
+        if self._cluster_comm is not None:
+            out["cluster"] = self._cluster_comm.summary()
+        return out
 
     # -- tensor-parallel collectives (FlexLink-backed) -----------------------
 
@@ -249,12 +299,36 @@ class ParallelCtx:
             return x
         return lax.psum(x, self.pod_axis)
 
+    # -- node-axis (NIC tier) collectives --------------------------------------
+
+    def node_psum(self, x: jax.Array) -> jax.Array:
+        """Plain node-axis reduction — small latency-bound payloads
+        (metrics), where the NIC-tier tuner would deactivate secondaries
+        anyway."""
+        if self.node_axis is None or self.node_size <= 1:
+            return x
+        return lax.psum(x, self.node_axis)
+
+    def node_all_reduce(self, x: jax.Array) -> jax.Array:
+        """Bandwidth-bound node-axis reduction through the NIC tier's
+        flex communicator (rail/xrail/host_tcp pool) when one is live."""
+        if self._node_comm is None:
+            return self.node_psum(x)
+        return self._node_comm.all_reduce(x)
+
     def grad_all_reduce(self, grads):
-        """Gradient reduction over data (and pod) axes, FlexLink-backed for
-        the data axis (big payloads), plain psum over the pod axis (see
-        pod_psum)."""
+        """Gradient reduction over data, node and pod axes.
+
+        With a node axis this is the two-tier hierarchical AllReduce
+        (DESIGN.md §9): intra-node flex reduce-scatter over the data
+        axis, NIC-tier flex all-reduce over the node axis on the 1/m
+        shard, intra-node flex all-gather — each tier its own RoutePlan.
+        Single-node meshes keep the flat FlexLink-backed data-axis
+        reduce; the pod axis stays a plain psum (see pod_psum)."""
         def red(g):
-            if self._dp_comm is not None:
+            if self._cluster_comm is not None:
+                g = self._cluster_comm.all_reduce(g)
+            elif self._dp_comm is not None:
                 g = self._dp_comm.all_reduce(g)
             elif self.dp_axis and self.dp_size > 1:
                 g = lax.psum(g, self.dp_axis)

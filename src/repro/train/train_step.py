@@ -1,15 +1,17 @@
 """The jitted training step: fwd + bwd + gradient sync + AdamW, built for a
 ParallelCtx and run under shard_map by the launcher.
 
-Gradient-sync topology (DESIGN.md §5):
-  * normal params are replicated over data (+pod) -> grads psum over both
-    (the data-axis reduce is FlexLink-backed: the classic "DP gradient
-    all-reduce" the paper's Fig. 3 targets);
+Gradient-sync topology (DESIGN.md §5, §9):
+  * normal params are replicated over data (+node +pod) -> grads reduce
+    over all three (the data-axis reduce is FlexLink-backed: the classic
+    "DP gradient all-reduce" the paper's Fig. 3 targets; with a node axis
+    the data+node reduce is the two-tier hierarchical AllReduce of
+    ``repro.cluster``);
   * ep_a2a expert params are SHARDED over the data axis -> the backward
     all_to_all already accumulated their gradients across data ranks; they
-    only psum over the pod axis.
-The local loss is pre-scaled by 1/(dp*pods) so every psum lands directly on
-the global-mean gradient.
+    reduce over the node axis (NIC-tier flex) and psum over the pod axis.
+The local loss is pre-scaled by 1/(dp*nodes*pods) so every reduce lands
+directly on the global-mean gradient.
 """
 
 from __future__ import annotations
@@ -37,7 +39,7 @@ def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx):
 
     def sync(path, g):
         if ep and is_expert_param(path):
-            return ctx.pod_psum(g)
+            return ctx.pod_psum(ctx.node_all_reduce(g))
         return ctx.grad_all_reduce(g)
 
     return jax.tree_util.tree_map_with_path(sync, grads)
@@ -47,7 +49,8 @@ def make_train_step(cfg: ArchConfig, ctx: ParallelCtx, opt: AdamWConfig,
                     *, remat: bool = True):
     """Returns step(params, opt_state, batch) -> (params, opt_state,
     metrics).  Call under shard_map with param_specs shardings."""
-    denom = max(ctx.dp_size, 1) * max(ctx.pod_size, 1)
+    denom = (max(ctx.dp_size, 1) * max(ctx.node_size, 1)
+             * max(ctx.pod_size, 1))
 
     def loss_fn(params, batch):
         return lm_loss(params, batch, cfg, ctx, remat=remat) / denom
@@ -57,7 +60,7 @@ def make_train_step(cfg: ArchConfig, ctx: ParallelCtx, opt: AdamWConfig,
         grads = sync_grads(grads, cfg, ctx)
         params, opt_state, om = apply_updates(params, grads, opt_state, opt)
         # report the global mean loss
-        gloss = ctx.pod_psum(ctx.dp_psum(loss))
+        gloss = ctx.pod_psum(ctx.node_psum(ctx.dp_psum(loss)))
         metrics = {"loss": gloss, **om}
         return params, opt_state, metrics
 

@@ -125,6 +125,10 @@ def test_report_contains_prediction():
     cache = rep.pop("plan_cache")
     assert set(cache) >= {"hits", "misses", "retraces", "size"}
     assert rep.pop("timing_source") == "sim"
+    assert rep.pop("tier") == "intra"
+    rollup = rep.pop("rollup")
+    assert rollup == {"intra": {"slots": 1, "warm": 0, "converged": 1,
+                                "stage2_adjustments": 0, "probes": 0}}
     (key, entry), = rep.items()
     assert entry["predicted_algbw_GBps"] >= entry["nccl_algbw_GBps"] * 0.98
     assert entry["converged"]

@@ -359,3 +359,108 @@ def test_measured_program_loop_drains_truly_slow_primary():
         assert comm.report()["timing_source"] == "measured"
     finally:
         prog.close()
+
+
+# ---------------------------------------------------------------------------
+# quantization-aware probing: probes snap to the RoutePlan grain
+# ---------------------------------------------------------------------------
+
+def _chunk_quantizer(order=("nvlink", "pcie", "rdma"), grid=16):
+    """Stand-in plan quantizer: the same largest-remainder chunk mapping
+    the data plane applies (collectives.quantize_shares) keyed by link
+    name directly."""
+    from repro.core.collectives import quantize_shares
+
+    def q(shares):
+        return tuple(sorted(quantize_shares(shares, order, grid).items()))
+    return q
+
+
+def test_probe_promoted_to_one_grain_step():
+    """A 1-unit probe from {60, 25, 15} does NOT change the 16-chunk
+    quantization — the slot must promote the probe to the smallest move
+    that flips the executed plan instead of burning a no-op adjustment."""
+    sc = SlotController.warm_start(
+        AR, 1 << 20, {"nvlink": 60, "pcie": 25, "rdma": 15}, "nvlink",
+        probe_period=3, plan_quantizer=_chunk_quantizer())
+    q = _chunk_quantizer()
+    flat = {"nvlink": 1.0, "pcie": 1.0, "rdma": 1.0}
+    base = q(sc.shares)
+    adj = None
+    for _ in range(10):
+        adj = sc.report(flat)
+        if adj is not None:
+            break
+    assert adj is not None and adj.kind == "probe"
+    assert adj.moved > 1                      # promoted past the 1-unit move
+    assert q(sc.shares) != base               # the executed plan changed
+    assert sum(sc.shares.values()) == SHARE_GRID
+
+
+def test_sub_grain_probe_is_skipped():
+    """When even draining a secondary entirely cannot flip the quantized
+    plan, the probe is skipped — no adjustment is recorded at all."""
+    shares = {"nvlink": 97, "pcie": 2, "rdma": 1}
+    sc = SlotController.warm_start(
+        AR, 1 << 20, shares, "nvlink",
+        probe_period=3, plan_quantizer=_chunk_quantizer())
+    q = _chunk_quantizer()
+    # precondition: no k-unit drain of either secondary flips the plan
+    for src in ("pcie", "rdma"):
+        for k in range(1, shares[src] + 1):
+            cand = dict(shares)
+            cand[src] -= k
+            cand["nvlink"] += k
+            assert q(cand) == q(shares)
+    flat = {"nvlink": 1.0, "pcie": 1.0, "rdma": 1.0}
+    for _ in range(30):
+        sc.report(flat)
+    assert not sc.balancer.adjustments
+    assert sc.shares == shares
+
+
+def test_communicator_probes_move_the_executed_plan():
+    """End to end through the communicator: measured-mode probes on a
+    live slot always land on a different quantized plan (the PlanCache
+    registers a retrace), never a rounding no-op."""
+    comm = FlexCommunicator("x", 8, CommConfig(profile="h800",
+                                               timing="measured",
+                                               tag="quantprobe"))
+    sc = comm.slot(AR, 1 << 20)
+    sc.balancer = LoadBalancer({"nvlink": 60, "pcie": 25, "rdma": 15},
+                               "nvlink")
+    sc.probe_period = 3
+    before = comm._plan_units(AR, sc.shares)
+    flat = {"nvlink": 1.0, "pcie": 1.0, "rdma": 1.0}
+    adj = None
+    for _ in range(10):
+        adj = sc.report(flat)
+        if adj is not None:
+            break
+    assert adj is not None and adj.kind == "probe"
+    assert comm._plan_units(AR, sc.shares) != before
+
+
+# ---------------------------------------------------------------------------
+# per-tier rollup (DESIGN.md §9 reporting satellite)
+# ---------------------------------------------------------------------------
+
+def test_slot_rollup_groups_by_tier_and_describe_names_it():
+    intra = SlotController.warm_start(
+        AR, 1 << 20, {"nvlink": 70, "pcie": 20, "rdma": 10}, "nvlink")
+    inter = SlotController.warm_start(
+        AR, 1 << 20, {"rail": 80, "xrail": 15, "host_tcp": 5}, "rail",
+        tier="inter")
+    inter.balancer.move("xrail", "rail", 1)
+    inter.balancer.move("host_tcp", "rail", 1, kind="probe")
+    roll = SlotController.rollup([intra, inter, inter])
+    assert set(roll) == {"intra", "inter"}
+    assert roll["intra"] == {"slots": 1, "warm": 1, "converged": 1,
+                             "stage2_adjustments": 0, "probes": 0}
+    assert roll["inter"]["slots"] == 2
+    assert roll["inter"]["stage2_adjustments"] == 4   # 2 each, counted twice
+    assert roll["inter"]["probes"] == 2
+    model = PathTimingModel("h800")
+    blk = intra.describe(model, 8)
+    assert blk["tier"] == "intra"
+    assert blk["evaluator"] == {"window": 10, "samples": 0}
