@@ -1,0 +1,132 @@
+"""One sick rail: class-level drain vs per-instance drain (DESIGN.md §10).
+
+The scenario the per-instance link fabric exists for: a 2×8-rail H800
+cluster whose NIC tier has ONE rail degraded to 25% health.  The old
+class-level model could only express two bad answers:
+
+  blind      : keep routing as if healthy — every collective completes at
+               the sick rail's pace (the class is a lockstep aggregate,
+               so one 25% member caps the whole class);
+  class-drain: let Stage 1/2 react at class granularity — the only lever
+               is draining the ENTIRE rail class onto the spine / host-TCP
+               paths, throwing away seven healthy rails.
+
+The per-instance model subdivides the class share across members
+health-proportionally and re-tunes at class level against the resulting
+(mildly reduced) aggregate: rail3 carries a quarter slice, its seven
+siblings stay loaded, and the class keeps ~91% of its bandwidth.
+
+This benchmark prices AllReduce / AllGather over the NIC tier (n=2
+nodes) in all three worlds and emits ``BENCH_degraded.json`` for the CI
+artifact trail.  The large-message per-instance rows are asserted to
+beat class-drain — the refactor's acceptance number.
+
+Run:  PYTHONPATH=src python -m benchmarks.degraded_rail \
+          --out BENCH_degraded.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.cluster.topology import degrade_cluster, make_cluster
+from repro.core.simulator import MiB, PathTimingModel
+from repro.core.topology import Collective
+from repro.core.tuner import initial_tune
+
+NICS = 8
+NIC_GBIT = 400.0
+N_NODES = 2
+DEGRADE = "rail3=0.25"
+SIZES_MIB = (16, 64, 256)
+OPS = (Collective.ALL_REDUCE, Collective.ALL_GATHER)
+
+
+def _tune(model: PathTimingModel, op: Collective, n: int, payload: float,
+          member_weights=None):
+    """Algorithm 1 at class level against a (possibly member-constrained)
+    oracle; returns converged fractional shares."""
+    paths = [l.name for l in model.profile.links]
+
+    def measure(fracs):
+        return model.measure(op, n, payload, fracs,
+                             member_weights=member_weights)
+
+    return initial_tune(paths, model.profile.primary.name, measure).fractions()
+
+
+def run(csv_print=print, out: str = ""):
+    healthy = make_cluster("h800", N_NODES, nics_per_node=NICS,
+                           nic_gbit=NIC_GBIT, name="bench_2xh800_rail8")
+    degraded = degrade_cluster(healthy, DEGRADE)
+    m_h = PathTimingModel(healthy.nic_tier)
+    m_d = PathTimingModel(degraded.nic_tier)
+    rail = degraded.nic_tier.link("rail")
+    # the class-drain world cannot subdivide: members stay in lockstep
+    # (uniform weights), so the class runs at the sick member's pace and
+    # the tuner's only recourse is abandoning the class
+    uniform = {"rail": {m.name: 1 for m in rail.members}}
+
+    rows = []
+    csv_print("op,MiB,healthy_GBps,blind_GBps,class_drain_GBps,"
+              "per_instance_GBps,instance_vs_class_pct")
+    for op in OPS:
+        for mib in SIZES_MIB:
+            payload = mib * MiB
+            fr_h = _tune(m_h, op, N_NODES, payload)
+            bw_healthy = m_h.algbw_GBps(op, N_NODES, payload, fr_h)
+            # blind: healthy plan executed on the degraded fabric, class
+            # still in lockstep — the pre-FlexLink failure mode
+            bw_blind = m_d.algbw_GBps(op, N_NODES, payload, fr_h,
+                                      member_weights=uniform)
+            # class-drain: re-tune, but members stay uniform
+            fr_c = _tune(m_d, op, N_NODES, payload, member_weights=uniform)
+            bw_class = m_d.algbw_GBps(op, N_NODES, payload, fr_c,
+                                      member_weights=uniform)
+            # per-instance: members subdivide health-proportionally (the
+            # default weighting — exactly what the SlotController adopts)
+            fr_i = _tune(m_d, op, N_NODES, payload)
+            bw_inst = m_d.algbw_GBps(op, N_NODES, payload, fr_i)
+            gain = (bw_inst / bw_class - 1.0) * 100.0
+            rows.append({
+                "op": op.value, "MiB": mib,
+                "healthy_GBps": round(bw_healthy, 2),
+                "blind_GBps": round(bw_blind, 2),
+                "class_drain_GBps": round(bw_class, 2),
+                "per_instance_GBps": round(bw_inst, 2),
+                "instance_vs_class_pct": round(gain, 1),
+                "class_shares_instance": fr_i,
+                "class_shares_class_drain": fr_c,
+            })
+            csv_print(f"{op.value},{mib},{bw_healthy:.1f},{bw_blind:.1f},"
+                      f"{bw_class:.1f},{bw_inst:.1f},{gain:.0f}")
+
+    # acceptance: at the bandwidth-bound end, steering around ONE rail must
+    # beat abandoning the class (and beat running blind)
+    big = [r for r in rows if r["MiB"] == max(SIZES_MIB)]
+    for r in big:
+        assert r["per_instance_GBps"] > r["class_drain_GBps"], r
+        assert r["per_instance_GBps"] > r["blind_GBps"], r
+    if out:
+        doc = {"cluster": degraded.name, "degrade": DEGRADE,
+               "nics_per_node": NICS, "n_nodes": N_NODES, "rows": rows}
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=2)
+        csv_print(f"# wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows = run(out=args.out)
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print(f"degraded_rail,{us:.0f},rows={len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

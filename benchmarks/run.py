@@ -6,9 +6,10 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig2_improvement, fig5_runtime, future_tree_allreduce,
-                        hierarchy_crossover, table1_idle_bw,
-                        table2_bandwidth, roofline_report, perf_hillclimb)
+from benchmarks import (degraded_rail, fig2_improvement, fig5_runtime,
+                        future_tree_allreduce, hierarchy_crossover,
+                        table1_idle_bw, table2_bandwidth, roofline_report,
+                        perf_hillclimb)
 
 
 def main() -> None:
@@ -21,6 +22,7 @@ def main() -> None:
         ("perf_hillclimb", perf_hillclimb.run),
         ("future_tree_allreduce", future_tree_allreduce.run),
         ("hierarchy_crossover", hierarchy_crossover.run),
+        ("degraded_rail", degraded_rail.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -18,8 +18,8 @@ importable as leaf modules.
 
 from repro.cluster.simulator import ClusterTimingModel, PHASE_SYNC_US
 from repro.cluster.topology import (ClusterTopology, cluster_for,
-                                    make_cluster, make_nic_tier,
-                                    nic_tier_name)
+                                    degrade_cluster, make_cluster,
+                                    make_nic_tier, nic_tier_name)
 
 _LAZY = ("ClusterCommunicator",)
 
@@ -37,6 +37,7 @@ __all__ = [
     "ClusterTopology",
     "PHASE_SYNC_US",
     "cluster_for",
+    "degrade_cluster",
     "make_cluster",
     "make_nic_tier",
     "nic_tier_name",

@@ -132,7 +132,20 @@ class ClusterTimingModel:
         from repro.core.topology import RingSchedule
         rail = self.topology.nic_tier.link("rail")
         sched = RingSchedule(op, N)
-        per_rail_bw = rail.effective_GBps / self.topology.nics_per_node
+        # one rail's slice of the class bandwidth, paced by the SICKEST
+        # member: the flat ring is lockstep (every synchronized step waits
+        # for its slowest node-cut edge) and cannot steer around a sick
+        # rail — every rank's egress is pinned to its NIC — so a single
+        # degraded member caps the whole ring, the same lockstep rule the
+        # intra model applies to uniform member weights.  The hierarchical
+        # schedule's NIC tier reroutes per instance instead.
+        worst = min(m.health for m in rail.instances)
+        per_rail_bw = (rail.effective_GBps * worst
+                       / self.topology.nics_per_node)
+        if per_rail_bw <= 0.0:
+            # a dead rail pins the lockstep ring outright (member_time's
+            # bw<=0 convention): flat is unusable, not a crash
+            return float("inf")
         step_us = rail.step_latency_us + self.topology.nic_tier.inter_hop_us
         return (rail.fixed_overhead_us * 1e-6
                 + sched.steps * step_us * 1e-6

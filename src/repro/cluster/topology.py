@@ -34,6 +34,7 @@ import dataclasses
 from typing import Dict, List, Tuple, Union
 
 from repro.core.links import (LinkKind, LinkSpec, NodeProfile, PROFILES,
+                              degrade_profile, parse_degrade,
                               register_profile)
 
 #: inter-node tier constants (physically motivated, never fitted to any
@@ -158,11 +159,17 @@ def make_nic_tier(node: NodeProfile, *, nics_per_node: int = 4,
     """
     raw = nics_per_node * _gbits(nic_gbit) * 2.0   # bidirectional GB/s
     rail_eff = RAIL_EFFICIENCY if rail_aligned else XRAIL_EFFICIENCY
+    # the rail class carries an explicit instance per physical NIC: the
+    # per-rail LinkMembers Stage 2 drains individually when one rail
+    # degrades (DESIGN.md §10).  Uniform healthy members are guaranteed
+    # (by canonicalization + the simulator's uniform fast path) to behave
+    # bit-identically to the old memberless aggregate.
     links = (
         LinkSpec("rail", LinkKind.NIC_RAIL, raw_GBps=raw,
                  effective_GBps=rail_eff * raw,
                  step_latency_us=RAIL_STEP_US,
-                 fixed_overhead_us=RAIL_FIXED_US),
+                 fixed_overhead_us=RAIL_FIXED_US).with_members(
+                     [f"rail{i}" for i in range(nics_per_node)]),
         LinkSpec("xrail", LinkKind.RDMA, raw_GBps=raw,
                  effective_GBps=XRAIL_EFFICIENCY * raw,
                  step_latency_us=XRAIL_STEP_US,
@@ -199,6 +206,27 @@ def make_cluster(node: Union[str, NodeProfile], n_nodes: int, *,
         node=prof, n_nodes=n_nodes, nic_tier=nic,
         nics_per_node=nics_per_node, nic_gbit=nic_gbit,
         rail_aligned=rail_aligned)
+
+
+def degrade_cluster(cluster: ClusterTopology, spec: str) -> ClusterTopology:
+    """Apply one ``name[:member]=factor`` fault to whichever tier owns the
+    target — the NIC tier first (``rail3=0.25`` drains one rail), then the
+    intra-node profile (``pcie=0.5`` throttles the host path of every
+    box).  Both the degraded tier profile and the returned topology carry
+    deterministic fault-suffixed names, so CommConfig memoization and
+    TuningProfile entries of the degraded fabric can never collide with —
+    or warm-start from — the healthy one.
+    """
+    parse_degrade(spec)                  # fail fast on a malformed spec
+    try:
+        nic = degrade_profile(cluster.nic_tier, spec)
+        return dataclasses.replace(cluster, name=f"{cluster.name}!{spec}",
+                                   nic_tier=nic)
+    except KeyError:
+        pass
+    node = degrade_profile(cluster.node, spec)   # KeyError if absent there too
+    return dataclasses.replace(cluster, name=f"{cluster.name}!{spec}",
+                               node=node)
 
 
 def cluster_for(profile: str, n_nodes: int) -> ClusterTopology:

@@ -70,3 +70,29 @@ def resolve_cluster(cluster_name: str, nodes: int):
         return None, max(nodes, 1)
     cluster = get_cluster(cluster_name)
     return cluster, (nodes if nodes > 0 else cluster.n_nodes)
+
+
+def resolve_degrade(cluster, nodes: int, profile: str, spec: str):
+    """Shared launcher logic for ``--degrade``: apply one
+    ``name[:member]=factor`` fault and return ``(cluster, profile)``.
+
+    With a cluster in play (given, or implied by a multi-node run — in
+    which case the one ``ParallelCtx`` would synthesize is materialized
+    first, so the fault lands on the actual NIC tier of the run) the
+    fault resolves against its tiers via ``degrade_cluster``; otherwise
+    it degrades the flat node profile.  Either way the degraded fabric
+    carries a deterministic ``!``-suffixed name, so communicator memo
+    keys and TuningProfile entries never collide with the healthy ones
+    (DESIGN.md §10).  One definition for every launcher: train, serve
+    and dryrun must agree on what a fault spec means.
+    """
+    if not spec:
+        return cluster, profile
+    from repro.cluster.topology import cluster_for, degrade_cluster
+    from repro.core.links import PROFILES, degrade_profile
+    if cluster is None and nodes > 1:
+        cluster = cluster_for(profile, nodes)
+    if cluster is not None:
+        cluster = degrade_cluster(cluster, spec)
+        return cluster, cluster.node.name
+    return None, degrade_profile(PROFILES[profile], spec).name

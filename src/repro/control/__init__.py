@@ -22,11 +22,13 @@ own layer:
 """
 
 from repro.control.profile import TuningProfile
-from repro.control.slots import PROBE_PERIOD, SlotController
-from repro.control.timing import (MeasuredTimingSource, SimTimingSource,
-                                  TimingSource)
+from repro.control.slots import MEMBER_BASE, PROBE_PERIOD, SlotController
+from repro.control.timing import (DegradedTimingSource, MeasuredTimingSource,
+                                  SimTimingSource, TimingSource)
 
 __all__ = [
+    "DegradedTimingSource",
+    "MEMBER_BASE",
     "MeasuredTimingSource",
     "PROBE_PERIOD",
     "SimTimingSource",

@@ -82,9 +82,28 @@ class TuningProfile:
         e = self._entries.get(_key(profile, algo, op, n_ranks, bucket, grid))
         return dict(e["shares"]) if e else None
 
+    def lookup_members(self, profile: str, algo: str, op: Collective,
+                       n_ranks: int, bucket: int, grid: int
+                       ) -> Optional[Dict[str, Dict[str, int]]]:
+        """Saved per-instance weight vectors for one slot (None when the
+        entry predates the member model or has none) — the link-level
+        ``shares`` and the instance-level ``members`` warm-start together
+        so a drained rail stays drained across launches."""
+        e = self._entries.get(_key(profile, algo, op, n_ranks, bucket, grid))
+        members = (e or {}).get("members")
+        if not isinstance(members, dict):
+            return None
+        try:
+            return {str(link): {str(m): int(w) for m, w in ws.items()}
+                    for link, ws in members.items()}
+        except (AttributeError, TypeError, ValueError):
+            return None
+
     def record(self, profile: str, algo: str, op: Collective, n_ranks: int,
                bucket: int, grid: int, shares: Mapping[str, int], *,
-               iterations: int = 0, converged: bool = True) -> None:
+               iterations: int = 0, converged: bool = True,
+               members: Optional[Mapping[str, Mapping[str, int]]] = None
+               ) -> None:
         key = _key(profile, algo, op, n_ranks, bucket, grid)
         self._entries[key] = {
             "profile": key[0], "secondary_algo": key[1], "op": key[2],
@@ -92,6 +111,10 @@ class TuningProfile:
             "shares": {str(p): int(u) for p, u in shares.items()},
             "iterations": int(iterations), "converged": bool(converged),
         }
+        if members:
+            self._entries[key]["members"] = {
+                str(link): {str(m): int(w) for m, w in ws.items()}
+                for link, ws in members.items()}
 
     def save(self, path: Optional[str] = None) -> str:
         """Merge with whatever is on disk, then write atomically."""

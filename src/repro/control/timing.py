@@ -62,7 +62,14 @@ class TimingSource:
 
     def timings_for(self, op: Collective, n_ranks: int, payload_bytes: int,
                     fractions: Mapping[str, float], *,
-                    bucket: Optional[int] = None) -> Dict[str, float]:
+                    bucket: Optional[int] = None,
+                    member_weights: Optional[Mapping[str, Mapping[str, float]]]
+                    = None) -> Dict[str, float]:
+        """Per-call per-path completion times.  ``member_weights`` is the
+        slot's live instance subdivision (link -> member -> weight);
+        sources that can price instances individually (the simulator) add
+        member-keyed entries for diverging links, which feed the slot's
+        per-instance drain balancers."""
         raise NotImplementedError
 
     def ingest_step(self, calls: Sequence[StepCall],
@@ -84,8 +91,9 @@ class SimTimingSource(TimingSource):
     kind = "sim"
 
     def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
-                    bucket=None):
-        return self.model.measure(op, n_ranks, payload_bytes, fractions)
+                    bucket=None, member_weights=None):
+        return self.model.measure(op, n_ranks, payload_bytes, fractions,
+                                  member_weights=member_weights)
 
 
 @dataclasses.dataclass
@@ -160,7 +168,12 @@ class MeasuredTimingSource(TimingSource):
     # -- TimingSource API ----------------------------------------------------
 
     def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
-                    bucket=None):
+                    bucket=None, member_weights=None):
+        # member_weights accepted but unpriced: one scalar step duration
+        # cannot attribute slowness to an INSTANCE (the module-docstring
+        # observability caveat, one level deeper).  Per-member hardware
+        # counters are the ROADMAP's per-path event timing item; until
+        # then DegradedTimingSource emulates them for fault injection.
         bucket = bucket if bucket is not None else int(payload_bytes)
         self._ensure_rates(op, n_ranks, bucket, payload_bytes, fractions)
         return self.estimates(op, bucket, fractions)
@@ -225,3 +238,54 @@ class MeasuredTimingSource(TimingSource):
                     self._slots.items(), key=lambda kv: (kv[0][0].value,
                                                          kv[0][1]))},
         }
+
+
+class DegradedTimingSource(TimingSource):
+    """Per-instance fault-injection overlay for measured mode.
+
+    A scalar wall-clock step duration cannot attribute slowness to one
+    NIC rail (the observability caveat above), so a measured-mode run has
+    no native per-instance signal — on hardware that signal would come
+    from per-NIC counters / CUDA events (the ROADMAP's per-path event
+    timing item).  This wrapper emulates those counters: class-level
+    timings still come from the wrapped source (wall-clock apportionment,
+    probes, finite differences — all unchanged), while member-level
+    entries for diverging links are overlaid from the degraded analytic
+    model, which is where the injected fault lives
+    (``links.degrade_profile``).  The slot's member balancers then drain
+    the sick instance exactly as they do under ``SimTimingSource``.
+
+    ``kind`` mirrors the wrapped source: a degraded measured run is still
+    a measured run everywhere the control plane branches on the kind.
+    """
+
+    def __init__(self, inner: TimingSource):
+        super().__init__(inner.model)
+        self.inner = inner
+        self.kind = inner.kind          # shadow the class attribute
+
+    def stage1_measure(self, op: Collective, n_ranks: int,
+                       payload_bytes: int) -> MeasureFn:
+        return self.inner.stage1_measure(op, n_ranks, payload_bytes)
+
+    def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
+                    bucket=None, member_weights=None):
+        out = dict(self.inner.timings_for(
+            op, n_ranks, payload_bytes, fractions, bucket=bucket,
+            member_weights=member_weights))
+        sim = self.model.measure(op, n_ranks, payload_bytes, fractions,
+                                 member_weights=member_weights)
+        # overlay ONLY instance entries (keys the class-level source does
+        # not produce): the emulated per-rail counters
+        for key, t in sim.items():
+            if key not in fractions:
+                out[key] = t
+        return out
+
+    def ingest_step(self, calls: Sequence[StepCall],
+                    elapsed_s: Optional[float]) -> None:
+        self.inner.ingest_step(calls, elapsed_s)
+
+    def report(self) -> Dict[str, object]:
+        return {"kind": self.kind, "degraded_overlay": True,
+                "wraps": self.inner.report()}

@@ -13,7 +13,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import statistics
-from typing import Deque, Dict, List, Mapping, Optional, Sequence
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.tuner import SHARE_GRID
 
@@ -136,19 +136,29 @@ class LoadBalancer:
         self.adjustments.append(adj)
         return adj
 
-    def observe(self, timings: Mapping[str, float]) -> Optional[Adjustment]:
+    def observe(self, timings: Mapping[str, float], *,
+                allow_adjust: bool = True) -> Optional[Adjustment]:
         """Record one collective call; maybe rebalance (periodic).
+
+        ``allow_adjust=False`` records the sample but suppresses the gap
+        rule for this call — the SlotController holds class-level moves
+        while one of its member balancers has an unresolved intra-class
+        imbalance (a drain in progress): the class's aggregate time is
+        transient until the sick instance is rebalanced, so reacting to it
+        would thrash share across classes (DESIGN.md §10).
 
         Returns the adjustment made, if any.
         """
         self.calls += 1
         self.evaluator.record({p: timings[p] for p in self.active
                                if p in timings})
-        if self.calls % self.invoke_period != 0:
+        if not allow_adjust or self.calls % self.invoke_period != 0:
             return None
         return self._maybe_adjust()
 
-    def _maybe_adjust(self) -> Optional[Adjustment]:
+    def _trend_gap(self) -> Optional[Tuple[str, str, float]]:
+        """(slowest, fastest, relative gap) of the current trend, or None
+        while the window/sampled-path count cannot support a comparison."""
         active = self.active
         if len(active) < 2:
             return None
@@ -159,6 +169,19 @@ class LoadBalancer:
         fast = min(trend, key=trend.get)
         t_fast = trend[fast]
         gap = (trend[slow] - t_fast) / t_fast if t_fast > 0 else 0.0
+        return slow, fast, gap
+
+    def current_gap(self) -> float:
+        """The live trend gap (0.0 when not computable) — what the slot's
+        hold rule inspects without consuming an adjustment."""
+        tg = self._trend_gap()
+        return tg[2] if tg is not None else 0.0
+
+    def _maybe_adjust(self) -> Optional[Adjustment]:
+        tg = self._trend_gap()
+        if tg is None:
+            return None
+        slow, fast, gap = tg
         if gap <= self.gap_threshold:
             return None
         # Move a small fixed share from the slowest to the fastest path,

@@ -46,9 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.control import (MeasuredTimingSource, PROBE_PERIOD,
-                           SimTimingSource, SlotController, TimingSource,
-                           TuningProfile)
+from repro.control import (DegradedTimingSource, MeasuredTimingSource,
+                           PROBE_PERIOD, SimTimingSource, SlotController,
+                           TimingSource, TuningProfile)
 from repro.core import collectives as mp
 from repro.core import routing
 from repro.core.balancer import LoadBalancer
@@ -190,11 +190,18 @@ class FlexCommunicator:
                                      seed=self.config.seed,
                                      secondary_algo=self.config.secondary_algo)
         #: Stage-2 TimingSource (control/timing.py): where per-call
-        #: per-path timings come from.
+        #: per-path timings come from.  A degraded profile (some link
+        #: member below nominal health — ``--degrade``) wraps the measured
+        #: source with the per-instance fault overlay: wall-clock cannot
+        #: attribute slowness to ONE rail, so the degraded model emulates
+        #: the per-NIC counters hardware would provide.  The sim source
+        #: needs no wrapper — the member healths live in its profile.
         self.timing: TimingSource = (
             MeasuredTimingSource(self.model)
             if self.config.timing == "measured"
             else SimTimingSource(self.model))
+        if self.config.timing == "measured" and not self.profile.healthy:
+            self.timing = DegradedTimingSource(self.timing)
         #: control plane: one SlotController per tuned (op, size-bucket).
         self._slots: Dict[Tuple[Collective, int], SlotController] = {}
         #: Stage-1 warm-start store (control/profile.py); empty when no
@@ -270,10 +277,12 @@ class FlexCommunicator:
                 [(op, self.n_ranks, bucket_for(n), n,
                   self.slot(op, bucket_for(n)).fractions())
                  for op, n in calls], elapsed_s)
-        before = {k: dict(s.shares) for k, s in self._slots.items()}
+        # control_state covers class shares AND member weights: a member
+        # drain re-keys the executed plan exactly like a class move does
+        before = {k: s.control_state() for k, s in self._slots.items()}
         for op, nbytes in calls:
             self.record_call(op, nbytes)
-        after = {k: dict(s.shares) for k, s in self._slots.items()}
+        after = {k: s.control_state() for k, s in self._slots.items()}
         return before != after
 
     # -- control plane (delegated to repro.control) ---------------------------
@@ -303,6 +312,23 @@ class FlexCommunicator:
     def _balancers(self) -> Dict[Tuple[Collective, int], LoadBalancer]:
         return {k: s.balancer for k, s in self._slots.items()}
 
+    def _member_layout(self, sc: SlotController) -> Optional[Dict[str, Tuple]]:
+        """The slot's plan-visible instance subdivision keyed by ROUTE
+        class, in each link's member-declaration order — what
+        ``build_plan`` canonicalizes into the plan's ``member_layout``.
+        Plan-visible = the last SETTLED drain state (control/slots.py), so
+        an in-flight drain does not re-jit per unit move."""
+        weights = sc.plan_member_weights()
+        if not weights:
+            return None
+        out: Dict[str, Tuple] = {}
+        for link, w in weights.items():
+            if link not in self.path_names:
+                continue
+            order = self.profile.link(link).member_names
+            out[self.route_of(link)] = tuple((m, w.get(m, 0)) for m in order)
+        return out or None
+
     def _plan_units(self, op: Collective,
                     shares: Mapping[str, int]) -> Tuple:
         """Quantized-plan identity of grid-unit ``shares`` (keyed by LINK
@@ -310,7 +336,9 @@ class FlexCommunicator:
         slot's probe snapping (control/slots.py) compares exactly what the
         data plane would execute.  (The bucket-dependent staged pipeline
         depth is not part of this identity — a probe that changes only the
-        depth still re-keys the plan, it just probes one grain further.)"""
+        depth still re-keys the plan, it just probes one grain further.
+        The member layout is constant across candidate class-share moves,
+        so the snapping search keys on chunk_units exactly as before.)"""
         routed = {self.route_of(p): u for p, u in shares.items()}
         plan = routing.build_plan(op, self.axis_name, routed, self.ortho_name)
         return plan.chunk_units
@@ -334,6 +362,8 @@ class FlexCommunicator:
         primary = self.profile.primary.name
         probe = PROBE_PERIOD if self.timing.kind == "measured" else None
         quantizer = lambda shares, _op=op: self._plan_units(_op, shares)  # noqa: E731
+        members = {l: m for l, m in self.profile.multi_member_links().items()
+                   if l in self.path_names}
         if self.config.backend == "nccl" or self.n_ranks <= 1:
             sc = SlotController.tune_cold(
                 op, bucket, [primary], primary,
@@ -344,16 +374,21 @@ class FlexCommunicator:
                 self.config.profile, self.config.secondary_algo, op,
                 self.n_ranks, bucket, SHARE_GRID)
             if saved is not None and set(saved) <= set(self.path_names):
+                saved_members = self._profile_store.lookup_members(
+                    self.config.profile, self.config.secondary_algo, op,
+                    self.n_ranks, bucket, SHARE_GRID)
                 sc = SlotController.warm_start(op, bucket, saved, primary,
                                                probe_period=probe,
                                                tier=self.profile.tier,
-                                               plan_quantizer=quantizer)
+                                               plan_quantizer=quantizer,
+                                               members=members,
+                                               member_weights=saved_members)
             else:
                 sc = SlotController.tune_cold(
                     op, bucket, list(self.path_names), primary,
                     self.timing.stage1_measure(op, self.n_ranks, bucket),
                     probe_period=probe, tier=self.profile.tier,
-                    plan_quantizer=quantizer)
+                    plan_quantizer=quantizer, members=members)
         self._slots[key] = sc
         return sc
 
@@ -373,8 +408,9 @@ class FlexCommunicator:
         if not self._balancing_active:
             return
         sc = self.slot(op, bucket_for(payload_bytes))
-        timings = self.timing.timings_for(op, self.n_ranks, payload_bytes,
-                                          sc.fractions(), bucket=sc.bucket)
+        timings = self.timing.timings_for(
+            op, self.n_ranks, payload_bytes, sc.fractions(),
+            bucket=sc.bucket, member_weights=sc.member_weights() or None)
         sc.report(timings)
 
     def save_tuning(self, path: Optional[str] = None) -> int:
@@ -391,7 +427,8 @@ class FlexCommunicator:
                 self.config.profile, self.config.secondary_algo, op,
                 self.n_ranks, bucket, SHARE_GRID, sc.tuned.shares,
                 iterations=sc.tuned.iterations,
-                converged=sc.tuned.converged)
+                converged=sc.tuned.converged,
+                members=sc.member_weights() or None)
             n += 1
         target = path or self.config.tuning_cache
         if target and n:
@@ -448,10 +485,13 @@ class FlexCommunicator:
                                            self.ortho_name))
 
         def build() -> RoutePlan:
-            shares = self.shares_for(op, bucket)
+            sc = self.slot(op, bucket)
+            shares = {self.route_of(p): s
+                      for p, s in sc.shares.items() if s > 0}
             return routing.build_plan(
                 op, self.axis_name, shares, self.ortho_name,
-                staged_substeps=self.staged_substeps_for(op, bucket, shares))
+                staged_substeps=self.staged_substeps_for(op, bucket, shares),
+                member_layout=self._member_layout(sc))
 
         return self.plan_cache.lookup(op, bucket, build)
 

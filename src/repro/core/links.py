@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 class LinkKind(enum.Enum):
@@ -44,6 +44,46 @@ PRIMARY_KINDS = frozenset({LinkKind.NVLINK, LinkKind.ICI_PRIMARY,
 
 
 @dataclasses.dataclass(frozen=True)
+class LinkMember:
+    """One physical *instance* of a link class — one NIC rail, one PCIe leg.
+
+    ``health`` scales this instance's share of the class's effective (and
+    raw) bandwidth: 1.0 is nominal, 0.25 is a rail degraded to a quarter of
+    its lane rate (flapping optics, a mis-trained SerDes, a congested leaf).
+    The class-level numbers of :class:`LinkSpec` stay the *aggregate over
+    healthy members*; a member's bandwidth is ``effective_GBps / n_members
+    * health``.
+    """
+
+    name: str
+    health: float = 1.0
+
+
+def split_by_health(members: Sequence[LinkMember], total: int) -> Dict[str, int]:
+    """Largest-remainder split of ``total`` integer units across members,
+    proportional to their health factors.
+
+    This is the deterministic member subdivision of a class share: uniform
+    healthy members get an exactly equal split (the parity case — with
+    ``total`` divisible by the member count there is no remainder at all),
+    a degraded member gets proportionally less — the Stage-1-level drain.
+    """
+    weights = [max(m.health, 0.0) for m in members]
+    denom = sum(weights)
+    if denom <= 0.0:
+        weights = [1.0] * len(members)
+        denom = float(len(members))
+    exact = [total * w / denom for w in weights]
+    units = [int(e) for e in exact]
+    rem = total - sum(units)
+    order = sorted(range(len(members)),
+                   key=lambda i: (-(exact[i] - units[i]), i))
+    for i in order[:rem]:
+        units[i] += 1
+    return {m.name: u for m, u in zip(members, units)}
+
+
+@dataclasses.dataclass(frozen=True)
 class LinkSpec:
     """One aggregatable route.
 
@@ -63,6 +103,13 @@ class LinkSpec:
       shares_pcie_switch: True when the route contends with the host PCIe path
         (H800-generation "path contention" in Table 1); the simulator caps the
         *sum* of contending routes at the PCIe interface bandwidth.
+      members: the link's physical *instances* (per-rail NICs, PCIe legs).
+        Empty = one implicit instance named after the link — every
+        pre-member profile is expressible unchanged, and the class-level
+        aggregate numbers keep their meaning (``effective_GBps`` is the
+        healthy-members total).  Member names must be unique across a
+        profile: they are the instance-addressable path ids the control
+        plane drains individually (DESIGN.md §10).
     """
 
     name: str
@@ -72,10 +119,74 @@ class LinkSpec:
     step_latency_us: float
     fixed_overhead_us: float = 0.0
     shares_pcie_switch: bool = False
+    members: Tuple[LinkMember, ...] = ()
 
     @property
     def is_primary(self) -> bool:
         return self.kind in PRIMARY_KINDS
+
+    # -- instance dimension ---------------------------------------------------
+
+    @property
+    def n_members(self) -> int:
+        return len(self.members) or 1
+
+    @property
+    def member_names(self) -> Tuple[str, ...]:
+        """The instance path ids; a memberless link IS its single member."""
+        return tuple(m.name for m in self.members) or (self.name,)
+
+    @property
+    def instances(self) -> Tuple[LinkMember, ...]:
+        """Explicit members, or the implicit single healthy instance."""
+        return self.members or (LinkMember(self.name),)
+
+    def member(self, name: str) -> LinkMember:
+        for m in self.instances:
+            if m.name == name:
+                return m
+        raise KeyError(f"no member {name!r} in link {self.name!r}")
+
+    @property
+    def healthy(self) -> bool:
+        """True when every instance runs at nominal rate — the parity case."""
+        return all(m.health == 1.0 for m in self.members)
+
+    @property
+    def health_factor(self) -> float:
+        """Mean member health: scales the class aggregate bandwidth (1.0
+        for every healthy or memberless link)."""
+        if not self.members:
+            return 1.0
+        return sum(m.health for m in self.members) / len(self.members)
+
+    def member_effective_GBps(self, name: str) -> float:
+        """One instance's achievable payload bandwidth: an equal slice of
+        the class aggregate, scaled by the instance's health."""
+        return self.effective_GBps / self.n_members * self.member(name).health
+
+    def with_members(self, names: Sequence[str]) -> "LinkSpec":
+        """Uniform healthy instances — the default per-rail synthesis."""
+        return dataclasses.replace(
+            self, members=tuple(LinkMember(n) for n in names))
+
+    def degraded(self, member_name: Optional[str], factor: float) -> "LinkSpec":
+        """Scale one member's (or, with ``member_name=None``, every
+        member's) health by ``factor``.  A memberless link materializes its
+        implicit single instance so the degradation is visible."""
+        if factor < 0.0:
+            raise ValueError(f"degrade factor must be >= 0, got {factor}")
+        members = self.instances
+        if member_name is None:
+            new = tuple(dataclasses.replace(m, health=m.health * factor)
+                        for m in members)
+        else:
+            if member_name not in self.member_names:
+                raise KeyError(
+                    f"no member {member_name!r} in link {self.name!r}")
+            new = tuple(dataclasses.replace(m, health=m.health * factor)
+                        if m.name == member_name else m for m in members)
+        return dataclasses.replace(self, members=new)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +217,29 @@ class NodeProfile:
             if l.name == name:
                 return l
         raise KeyError(f"no link {name!r} in profile {self.name!r}")
+
+    def link_of_member(self, member_name: str) -> LinkSpec:
+        """The link class owning one instance path id.  A memberless
+        link owns the member carrying its own name."""
+        owners = [l for l in self.links if member_name in l.member_names]
+        if not owners:
+            raise KeyError(
+                f"no link member {member_name!r} in profile {self.name!r}")
+        if len(owners) > 1:
+            raise ValueError(
+                f"member name {member_name!r} is ambiguous in profile "
+                f"{self.name!r} (links "
+                f"{[l.name for l in owners]!r})")
+        return owners[0]
+
+    def multi_member_links(self) -> Dict[str, Tuple[LinkMember, ...]]:
+        """link name -> explicit members, for links with an instance
+        dimension worth balancing (>= 2 members)."""
+        return {l.name: l.members for l in self.links if len(l.members) > 1}
+
+    @property
+    def healthy(self) -> bool:
+        return all(l.healthy for l in self.links)
 
     @property
     def primary(self) -> LinkSpec:
@@ -243,6 +377,38 @@ PROFILES: Dict[str, NodeProfile] = {
 }
 
 
+def validate_member_names(profile: NodeProfile) -> None:
+    """Enforce the instance-addressing invariant: every explicit member
+    name is unique across the profile — against other members AND against
+    every link name.  Member names are bare keys in timing dicts,
+    balancer paths and ``--degrade`` targets, so a collision (a member
+    named after a sibling link, two links sharing a member name) would
+    silently cross-wire one link's timings into another's drain loop.
+    Raises ValueError; called at registration, the one gate every profile
+    a communicator can name passes through.
+    """
+    link_names = {l.name for l in profile.links}
+    seen: Dict[str, str] = {}
+    for l in profile.links:
+        for m in l.members:
+            # the one allowed shadowing: a SINGLE materialized member
+            # carrying its own link's name (what degrading a memberless
+            # link produces) — it IS the class, no ambiguity
+            if m.name in link_names and (m.name != l.name
+                                         or len(l.members) > 1):
+                raise ValueError(
+                    f"profile {profile.name!r}: member {m.name!r} of link "
+                    f"{l.name!r} collides with a link name")
+            if m.name in seen:
+                where = (f"links {seen[m.name]!r} and {l.name!r}"
+                         if seen[m.name] != l.name
+                         else f"link {l.name!r} twice")
+                raise ValueError(
+                    f"profile {profile.name!r}: member name {m.name!r} "
+                    f"appears in {where}")
+            seen[m.name] = l.name
+
+
 def register_profile(profile: NodeProfile) -> NodeProfile:
     """Add a (possibly synthesized) profile to the DB under its name.
 
@@ -253,6 +419,7 @@ def register_profile(profile: NodeProfile) -> NodeProfile:
     refers to profiles by name and silent replacement would re-key
     memoized communicators.
     """
+    validate_member_names(profile)
     existing = PROFILES.get(profile.name)
     if existing is not None:
         if existing != profile:
@@ -269,18 +436,101 @@ def idle_bw_opportunity(profile: NodeProfile) -> float:
 
     With path contention the idle bandwidth is capped by the shared PCIe
     interface; without contention it is the sum of the secondary raw links.
+    Per-member health scales each link's contribution — a rail at 25%
+    health offers a quarter of its raw bandwidth as opportunity (and a
+    degraded primary shrinks the denominator the same way), so the ratio
+    describes the fabric as it actually runs, not as it was sold.  The
+    contention ceiling itself is NOT health-scaled: it is the shared PCIe
+    interface's limit, which a sick NIC behind it does nothing to raise.
     """
-    primary = profile.primary.raw_GBps
+    primary = profile.primary.raw_GBps * profile.primary.health_factor
     contended = [l for l in profile.secondary if l.shares_pcie_switch]
     free = [l for l in profile.secondary if not l.shares_pcie_switch]
-    idle = sum(l.raw_GBps for l in free)
+    idle = sum(l.raw_GBps * l.health_factor for l in free)
     if contended:
         cap = profile.pcie_switch_ceiling_GBps
-        total = sum(l.raw_GBps for l in contended)
+        total = sum(l.raw_GBps * l.health_factor for l in contended)
         # The contended routes can jointly move at most the PCIe interface BW
         # (bidirectional = 2x the unidirectional ceiling).
         idle += min(total, (cap * 2.0) if cap is not None else total)
+    if primary <= 0.0:
+        # a dead primary (--degrade nvlink=0): every idle byte/s is
+        # infinite relative opportunity — same convention as the timing
+        # model's bw<=0 guard
+        return float("inf") if idle > 0.0 else 0.0
     return idle / primary
+
+
+# ---------------------------------------------------------------------------
+# Fault injection — the ``--degrade`` flag's model half (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+def parse_degrade(spec: str) -> Tuple[str, Optional[str], float]:
+    """Parse one ``name[:member]=factor`` fault-injection spec.
+
+    Returns ``(target, member, factor)`` where ``member`` is None when the
+    spec names a single token — resolved against a profile by
+    :func:`degrade_profile` as a link (all instances) or a unique member.
+    """
+    if "=" not in spec:
+        raise ValueError(
+            f"degrade spec {spec!r} must be name[:member]=factor")
+    lhs, _, rhs = spec.partition("=")
+    try:
+        factor = float(rhs)
+    except ValueError:
+        raise ValueError(
+            f"degrade spec {spec!r}: factor {rhs!r} is not a number")
+    if factor < 0.0:
+        raise ValueError(f"degrade spec {spec!r}: factor must be >= 0")
+    lhs = lhs.strip()
+    if not lhs:
+        raise ValueError(f"degrade spec {spec!r}: empty target")
+    if ":" in lhs:
+        link, _, member = lhs.partition(":")
+        if not link or not member:
+            raise ValueError(f"degrade spec {spec!r}: bad link:member")
+        return link, member, factor
+    return lhs, None, factor
+
+
+def degraded_profile_name(base: str, link: str, member: Optional[str],
+                          factor: float) -> str:
+    """Deterministic name for a degraded profile variant.  The name is the
+    CommConfig / TuningProfile / communicator-memo key, so a degraded run
+    can never warm-start from (or collide with) the healthy fabric's
+    entries."""
+    target = f"{link}:{member}" if member else link
+    return f"{base}!{target}={factor:g}"
+
+
+def degrade_profile(profile: NodeProfile, spec: str,
+                    register: bool = True) -> NodeProfile:
+    """Apply one ``name[:member]=factor`` spec to a profile.
+
+    The single-token form resolves first as a link name (degrading every
+    instance), then as a unique member name across the profile's links —
+    so ``--degrade rail3=0.25`` drains one rail of the NIC tier without
+    spelling out its class.  Raises KeyError when the target matches
+    nothing.  The variant is registered under its deterministic name (see
+    :func:`degraded_profile_name`) so every process modelling the same
+    fault resolves the same entry.
+    """
+    target, member, factor = parse_degrade(spec)
+    link_names = {l.name for l in profile.links}
+    if member is None and target not in link_names:
+        # single token that is not a link: resolve as a unique member
+        owner = profile.link_of_member(target)   # KeyError if absent
+        target, member = owner.name, target
+    if target not in link_names:
+        raise KeyError(f"no link {target!r} in profile {profile.name!r}")
+    links = tuple(l.degraded(member, factor) if l.name == target else l
+                  for l in profile.links)
+    out = dataclasses.replace(
+        profile, name=degraded_profile_name(profile.name, target, member,
+                                            factor),
+        links=links)
+    return register_profile(out) if register else out
 
 
 # TPU v5e roofline constants (per chip) — used by repro.roofline.

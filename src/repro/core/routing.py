@@ -23,7 +23,8 @@ quantization and the jit-variant plan cache).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Mapping, Optional, Tuple
+import math
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +57,50 @@ MAX_STAGED_SUBSTEPS = 8
 # RoutePlan
 # ---------------------------------------------------------------------------
 
+#: one path class's instance subdivision: ((member, weight), ...) in the
+#: link's member-declaration order, gcd-normalized.  See
+#: :func:`canonical_member_layout`.
+MemberLayout = Tuple[Tuple[str, Tuple[Tuple[str, int], ...]], ...]
+
+
+def canonical_member_layout(
+        layout: Optional[Mapping[str, Sequence[Tuple[str, int]]]],
+        units: Mapping[str, int]) -> MemberLayout:
+    """Canonicalize a per-class member weight layout into plan identity.
+
+    Rules (each one exists for cache-key hygiene):
+
+    * classes carrying no payload are dropped — a drained class has no
+      member subdivision to address;
+    * weights are gcd-normalized — (8, 8, 2) and (16, 16, 4) describe the
+      same subdivision and must not be distinct jit/exec cache keys;
+    * an all-equal vector is dropped entirely — the *uniform* layout IS
+      the class-level plan, which is what makes a uniform-member fabric's
+      plans (and ``plan_signature()``) bit-identical to the pre-member
+      model (the DESIGN.md §10 parity contract).  Zero-weight members are
+      kept: (1, 1, 0) is a live 2-of-3 drain, not a 2-member uniform.
+    """
+    if not layout:
+        return ()
+    rows = []
+    for cls in PATH_ORDER:
+        if cls not in layout or units.get(cls, 0) <= 0:
+            continue
+        weights = [(str(m), int(w)) for m, w in layout[cls]]
+        if len(weights) < 2:
+            continue
+        nz = [w for _, w in weights if w > 0]
+        if not nz:
+            continue
+        g = math.gcd(*nz) if len(nz) > 1 else nz[0]
+        norm = tuple((m, w // g) for m, w in weights)
+        vals = {w for _, w in norm}
+        if len(vals) == 1:
+            continue                      # uniform: collapses to the class
+        rows.append((cls, norm))
+    return tuple(rows)
+
+
 @dataclasses.dataclass(frozen=True)
 class RoutePlan:
     """One quantized, hashable routing decision for one collective call.
@@ -65,6 +110,19 @@ class RoutePlan:
     quantization that bounds the jit-variant cache (DESIGN.md §2).  Two
     calls with equal plans lower to identical HLO, which is exactly what
     makes the plan a cache key.
+
+    ``member_layout`` is the instance dimension (DESIGN.md §10): for each
+    class whose link has diverging members (one rail drained), the
+    gcd-normalized member weight vector its chunk units subdivide by.
+    Uniform layouts canonicalize AWAY (see
+    :func:`canonical_member_layout`), so the healthy fabric's plans are
+    identical to the class-level model's.  The layout is part of the
+    plan's identity — a member drain re-keys the PlanCache slot and the
+    executable cache — but does NOT change the lowered HLO: instances of
+    one class share the class's executor and mesh axis, and their payload
+    split maps to per-instance channel/NIC assignment on real hardware,
+    which XLA does not expose.  The timing model and the control plane
+    are where the subdivision is priced and steered.
     """
 
     collective: Collective
@@ -74,6 +132,7 @@ class RoutePlan:
     grain: int = CHUNK_GRID
     staged_substeps: int = DEFAULT_STAGED_SUBSTEPS
     accumulate: str = ACC_AUTO
+    member_layout: MemberLayout = ()
 
     def units(self) -> Dict[str, int]:
         return dict(self.chunk_units)
@@ -86,19 +145,36 @@ class RoutePlan:
     def is_primary_only(self) -> bool:
         return self.paths == (PATH_PRIMARY,)
 
+    def member_weights(self, path: str) -> Optional[Tuple[Tuple[str, int], ...]]:
+        """The (non-uniform) instance weights of one path class, if any."""
+        for cls, weights in self.member_layout:
+            if cls == path:
+                return weights
+        return None
+
 
 def build_plan(collective: Collective, axis_name: str,
                shares: Optional[Mapping[str, int]] = None,
                ortho_name: Optional[str] = None, *,
                grain: int = CHUNK_GRID,
                staged_substeps: int = DEFAULT_STAGED_SUBSTEPS,
-               accumulate: str = ACC_AUTO) -> RoutePlan:
+               accumulate: str = ACC_AUTO,
+               member_layout: Optional[Mapping[str, Sequence[Tuple[str, int]]]]
+               = None) -> RoutePlan:
     """Quantize a share vector into a RoutePlan.
 
     ``shares=None`` (or an ortho share with no ortho axis) degrades to the
     primary-only plan.  all_to_all has no ortho detour that avoids primary
     links, so any ortho share folds into the staged route — the balancer
     never routes a2a via ortho (see tests/test_routing.py).
+
+    ``member_layout`` maps path classes to per-instance weight sequences
+    (the communicator supplies each link's live member weights); it is
+    canonicalized so only genuinely diverging instance layouts become part
+    of the plan's identity.  The a2a ortho→staged fold drops the ortho
+    class's layout rather than merging it: the two classes subdivide over
+    DIFFERENT physical links, so a combined weight vector would be
+    meaningless.
     """
     if shares is None:
         units: Dict[str, int] = {PATH_PRIMARY: grain}
@@ -109,12 +185,17 @@ def build_plan(collective: Collective, axis_name: str,
                  cx.quantize_shares(shares, order, grain).items() if u > 0}
     if collective is Collective.ALL_TO_ALL and PATH_ORTHO in units:
         units[PATH_STAGED] = units.get(PATH_STAGED, 0) + units.pop(PATH_ORTHO)
+        if member_layout and PATH_ORTHO in member_layout:
+            member_layout = {c: w for c, w in member_layout.items()
+                             if c != PATH_ORTHO}
     chunk_units = tuple((p, units[p]) for p in PATH_ORDER if p in units)
     substeps = max(1, min(int(staged_substeps), MAX_STAGED_SUBSTEPS))
     return RoutePlan(collective=collective, axis_name=axis_name,
                      ortho_name=ortho_name,
                      chunk_units=chunk_units, grain=grain,
-                     staged_substeps=substeps, accumulate=accumulate)
+                     staged_substeps=substeps, accumulate=accumulate,
+                     member_layout=canonical_member_layout(member_layout,
+                                                           units))
 
 
 def resolve_accumulate(plan: RoutePlan, dtype,

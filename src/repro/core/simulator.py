@@ -43,7 +43,7 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.links import LinkSpec, NodeProfile, PROFILES
+from repro.core.links import LinkMember, LinkSpec, NodeProfile, PROFILES
 from repro.core.topology import Collective, RingSchedule
 
 MiB = 1024 * 1024
@@ -234,10 +234,93 @@ class PathTimingModel:
              + wire / (link.effective_GBps * 1e9))
         return t
 
+    # -- per-instance timing ---------------------------------------------------
+
+    def _member_split(self, link: LinkSpec,
+                      member_weights: Optional[Mapping[str, Mapping[str, float]]]
+                      ) -> Optional[Dict[str, float]]:
+        """The member weight vector a link's class share subdivides by, or
+        None for a link whose instances need no individual pricing.
+
+        A link is *member-treated* when its instances can diverge: some
+        member is unhealthy, or the caller supplied a non-uniform weight
+        vector (a Stage-2 drain in progress).  Uniform healthy members are
+        deliberately NOT treated — the class computation below then runs
+        the exact pre-member code path (same float ops, same noise draws),
+        which is what makes the parity contract of DESIGN.md §10 bitwise
+        rather than approximate: equal members finish simultaneously, so
+        the class aggregate IS the member timing.
+        """
+        if link.n_members <= 1 and link.healthy:
+            return None
+        given = (member_weights or {}).get(link.name)
+        if given is not None:
+            w = {m: float(given.get(m, 0.0)) for m in link.member_names}
+        else:
+            # health-proportional default: the subdivision the control
+            # plane itself initializes (split_by_health), fraction-exact
+            w = {m.name: m.health for m in link.instances}
+        if sum(w.values()) <= 0.0:
+            return None
+        vals = list(w.values())
+        if link.healthy and all(v == vals[0] for v in vals):
+            return None
+        return w
+
+    def member_time(self, link: LinkSpec, member: LinkMember, op: Collective,
+                    n_ranks: int, payload_bytes: float, member_share: float,
+                    bw_scale: float = 1.0) -> float:
+        """Completion time (s) for ``member_share`` of the payload on ONE
+        instance: the class's latency structure at a 1/n_members slice of
+        the class bandwidth, scaled by the instance's health (and by the
+        contention ``bw_scale`` when the class sits behind the PCIe
+        switch)."""
+        if member_share <= 0.0:
+            return 0.0
+        if link.is_primary:
+            fit = self._primary(op, n_ranks)
+            sched = RingSchedule(op, n_ranks)
+            wire = sched.wire_bytes(member_share * payload_bytes)
+            bw = (fit.effective_GBps / link.n_members * member.health
+                  * bw_scale)
+            if bw <= 0.0:
+                return float("inf")
+            return fit.per_op_latency_s + wire / (bw * 1e9)
+        steps, wire_fn = self.secondary_algo_cost(op, n_ranks)
+        wire = wire_fn(member_share * payload_bytes)
+        lat = self._secondary_step_latency(link, op, n_ranks)
+        if self.secondary_algo == "tree" and op is Collective.ALL_REDUCE:
+            lat = lat / AR_STEP_PENALTY
+        bw = (link.effective_GBps / link.n_members * member.health
+              * bw_scale)
+        if bw <= 0.0:
+            return float("inf")
+        return (link.fixed_overhead_us * 1e-6 + steps * lat
+                + wire / (bw * 1e9))
+
     def measure(self, op: Collective, n_ranks: int, payload_bytes: float,
-                shares: Mapping[str, float]) -> Dict[str, float]:
-        """Algorithm 1's MeasurePathTimings: per-path completion times (s)."""
+                shares: Mapping[str, float],
+                member_weights: Optional[Mapping[str, Mapping[str, float]]]
+                = None) -> Dict[str, float]:
+        """Algorithm 1's MeasurePathTimings: per-path completion times (s).
+
+        ``shares`` are keyed by link (class) name.  ``member_weights``
+        optionally subdivides a class share across its instances (integer
+        or float weights; defaults to health-proportional for unhealthy
+        links).  Member-treated links (see :meth:`_member_split`) report
+        the class completion as the max over instances and add one entry
+        per member name, which is what the control plane's per-instance
+        balancers consume.  Uniform healthy fabrics take the historical
+        class-only path — bit-identical output, same rng stream.
+        """
         out: Dict[str, float] = {}
+        splits: Dict[str, Dict[str, float]] = {}
+        for name, share in shares.items():
+            if share > 0.0:
+                w = self._member_split(self.profile.link(name),
+                                       member_weights)
+                if w is not None:
+                    splits[name] = w
         # PCIe-switch contention: contending paths jointly capped (Table 1).
         ceiling = self.profile.pcie_switch_ceiling_GBps
         contended = {l.name for l in self.profile.links if l.shares_pcie_switch}
@@ -245,19 +328,55 @@ class PathTimingModel:
         if ceiling is not None:
             for name in contended:
                 if shares.get(name, 0.0) > 0.0:
-                    demand += self.profile.link(name).effective_GBps
+                    link = self.profile.link(name)
+                    if name in splits:
+                        # the class's deliverable bandwidth is the sum over
+                        # its ACTIVE instances (a drained-to-zero member
+                        # stops contending; a degraded one contends at its
+                        # reduced rate)
+                        demand += sum(
+                            link.effective_GBps / link.n_members * m.health
+                            for m in link.instances
+                            if splits[name].get(m.name, 0.0) > 0.0)
+                    else:
+                        demand += link.effective_GBps
         scale = 1.0
         if ceiling is not None and demand > ceiling:
             scale = ceiling / demand
         for name, share in shares.items():
+            if name in splits and share > 0.0:
+                link = self.profile.link(name)
+                w = splits[name]
+                wsum = sum(w.values())
+                bw_scale = scale if name in contended else 1.0
+                times = {
+                    m.name: self.member_time(
+                        link, m, op, n_ranks, payload_bytes,
+                        share * w.get(m.name, 0.0) / wsum, bw_scale)
+                    for m in link.instances}
+                t = max(times.values())
+                mult = 1.0
+                if self.noise > 0.0:
+                    mult = float(1.0 + self._rng.normal(0.0, self.noise))
+                if link.n_members > 1:
+                    for mn, mt in times.items():
+                        out[mn] = max(mt * mult, 0.0)
+                out[name] = max(t * mult, 0.0)
+                continue
             t = self.path_time(name, op, n_ranks, payload_bytes, share)
             if name in contended and scale < 1.0 and share > 0.0:
                 link = self.profile.link(name)
                 steps, wire_fn = self.secondary_algo_cost(op, n_ranks)
                 wire = wire_fn(share * payload_bytes)
                 bw = link.effective_GBps * scale
-                t = (link.fixed_overhead_us * 1e-6
-                     + steps * self._secondary_step_latency(link, op, n_ranks)
+                lat = self._secondary_step_latency(link, op, n_ranks)
+                if self.secondary_algo == "tree" \
+                        and op is Collective.ALL_REDUCE:
+                    # same butterfly discount path_time (and member_time)
+                    # apply — the contended recompute must price the
+                    # identical algorithm, just at the capped bandwidth
+                    lat = lat / AR_STEP_PENALTY
+                t = (link.fixed_overhead_us * 1e-6 + steps * lat
                      + wire / (bw * 1e9))
             if self.noise > 0.0 and share > 0.0:
                 t *= float(1.0 + self._rng.normal(0.0, self.noise))
@@ -266,14 +385,20 @@ class PathTimingModel:
 
     # -- collective-level results --------------------------------------------
     def total_time(self, op: Collective, n_ranks: int, payload_bytes: float,
-                   shares: Mapping[str, float]) -> float:
-        times = self.measure(op, n_ranks, payload_bytes, shares)
+                   shares: Mapping[str, float],
+                   member_weights: Optional[Mapping[str, Mapping[str, float]]]
+                   = None) -> float:
+        times = self.measure(op, n_ranks, payload_bytes, shares,
+                             member_weights=member_weights)
         active = [t for name, t in times.items() if shares.get(name, 0.0) > 0]
         return max(active) if active else 0.0
 
     def algbw_GBps(self, op: Collective, n_ranks: int, payload_bytes: float,
-                   shares: Mapping[str, float]) -> float:
-        t = self.total_time(op, n_ranks, payload_bytes, shares)
+                   shares: Mapping[str, float],
+                   member_weights: Optional[Mapping[str, Mapping[str, float]]]
+                   = None) -> float:
+        t = self.total_time(op, n_ranks, payload_bytes, shares,
+                            member_weights=member_weights)
         return (payload_bytes / t) / 1e9 if t > 0 else float("inf")
 
     def nccl_baseline_GBps(self, op: Collective, n_ranks: int,

@@ -62,7 +62,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             backend: str = "flexlink", mesh_split=None,
             remat=True, variant: str = "",
             tuning_cache: str = "", secondary_algo: str = "ring",
-            nodes: int = 1, cluster_name: str = "") -> dict:
+            nodes: int = 1, cluster_name: str = "",
+            degrade: str = "") -> dict:
     """mesh_split: optional (data, model) reshape of the 256-chip pod —
     the TP-degree tuning lever of EXPERIMENTS §Perf.  remat: True | False |
     "dots" (selective checkpointing).  tuning_cache: TuningProfile JSON —
@@ -70,11 +71,18 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     so a later dry-run (or live launch) skips the profiling phase.
     nodes > 1 prepends a simulated "node" axis (repro.cluster): the step
     lowers the two-tier hierarchical gradient sync and the NIC tier's
-    slots tune (and warm-start) like any other."""
+    slots tune (and warm-start) like any other.
+    degrade: a ``name[:member]=factor`` fault spec (DESIGN.md §10):
+    scales one link member's effective bandwidth — the degraded tier
+    profile gets a distinct name, so its tuning (which drains exactly the
+    sick member) keys separate TuningProfile entries from the healthy
+    fabric's."""
     cfg = get_config(arch)
     shape = SH.SHAPES[shape_name]
-    from repro.configs.clusters import resolve_cluster
+    from repro.configs.clusters import resolve_cluster, resolve_degrade
     cluster, nodes = resolve_cluster(cluster_name, nodes)
+    cluster, intra_profile = resolve_degrade(
+        cluster, nodes, cluster.node.name if cluster else "tpu_v5e", degrade)
     if nodes > 1:
         if multi_pod:
             raise ValueError("--nodes does not combine with the multi-pod "
@@ -98,7 +106,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     # A named cluster sets the intra profile: its node type IS the machine
     # the run models (the ParallelCtx cross-check would reject a mismatch).
     comm = CommConfig(backend=backend,
-                      profile=cluster.node.name if cluster else "tpu_v5e",
+                      profile=intra_profile,
                       runtime_balancing=False, tag="dryrun",
                       tuning_cache=tuning_cache,
                       secondary_algo=secondary_algo)
@@ -147,6 +155,19 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         # main() catches per-pair exceptions
         if prog is not None:
             prog.close()
+
+    # per-member share table (the observability satellite of DESIGN.md
+    # §10): one row per multi-member link per tuned slot — on a degraded
+    # run this is where a single drained rail is visible next to its
+    # still-loaded siblings
+    for axis, slots in sorted(tuning_status.items()):
+        for slot_name, st in sorted(slots.items()):
+            for link, weights in sorted((st.get("members") or {}).items()):
+                total = sum(weights.values()) or 1
+                cells = " ".join(f"{m}={w}({w / total:.0%})"
+                                 for m, w in weights.items())
+                print(f"  [members] {axis}/{slot_name} {link}: {cells}",
+                      flush=True)
 
     cost = compiled.cost_analysis() or {}
     # older JAX returns a one-element list of dicts (one per computation)
@@ -215,6 +236,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "backend": backend, "chips": chips, "ok": True,
         "variant": variant, "remat": str(remat),
+        "degrade": degrade,
         "tuning": tuning_status,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory_analysis": mem_report,
@@ -254,6 +276,13 @@ def main(argv=None) -> int:
     ap.add_argument("--cluster", default="",
                     help="named cluster topology from configs/clusters.py "
                          "(default: synthesized from the tpu_v5e profile)")
+    ap.add_argument("--degrade", default="",
+                    help="fault injection name[:member]=factor: scale one "
+                         "link member's effective bandwidth (e.g. "
+                         "rail3=0.25 drains one NIC rail to quarter "
+                         "health; pcie=0.5 throttles the whole host "
+                         "path).  The degraded fabric keys its own "
+                         "TuningProfile entries")
     ap.add_argument("--tuning-cache", default="",
                     help="TuningProfile JSON: warm-start Stage-1 and save "
                          "the converged shares back after lowering")
@@ -293,6 +322,11 @@ def main(argv=None) -> int:
                 extra += f"-{args.cluster}"
             tag = (f"{arch}__{shape_name}__{mesh_name}-{extra}__"
                    f"{args.backend}")
+        if args.degrade:
+            # a degraded run prices a different fabric: never share a
+            # result-cache file with the healthy run of the same layout
+            safe = args.degrade.replace(":", "_").replace("=", "-")
+            tag += f"__degrade-{safe}"
         path = os.path.join(args.out, tag + ".json")
         if os.path.exists(path):
             print(f"[skip] {tag} (cached)")
@@ -303,7 +337,8 @@ def main(argv=None) -> int:
                           args.backend, mesh_split=mesh_split,
                           tuning_cache=args.tuning_cache,
                           secondary_algo=args.secondary_algo,
-                          nodes=nodes, cluster_name=args.cluster)
+                          nodes=nodes, cluster_name=args.cluster,
+                          degrade=args.degrade)
         except Exception as e:
             traceback.print_exc()
             rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,

@@ -35,6 +35,10 @@ def main(argv=None) -> int:
                     help="Stage-2 TimingSource (control/timing.py)")
     ap.add_argument("--secondary-algo", choices=["ring", "tree"],
                     default="ring")
+    ap.add_argument("--degrade", default="",
+                    help="fault injection name[:member]=factor "
+                         "(DESIGN.md §10); with --nodes it degrades the "
+                         "cluster's NIC tier, else the node profile")
     ap.add_argument("--nodes", type=int, default=1,
                     help="cluster node count: registers the NIC-tier "
                          "profile (so --tuning-cache keys line up with "
@@ -50,22 +54,26 @@ def main(argv=None) -> int:
 
     # single-device ctx, but with the comm config plumbed so a multi-axis
     # deployment of this launcher inherits the control-plane flags
-    comm = CommConfig(
-        profile="tpu_v5e", timing=args.timing,
-        secondary_algo=args.secondary_algo,
-        tuning_cache=args.tuning_cache)
+    from repro.configs.clusters import resolve_degrade
+    profile = "tpu_v5e"
     cluster = None
     if args.nodes > 1:
         from repro.cluster.topology import cluster_for
-        cluster = cluster_for(comm.profile, args.nodes)
+        cluster = cluster_for(profile, args.nodes)
+    cluster, profile = resolve_degrade(cluster, args.nodes, profile,
+                                       args.degrade)
+    comm = CommConfig(
+        profile=profile, timing=args.timing,
+        secondary_algo=args.secondary_algo,
+        tuning_cache=args.tuning_cache)
     ctx = ParallelCtx(comm_config=comm, cluster=cluster)
     if not ctx.comms() and (args.timing != "sim" or args.tuning_cache
                             or args.secondary_algo != "ring"
-                            or args.nodes > 1):
+                            or args.nodes > 1 or args.degrade):
         print("note: single-device launch has no communicators — "
-              "--timing/--tuning-cache/--secondary-algo/--nodes take "
-              "effect only with parallel axes (the decode wave itself "
-              "never crosses the NIC tier; see launch/shapes.py)")
+              "--timing/--tuning-cache/--secondary-algo/--nodes/--degrade "
+              "take effect only with parallel axes (the decode wave "
+              "itself never crosses the NIC tier; see launch/shapes.py)")
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, ctx,
                          ServeConfig(slots=args.slots, cache_len=96))

@@ -48,6 +48,11 @@ def main(argv=None) -> int:
     ap.add_argument("--cluster", default="",
                     help="named cluster topology from configs/clusters.py "
                          "(default: synthesized from the comm profile)")
+    ap.add_argument("--degrade", default="",
+                    help="fault injection name[:member]=factor (e.g. "
+                         "rail3=0.25): scale one link member's effective "
+                         "bandwidth; Stage 2 drains exactly that member "
+                         "(DESIGN.md §10)")
     ap.add_argument("--backend", choices=["flexlink", "nccl"],
                     default="flexlink")
     ap.add_argument("--ckpt-dir", default="")
@@ -67,8 +72,11 @@ def main(argv=None) -> int:
         cfg = cfg.reduced()
     shape = SH.InputShape("cli", "train", args.seq_len, args.batch)
 
-    from repro.configs.clusters import resolve_cluster
+    from repro.configs.clusters import resolve_cluster, resolve_degrade
     cluster, n_nodes = resolve_cluster(args.cluster, args.nodes)
+    cluster, intra_profile = resolve_degrade(
+        cluster, n_nodes, cluster.node.name if cluster else "tpu_v5e",
+        args.degrade)
 
     if args.mesh_shape:
         dims = tuple(int(x) for x in args.mesh_shape.split(","))
@@ -89,7 +97,7 @@ def main(argv=None) -> int:
     # a named cluster sets the intra profile: its node type IS the machine
     # being modelled (ParallelCtx cross-checks cluster vs profile)
     comm = CommConfig(backend=args.backend,
-                      profile=cluster.node.name if cluster else "tpu_v5e",
+                      profile=intra_profile,
                       timing=args.timing,
                       secondary_algo=args.secondary_algo,
                       tuning_cache=args.tuning_cache)

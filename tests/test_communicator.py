@@ -128,7 +128,8 @@ def test_report_contains_prediction():
     assert rep.pop("tier") == "intra"
     rollup = rep.pop("rollup")
     assert rollup == {"intra": {"slots": 1, "warm": 0, "converged": 1,
-                                "stage2_adjustments": 0, "probes": 0}}
+                                "stage2_adjustments": 0, "probes": 0,
+                                "member_moves": 0, "drained_members": 0}}
     (key, entry), = rep.items()
     assert entry["predicted_algbw_GBps"] >= entry["nccl_algbw_GBps"] * 0.98
     assert entry["converged"]
