@@ -8,8 +8,8 @@ import time
 
 from benchmarks import (degraded_rail, fig2_improvement, fig5_runtime,
                         future_tree_allreduce, hierarchy_crossover,
-                        table1_idle_bw, table2_bandwidth, roofline_report,
-                        perf_hillclimb)
+                        overlap_step, table1_idle_bw, table2_bandwidth,
+                        roofline_report, perf_hillclimb)
 
 
 def main() -> None:
@@ -23,6 +23,7 @@ def main() -> None:
         ("future_tree_allreduce", future_tree_allreduce.run),
         ("hierarchy_crossover", hierarchy_crossover.run),
         ("degraded_rail", degraded_rail.run),
+        ("overlap_step", overlap_step.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -64,12 +64,15 @@ class TimingSource:
                     fractions: Mapping[str, float], *,
                     bucket: Optional[int] = None,
                     member_weights: Optional[Mapping[str, Mapping[str, float]]]
-                    = None) -> Dict[str, float]:
+                    = None, contention: float = 1.0) -> Dict[str, float]:
         """Per-call per-path completion times.  ``member_weights`` is the
         slot's live instance subdivision (link -> member -> weight);
         sources that can price instances individually (the simulator) add
         member-keyed entries for diverging links, which feed the slot's
-        per-instance drain balancers."""
+        per-instance drain balancers.  ``contention`` is the in-flight
+        plan demand the call ran under (issue/await windows, DESIGN.md
+        §11): analytic sources divide link bandwidth by it; measured
+        sources ignore it — wall clock already embeds real contention."""
         raise NotImplementedError
 
     def ingest_step(self, calls: Sequence[StepCall],
@@ -91,9 +94,10 @@ class SimTimingSource(TimingSource):
     kind = "sim"
 
     def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
-                    bucket=None, member_weights=None):
+                    bucket=None, member_weights=None, contention=1.0):
         return self.model.measure(op, n_ranks, payload_bytes, fractions,
-                                  member_weights=member_weights)
+                                  member_weights=member_weights,
+                                  contention=contention)
 
 
 @dataclasses.dataclass
@@ -168,7 +172,9 @@ class MeasuredTimingSource(TimingSource):
     # -- TimingSource API ----------------------------------------------------
 
     def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
-                    bucket=None, member_weights=None):
+                    bucket=None, member_weights=None, contention=1.0):
+        # contention accepted but unused: measured wall clock already
+        # embeds whatever overlap actually happened on the fabric.
         # member_weights accepted but unpriced: one scalar step duration
         # cannot attribute slowness to an INSTANCE (the module-docstring
         # observability caveat, one level deeper).  Per-member hardware
@@ -269,12 +275,13 @@ class DegradedTimingSource(TimingSource):
         return self.inner.stage1_measure(op, n_ranks, payload_bytes)
 
     def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
-                    bucket=None, member_weights=None):
+                    bucket=None, member_weights=None, contention=1.0):
         out = dict(self.inner.timings_for(
             op, n_ranks, payload_bytes, fractions, bucket=bucket,
-            member_weights=member_weights))
+            member_weights=member_weights, contention=contention))
         sim = self.model.measure(op, n_ranks, payload_bytes, fractions,
-                                 member_weights=member_weights)
+                                 member_weights=member_weights,
+                                 contention=contention)
         # overlay ONLY instance entries (keys the class-level source does
         # not produce): the emulated per-rail counters
         for key, t in sim.items():

@@ -110,14 +110,22 @@ class CommConfig:
 class ReplayRecorder:
     """Two-phase issued-call log for ONE step program.
 
-    ``record`` collects the (op, nbytes) of every ``plan_for`` during
-    tracing; the first observed step after a trace PROMOTES the pending
-    list to the replay log (replacing the previous one).  This keeps true
-    per-step multiplicity (a 48-layer step replays 48 calls — the paper's
-    "last 10 collective calls" window is per call, not per step) while
-    re-traces after a Stage-2 share move replace the log instead of
-    double-counting into it.  One recorder per step program: interleaved
-    programs on a shared communicator each keep their own multiset.
+    ``record`` collects the (op, nbytes, window) of every ``plan_for``
+    during tracing; the first observed step after a trace PROMOTES the
+    pending list to the replay log (replacing the previous one).  This
+    keeps true per-step multiplicity (a 48-layer step replays 48 calls —
+    the paper's "last 10 collective calls" window is per call, not per
+    step) while re-traces after a Stage-2 share move replace the log
+    instead of double-counting into it.  One recorder per step program:
+    interleaved programs on a shared communicator each keep their own
+    multiset — and each issue scope of a program (a gradient bucket, a
+    decode gather) keeps its own sub-recorder named ``program/tag``, so
+    interleaved in-flight buckets stay disjoint too (DESIGN.md §11).
+
+    ``window`` is the issue-window id the call was traced under (``None``
+    outside any issue scope): at observe time the communicator resolves it
+    to the window's population — the contention factor the call's Stage-2
+    timings are priced at.
     """
 
     __slots__ = ("_pending", "_trace_log", "touched")
@@ -131,8 +139,9 @@ class ReplayRecorder:
         #: a slot this one never touches cannot spuriously re-key it.
         self.touched: set = set()
 
-    def record(self, op: Collective, nbytes: int) -> None:
-        self._pending.append((op, nbytes))
+    def record(self, op: Collective, nbytes: int,
+               window: Optional[int] = None) -> None:
+        self._pending.append((op, nbytes, window))
 
     def touch(self, op: Collective, bucket: int) -> None:
         self.touched.add((op, bucket))
@@ -155,22 +164,68 @@ class ReplayRecorder:
 
 
 class _ActiveRecorder:
-    """Re-entrant-safe scope: route ``plan_for`` records to one recorder."""
+    """Re-entrant-safe scope: route ``plan_for`` records to one recorder.
+    Tracks the recorder's NAME alongside it so nested issue scopes can
+    derive their sub-recorder names (``parent/tag``)."""
 
-    __slots__ = ("_comm", "_rec", "_prev")
+    __slots__ = ("_comm", "_rec", "_name", "_prev", "_prev_name")
 
-    def __init__(self, comm: "FlexCommunicator", rec: ReplayRecorder):
+    def __init__(self, comm: "FlexCommunicator", rec: ReplayRecorder,
+                 name: Optional[str] = None):
         self._comm = comm
         self._rec = rec
+        self._name = name
         self._prev: Optional[ReplayRecorder] = None
+        self._prev_name: Optional[str] = None
 
     def __enter__(self):
         self._prev = self._comm._active_recorder
+        self._prev_name = self._comm._active_name
         self._comm._active_recorder = self._rec
+        self._comm._active_name = self._name
         return self._rec
 
     def __exit__(self, *exc):
         self._comm._active_recorder = self._prev
+        self._comm._active_name = self._prev_name
+        return False
+
+
+class _IssueScope:
+    """One in-flight plan's trace scope (DESIGN.md §11).
+
+    Entering routes traced calls to the ``parent/tag`` sub-recorder and
+    tags them with the current issue WINDOW — all scopes issued between
+    two await barriers share one window, and a call's Stage-2 contention
+    factor is its window's population.  Exiting restores the parent
+    recorder; the window stays open until :meth:`FlexCommunicator.
+    await_barrier` closes it.
+    """
+
+    __slots__ = ("_comm", "_tag", "_inner", "_prev_window")
+
+    def __init__(self, comm: "FlexCommunicator", tag: str):
+        self._comm = comm
+        self._tag = tag
+        self._inner: Optional[_ActiveRecorder] = None
+        self._prev_window: Optional[int] = None
+
+    def __enter__(self):
+        comm = self._comm
+        parent = comm._active_name
+        name = f"{parent}/{self._tag}" if parent else f"/{self._tag}"
+        rec = comm._recorders.setdefault(name, ReplayRecorder())
+        wid = comm._ensure_window()
+        comm._issue_windows[wid].add(name)
+        self._inner = _ActiveRecorder(comm, rec, name)
+        self._inner.__enter__()
+        self._prev_window = comm._active_window
+        comm._active_window = wid
+        return rec
+
+    def __exit__(self, *exc):
+        self._comm._active_window = self._prev_window
+        self._inner.__exit__(*exc)
         return False
 
 
@@ -220,6 +275,17 @@ class FlexCommunicator:
         self._recorders: Dict[str, ReplayRecorder] = {}
         self._default_recorder = ReplayRecorder()
         self._active_recorder = self._default_recorder
+        self._active_name: Optional[str] = None
+        #: issue/await windows (DESIGN.md §11): window id -> the set of
+        #: issue-scope names that joined it.  A window's population is the
+        #: contention factor every call traced under it is priced at; the
+        #: registry is tiny (one window per overlap region per trace) and
+        #: promoted logs may still reference old ids, so entries are never
+        #: pruned.
+        self._issue_windows: Dict[int, set] = {}
+        self._window_seq = 0
+        self._open_window: Optional[int] = None
+        self._active_window: Optional[int] = None
 
     # -- replay recorders ------------------------------------------------------
 
@@ -233,15 +299,75 @@ class FlexCommunicator:
         return self._recorders[name]
 
     def unregister_recorder(self, name: str) -> None:
-        rec = self._recorders.pop(name, None)
-        if rec is not None and rec is self._active_recorder:
-            self._active_recorder = self._default_recorder
+        """Drop a program's recorder AND its issue sub-recorders (the
+        ``name/...`` family a bucketed step registers lazily)."""
+        doomed = [name] + [n for n in self._recorders
+                           if n.startswith(name + "/")]
+        for n in doomed:
+            rec = self._recorders.pop(n, None)
+            if rec is not None and rec is self._active_recorder:
+                self._active_recorder = self._default_recorder
+                self._active_name = None
 
-    def recording(self, rec: ReplayRecorder):
+    def family_recorders(self, name: Optional[str] = None) -> list:
+        """One program's recorder plus its issue sub-recorders, base
+        first.  ``None`` names the default (program-less) recorder, whose
+        sub-recorders are keyed ``/tag``.  Observation and footprint
+        queries go through the family so a bucketed step's per-bucket
+        logs all feed Stage 2 (and all sign the executable cache)."""
+        if name is None:
+            base = self._default_recorder
+            prefix = "/"
+        else:
+            base = self._recorders[name]
+            prefix = name + "/"
+        subs = [rec for n, rec in sorted(self._recorders.items())
+                if n.startswith(prefix) and not n.endswith("/lower")
+                and "/lower/" not in n]
+        return [base] + subs
+
+    def family_footprint(self, name: Optional[str] = None) -> set:
+        """Union of the family's touched (op, bucket) slots."""
+        out: set = set()
+        for rec in self.family_recorders(name):
+            out |= rec.touched
+        return out
+
+    def recording(self, rec: ReplayRecorder, name: Optional[str] = None):
         """Context manager routing every ``plan_for`` traced inside it to
         ``rec`` — a StepProgram wraps each executable call in this so its
-        traces land in its own recorder."""
-        return _ActiveRecorder(self, rec)
+        traces land in its own recorder.  ``name`` lets nested issue
+        scopes derive their ``name/tag`` sub-recorders."""
+        return _ActiveRecorder(self, rec, name)
+
+    # -- issue/await windows (DESIGN.md §11) -----------------------------------
+
+    def issue_scope(self, tag: str):
+        """Trace scope for one in-flight plan: calls traced inside land in
+        the active recorder's ``/tag`` sub-recorder and join the open
+        issue window.  All scopes issued before the next
+        :meth:`await_barrier` share the window — its population is the
+        contention factor their Stage-2 timings are priced at."""
+        return _IssueScope(self, tag)
+
+    def _ensure_window(self) -> int:
+        if self._open_window is None:
+            self._window_seq += 1
+            self._open_window = self._window_seq
+            self._issue_windows[self._open_window] = set()
+        return self._open_window
+
+    def await_barrier(self) -> None:
+        """Close the open issue window: scopes issued after this start a
+        fresh one (and stop contending with the drained transfers)."""
+        self._open_window = None
+
+    def window_population(self, window: Optional[int]) -> float:
+        """The contention factor for a call traced under ``window``: how
+        many plans were in flight with it (>= 1.0)."""
+        if window is None:
+            return 1.0
+        return float(max(len(self._issue_windows.get(window, ())), 1))
 
     def issued_calls(self):
         """Default-recorder replay multiset (direct, program-less use)."""
@@ -270,18 +396,31 @@ class FlexCommunicator:
         executable-cache signature (DESIGN.md §2, §7).
         """
         rec = recorder if recorder is not None else self._default_recorder
-        rec.promote()
-        calls = rec.issued_calls()
+        return self.observe_recorders([rec], elapsed_s=elapsed_s)
+
+    def observe_recorders(self, recorders, *,
+                          elapsed_s: Optional[float] = None) -> bool:
+        """Stage-2 feedback for one executed step whose trace spans several
+        recorders — a program's base recorder plus its issue sub-recorders
+        (one per in-flight bucket, :meth:`family_recorders`).  The merged
+        multiset apportions a measured duration exactly as a single log
+        would; each call then replays at its issue window's contention
+        factor (serial calls at exactly 1.0 — the bitwise parity case)."""
+        calls: list = []
+        for rec in recorders:
+            rec.promote()
+            calls.extend(rec.issued_calls())
         if (elapsed_s is not None and calls and self._balancing_active):
             self.timing.ingest_step(
                 [(op, self.n_ranks, bucket_for(n), n,
                   self.slot(op, bucket_for(n)).fractions())
-                 for op, n in calls], elapsed_s)
+                 for op, n, _w in calls], elapsed_s)
         # control_state covers class shares AND member weights: a member
         # drain re-keys the executed plan exactly like a class move does
         before = {k: s.control_state() for k, s in self._slots.items()}
-        for op, nbytes in calls:
-            self.record_call(op, nbytes)
+        for op, nbytes, window in calls:
+            self.record_call(op, nbytes,
+                             contention=self.window_population(window))
         after = {k: s.control_state() for k, s in self._slots.items()}
         return before != after
 
@@ -401,16 +540,20 @@ class FlexCommunicator:
         sc = self.slot(op, bucket_for(payload_bytes))
         return {self.route_of(p): s for p, s in sc.shares.items() if s > 0}
 
-    def record_call(self, op: Collective, payload_bytes: int) -> None:
+    def record_call(self, op: Collective, payload_bytes: int,
+                    contention: float = 1.0) -> None:
         """Stage 2: report one call's timings to its slot controller.  The
         timings come from the configured TimingSource — the simulator
-        (default) or wall-clock-derived estimates (measured mode)."""
+        (default) or wall-clock-derived estimates (measured mode).
+        ``contention`` is the in-flight plan demand the call ran under
+        (its issue window's population; 1.0 for serial calls)."""
         if not self._balancing_active:
             return
         sc = self.slot(op, bucket_for(payload_bytes))
         timings = self.timing.timings_for(
             op, self.n_ranks, payload_bytes, sc.fractions(),
-            bucket=sc.bucket, member_weights=sc.member_weights() or None)
+            bucket=sc.bucket, member_weights=sc.member_weights() or None,
+            contention=contention)
         sc.report(timings)
 
     def save_tuning(self, path: Optional[str] = None) -> int:
@@ -509,7 +652,7 @@ class FlexCommunicator:
             # the replay log only feeds Stage 2 — don't grow it on
             # communicators whose host loop never drains it (baseline /
             # degenerate / balancing-off modes)
-            self._active_recorder.record(op, nbytes)
+            self._active_recorder.record(op, nbytes, self._active_window)
         return self._bucket_plan(op, bucket)
 
     def plan_signature(self, touched: Optional[set] = None) -> Tuple:

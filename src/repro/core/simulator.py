@@ -33,6 +33,18 @@ Secondary-path op modifiers (both argued in the paper):
     caused by reduce sum computation") → step latency is multiplied by
     ``AR_STEP_PENALTY`` on non-primary paths;
   - reduce_scatter pays half of that (one reduce per step, no second phase).
+
+Concurrency (DESIGN.md §11): every timing entry point takes a ``contention``
+factor — the number of plans in flight on the fabric when the call runs.
+Overlapping transfers on a shared link split its bandwidth by active-plan
+demand, so every wire term is priced at ``bw / contention`` while latency
+terms (launch overhead, ring-step sync) are unchanged: latency is per-plan
+state machinery, not a shared resource.  The member-aware path prices each
+instance at its 1/n_members slice of the *contended* class bandwidth.  The
+serial case ``contention=1.0`` divides by exactly 1.0 — bitwise identity,
+same rng stream — which is what keeps all pre-overlap plan signatures,
+Stage-1 trajectories and tuning caches byte-identical (the §10 parity
+discipline, extended to time).
 """
 
 from __future__ import annotations
@@ -214,8 +226,11 @@ class PathTimingModel:
 
     # -- per-path timing -----------------------------------------------------
     def path_time(self, link_name: str, op: Collective, n_ranks: int,
-                  payload_bytes: float, share: float) -> float:
-        """Completion time (s) for `share` of the payload on one path."""
+                  payload_bytes: float, share: float,
+                  contention: float = 1.0) -> float:
+        """Completion time (s) for `share` of the payload on one path.
+        ``contention`` divides the link bandwidth by the in-flight plan
+        demand; 1.0 is the bitwise-identical serial case."""
         if share <= 0.0:
             return 0.0
         link = self.profile.link(link_name)
@@ -223,15 +238,17 @@ class PathTimingModel:
         wire = sched.wire_bytes(share * payload_bytes)
         if link.is_primary:
             fit = self._primary(op, n_ranks)
-            return fit.per_op_latency_s + wire / (fit.effective_GBps * 1e9)
+            bw = fit.effective_GBps / contention
+            return fit.per_op_latency_s + wire / (bw * 1e9)
         steps, wire_fn = self.secondary_algo_cost(op, n_ranks)
         wire = wire_fn(share * payload_bytes)
         lat = self._secondary_step_latency(link, op, n_ranks)
         if self.secondary_algo == "tree" and op is Collective.ALL_REDUCE:
             lat = lat / AR_STEP_PENALTY  # butterfly has no serialized
             # recv->reduce->forward chain; each step is a paired exchange
+        bw = link.effective_GBps / contention
         t = (link.fixed_overhead_us * 1e-6 + steps * lat
-             + wire / (link.effective_GBps * 1e9))
+             + wire / (bw * 1e9))
         return t
 
     # -- per-instance timing ---------------------------------------------------
@@ -269,12 +286,14 @@ class PathTimingModel:
 
     def member_time(self, link: LinkSpec, member: LinkMember, op: Collective,
                     n_ranks: int, payload_bytes: float, member_share: float,
-                    bw_scale: float = 1.0) -> float:
+                    bw_scale: float = 1.0,
+                    contention: float = 1.0) -> float:
         """Completion time (s) for ``member_share`` of the payload on ONE
         instance: the class's latency structure at a 1/n_members slice of
         the class bandwidth, scaled by the instance's health (and by the
-        contention ``bw_scale`` when the class sits behind the PCIe
-        switch)."""
+        PCIe-switch ``bw_scale`` when the class sits behind the switch).
+        ``contention`` divides the instance's slice by the in-flight plan
+        demand — concurrent plans contend per member, not just per class."""
         if member_share <= 0.0:
             return 0.0
         if link.is_primary:
@@ -282,7 +301,7 @@ class PathTimingModel:
             sched = RingSchedule(op, n_ranks)
             wire = sched.wire_bytes(member_share * payload_bytes)
             bw = (fit.effective_GBps / link.n_members * member.health
-                  * bw_scale)
+                  * bw_scale) / contention
             if bw <= 0.0:
                 return float("inf")
             return fit.per_op_latency_s + wire / (bw * 1e9)
@@ -292,7 +311,7 @@ class PathTimingModel:
         if self.secondary_algo == "tree" and op is Collective.ALL_REDUCE:
             lat = lat / AR_STEP_PENALTY
         bw = (link.effective_GBps / link.n_members * member.health
-              * bw_scale)
+              * bw_scale) / contention
         if bw <= 0.0:
             return float("inf")
         return (link.fixed_overhead_us * 1e-6 + steps * lat
@@ -301,7 +320,7 @@ class PathTimingModel:
     def measure(self, op: Collective, n_ranks: int, payload_bytes: float,
                 shares: Mapping[str, float],
                 member_weights: Optional[Mapping[str, Mapping[str, float]]]
-                = None) -> Dict[str, float]:
+                = None, contention: float = 1.0) -> Dict[str, float]:
         """Algorithm 1's MeasurePathTimings: per-path completion times (s).
 
         ``shares`` are keyed by link (class) name.  ``member_weights``
@@ -312,6 +331,12 @@ class PathTimingModel:
         per member name, which is what the control plane's per-instance
         balancers consume.  Uniform healthy fabrics take the historical
         class-only path — bit-identical output, same rng stream.
+
+        ``contention`` is the in-flight plan demand (DESIGN.md §11): every
+        wire term is priced at ``bw / contention`` (the PCIe-switch ceiling
+        is NOT re-scaled — k plans at 1/k bandwidth present the same
+        instantaneous switch demand as one).  The default 1.0 divides by
+        exactly one: bitwise-identical to the serial pricing.
         """
         out: Dict[str, float] = {}
         splits: Dict[str, Dict[str, float]] = {}
@@ -352,7 +377,8 @@ class PathTimingModel:
                 times = {
                     m.name: self.member_time(
                         link, m, op, n_ranks, payload_bytes,
-                        share * w.get(m.name, 0.0) / wsum, bw_scale)
+                        share * w.get(m.name, 0.0) / wsum, bw_scale,
+                        contention=contention)
                     for m in link.instances}
                 t = max(times.values())
                 mult = 1.0
@@ -363,12 +389,13 @@ class PathTimingModel:
                         out[mn] = max(mt * mult, 0.0)
                 out[name] = max(t * mult, 0.0)
                 continue
-            t = self.path_time(name, op, n_ranks, payload_bytes, share)
+            t = self.path_time(name, op, n_ranks, payload_bytes, share,
+                               contention=contention)
             if name in contended and scale < 1.0 and share > 0.0:
                 link = self.profile.link(name)
                 steps, wire_fn = self.secondary_algo_cost(op, n_ranks)
                 wire = wire_fn(share * payload_bytes)
-                bw = link.effective_GBps * scale
+                bw = link.effective_GBps * scale / contention
                 lat = self._secondary_step_latency(link, op, n_ranks)
                 if self.secondary_algo == "tree" \
                         and op is Collective.ALL_REDUCE:
@@ -387,18 +414,20 @@ class PathTimingModel:
     def total_time(self, op: Collective, n_ranks: int, payload_bytes: float,
                    shares: Mapping[str, float],
                    member_weights: Optional[Mapping[str, Mapping[str, float]]]
-                   = None) -> float:
+                   = None, contention: float = 1.0) -> float:
         times = self.measure(op, n_ranks, payload_bytes, shares,
-                             member_weights=member_weights)
+                             member_weights=member_weights,
+                             contention=contention)
         active = [t for name, t in times.items() if shares.get(name, 0.0) > 0]
         return max(active) if active else 0.0
 
     def algbw_GBps(self, op: Collective, n_ranks: int, payload_bytes: float,
                    shares: Mapping[str, float],
                    member_weights: Optional[Mapping[str, Mapping[str, float]]]
-                   = None) -> float:
+                   = None, contention: float = 1.0) -> float:
         t = self.total_time(op, n_ranks, payload_bytes, shares,
-                            member_weights=member_weights)
+                            member_weights=member_weights,
+                            contention=contention)
         return (payload_bytes / t) / 1e9 if t > 0 else float("inf")
 
     def nccl_baseline_GBps(self, op: Collective, n_ranks: int,

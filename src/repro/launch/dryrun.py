@@ -63,7 +63,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             remat=True, variant: str = "",
             tuning_cache: str = "", secondary_algo: str = "ring",
             nodes: int = 1, cluster_name: str = "",
-            degrade: str = "") -> dict:
+            degrade: str = "", bucket_mb: float = 0.0) -> dict:
     """mesh_split: optional (data, model) reshape of the 256-chip pod —
     the TP-degree tuning lever of EXPERIMENTS §Perf.  remat: True | False |
     "dots" (selective checkpointing).  tuning_cache: TuningProfile JSON —
@@ -126,7 +126,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             if shape.kind == "train":
                 prog, ctx = build_train_program(cfg, mesh, comm=comm,
                                                 shape=shape, remat=remat,
-                                                cluster=cluster)
+                                                cluster=cluster,
+                                                bucket_mb=bucket_mb)
                 opt_sds = eval_shape_opt_state(params_sds)
                 lowered = prog.lower(params_sds, opt_sds, batch_sds)
             elif shape.kind == "prefill":
@@ -206,6 +207,17 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     terms = {"compute": t_compute, "memory": t_memory,
              "collective": t_collective}
     dominant = max(terms, key=terms.get)
+    # serial + overlap-aware step-time bounds (DESIGN.md §11): n_buckets
+    # from the per-rank grad payload vs the requested bucket size; 1
+    # (monolithic) makes the two bounds coincide.
+    from repro.roofline.analytic import step_time_bounds
+    if bucket_mb > 0 and shape.kind == "train":
+        grad_bytes = (cm.params / max(tp, 1)) * 4
+        n_buckets = max(int(np.ceil(grad_bytes / (bucket_mb * 2 ** 20))), 1)
+    else:
+        n_buckets = 1
+    bounds = step_time_bounds(t_compute, t_memory, t_collective,
+                              n_buckets=n_buckets)
     model_flops = 6.0 * cm.active_params * (
         shape.global_batch * (shape.seq_len if shape.kind == "train" else 1))
     if shape.kind != "train":
@@ -225,6 +237,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "collective_by_op": cm.coll_by_op(),
         "t_compute": t_compute, "t_memory": t_memory,
         "t_collective": t_collective, "dominant": dominant,
+        **bounds,
         "model_flops": model_flops,
         "useful_flops_ratio": model_flops / cm.flops_total
         if cm.flops_total else 0.0,
@@ -288,6 +301,11 @@ def main(argv=None) -> int:
                          "the converged shares back after lowering")
     ap.add_argument("--secondary-algo", choices=["ring", "tree"],
                     default="ring")
+    ap.add_argument("--bucket-mb", type=float, default=0.0,
+                    help="bucketed overlapped gradient sync: target bucket "
+                         "size in MiB (train shapes; DESIGN.md §11).  "
+                         "0 = monolithic sync, byte-identical plans to "
+                         "pre-bucketing dry-runs")
     ap.add_argument("--assert-warm", action="store_true",
                     help="exit nonzero unless EVERY tuned slot was "
                          "warm-started with zero Stage-1 iterations")
@@ -327,6 +345,10 @@ def main(argv=None) -> int:
             # result-cache file with the healthy run of the same layout
             safe = args.degrade.replace(":", "_").replace("=", "-")
             tag += f"__degrade-{safe}"
+        if args.bucket_mb > 0:
+            # a bucketed run lowers a different sync structure — its own
+            # result-cache file
+            tag += f"__bmb{args.bucket_mb:g}"
         path = os.path.join(args.out, tag + ".json")
         if os.path.exists(path):
             print(f"[skip] {tag} (cached)")
@@ -338,7 +360,7 @@ def main(argv=None) -> int:
                           tuning_cache=args.tuning_cache,
                           secondary_algo=args.secondary_algo,
                           nodes=nodes, cluster_name=args.cluster,
-                          degrade=args.degrade)
+                          degrade=args.degrade, bucket_mb=args.bucket_mb)
         except Exception as e:
             traceback.print_exc()
             rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,

@@ -89,9 +89,17 @@ def main(argv=None) -> int:
     total_toks = sum(len(v) for v in fin.values())
     print(f"served {len(fin)} requests, {total_toks} tokens "
           f"in {dt:.1f}s ({total_toks / dt:.1f} tok/s)")
-    ec = engine.comm_report()["executable_cache"]
+    rep = engine.comm_report()
+    ec = rep["executable_cache"]
     print(f"decode executable cache: {ec['rebuilds']} rebuilds, "
           f"{ec['hits']} hits, {ec['evictions']} evictions")
+    # issue/await lifecycle (DESIGN.md §11): every decode tick is issued
+    # async and awaited, so issued == awaits and nothing stays in flight
+    # past drain
+    pr = rep["program"]
+    print(f"decode issue/await: {pr['issued']} issued, "
+          f"{pr['awaits']} awaited, {pr['in_flight']} in flight")
+    assert pr["in_flight"] == 0
     if args.tuning_cache:
         n = engine.save_tuning(args.tuning_cache)
         print(f"tuning profile: {n} slots -> {args.tuning_cache}")

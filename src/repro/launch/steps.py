@@ -73,7 +73,7 @@ def _train_builder(cfg: ArchConfig, mesh: Mesh, *,
                    comm: Optional[CommConfig],
                    opt: Optional[AdamWConfig],
                    shape: Optional[SH.InputShape],
-                   remat: bool, cluster=None):
+                   remat: bool, cluster=None, bucket_mb: float = 0.0):
     ctx = make_ctx(mesh, comm, cluster=cluster)
     opt = opt or AdamWConfig()
     shape = shape or SH.SHAPES["train_4k"]
@@ -85,7 +85,8 @@ def _train_builder(cfg: ArchConfig, mesh: Mesh, *,
         # a FRESH closure + jit per build: jax.jit memoizes per function
         # identity, so re-jitting a stale function object would silently
         # reuse the pre-share-move trace.
-        step = make_train_step(cfg, ctx, opt, remat=remat)
+        step = make_train_step(cfg, ctx, opt, remat=remat,
+                               bucket_mb=bucket_mb)
         sharded = shard_map(step, mesh=mesh,
                             in_specs=(psp, osp, bsp),
                             out_specs=(psp, osp, P()),
@@ -101,10 +102,12 @@ def build_train_step(cfg: ArchConfig, mesh: Mesh, *,
                      comm: Optional[CommConfig] = None,
                      opt: Optional[AdamWConfig] = None,
                      shape: Optional[SH.InputShape] = None,
-                     remat: bool = True, cluster=None):
+                     remat: bool = True, cluster=None,
+                     bucket_mb: float = 0.0):
     """jit(shard_map(train_step)) with full param/opt/batch shardings."""
     builder, ctx = _train_builder(cfg, mesh, comm=comm, opt=opt,
-                                  shape=shape, remat=remat, cluster=cluster)
+                                  shape=shape, remat=remat, cluster=cluster,
+                                  bucket_mb=bucket_mb)
     return builder(), ctx
 
 
@@ -113,11 +116,14 @@ def build_train_program(cfg: ArchConfig, mesh: Mesh, *,
                         opt: Optional[AdamWConfig] = None,
                         shape: Optional[SH.InputShape] = None,
                         remat: bool = True,
-                        name: str = "", cluster=None):
+                        name: str = "", cluster=None,
+                        bucket_mb: float = 0.0):
     """The train step as a StepProgram: plan-keyed executable cache +
-    isolated Stage-2 replay recorder."""
+    isolated Stage-2 replay recorder.  ``bucket_mb > 0`` turns on the
+    bucketed overlapped gradient sync (DESIGN.md §11)."""
     builder, ctx = _train_builder(cfg, mesh, comm=comm, opt=opt,
-                                  shape=shape, remat=remat, cluster=cluster)
+                                  shape=shape, remat=remat, cluster=cluster,
+                                  bucket_mb=bucket_mb)
     return StepProgram(builder, ctx, name=name), ctx
 
 

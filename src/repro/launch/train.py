@@ -65,6 +65,11 @@ def main(argv=None) -> int:
     ap.add_argument("--secondary-algo", choices=["ring", "tree"],
                     default="ring",
                     help="secondary-path collective algorithm (paper §6)")
+    ap.add_argument("--bucket-mb", type=float, default=0.0,
+                    help="bucketed overlapped gradient sync: target bucket "
+                         "size in MiB (DESIGN.md §11).  0 = monolithic "
+                         "per-leaf sync (byte-identical plans to pre-"
+                         "bucketing behavior)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -112,7 +117,8 @@ def main(argv=None) -> int:
         # replay recorder — the loop never re-jits a plan it already
         # compiled (DESIGN.md §7).
         program, ctx = build_train_program(cfg, mesh, comm=comm, opt=opt,
-                                           shape=shape, cluster=cluster)
+                                           shape=shape, cluster=cluster,
+                                           bucket_mb=args.bucket_mb)
         batches = make_batches(cfg, seq_len=args.seq_len,
                                batch_per_shard=args.batch)
         loop = LoopConfig(total_steps=args.steps, log_every=5,

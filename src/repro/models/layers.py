@@ -387,9 +387,13 @@ def _seq_sharded_decode(q, k_new, v_new, kv_cache, cache_pos, cfg, ctx,
         seq_idx = shard_idx
     offset = seq_idx * s_local
 
-    # (1) full-head Q on every shard (bytes: B x Hq x hd — negligible)
+    # (1) full-head Q on every shard (bytes: B x Hq x hd — negligible).
+    # Issued as its own in-flight plan (DESIGN.md §11): the gather
+    # overlaps the K/V cache write below, which needs no Q — the engine's
+    # StepProgram await_all closes the window.
     if tp > 1:
-        qg = ctx.tp_all_gather(q.transpose(2, 0, 1, 3), tiled=True)
+        with ctx.issue("q_ag"):
+            qg = ctx.tp_all_gather(q.transpose(2, 0, 1, 3), tiled=True)
         q_full = qg.transpose(1, 2, 0, 3)           # [B, s, Hq, hd]
     else:
         q_full = q

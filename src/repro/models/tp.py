@@ -157,13 +157,46 @@ class ParallelCtx:
         this so interleaved programs keep disjoint replay logs."""
         with contextlib.ExitStack() as stack:
             for comm in self.comms():
-                stack.enter_context(comm.recording(comm.recorder(name)))
+                stack.enter_context(comm.recording(comm.recorder(name),
+                                                   name=name))
             yield
+
+    # -- issue/await overlap scopes (DESIGN.md §11) ----------------------------
+
+    @contextlib.contextmanager
+    def issue(self, tag: str):
+        """Mark the collectives traced inside as ONE in-flight plan.
+
+        Their replay records land in the active program's ``name/tag``
+        sub-recorder (disjoint Stage-2 multisets per bucket) and join the
+        open issue window on every communicator; all plans issued before
+        the next :meth:`await_all` share the window, and each call's
+        Stage-2 timings are priced at the window's population — the
+        contention model of ``PathTimingModel``.  A ctx with no live
+        communicators no-ops."""
+        with contextlib.ExitStack() as stack:
+            for comm in self.comms():
+                stack.enter_context(comm.issue_scope(tag))
+            yield
+
+    def await_all(self, tree=None):
+        """Barrier for every issued plan: closes the communicators' open
+        issue windows (plans issued later no longer contend with these)
+        and pins ``tree`` behind an optimization barrier so XLA cannot
+        sink consumers (the optimizer) above the in-flight transfers.
+        Returns ``tree`` (barriered), or None when none is given."""
+        for comm in self.comms():
+            comm.await_barrier()
+        if tree is None:
+            return None
+        return lax.optimization_barrier(tree)
 
     def observe_program(self, name: str,
                         elapsed_s: Optional[float] = None) -> bool:
-        """Stage-2 feedback from ONE program's replay logs; True when any
-        share moved (the program's next signature lookup re-keys).
+        """Stage-2 feedback from ONE program's replay logs — its base
+        recorder plus every issue sub-recorder its traces registered
+        (``name/tag`` per in-flight bucket); True when any share moved
+        (the program's next signature lookup re-keys).
 
         ``elapsed_s`` is the executed step's measured wall-clock duration
         (StepProgram measured mode).  Each communicator apportions it over
@@ -172,8 +205,8 @@ class ParallelCtx:
         does not bias either loop."""
         changed = False
         for comm in self.comms():
-            changed |= comm.observe_executed_step(comm.recorder(name),
-                                                  elapsed_s=elapsed_s)
+            changed |= comm.observe_recorders(comm.family_recorders(name),
+                                              elapsed_s=elapsed_s)
         return changed
 
     def timing_kind(self) -> str:
@@ -208,7 +241,7 @@ class ParallelCtx:
         stats)."""
         sigs = []
         for c in self.comms():
-            touched = c.recorder(program).touched if program else None
+            touched = c.family_footprint(program) if program else None
             sigs.append((c.axis_name, c.plan_signature(touched)))
         return tuple(sigs)
 
@@ -298,6 +331,40 @@ class ParallelCtx:
         if self.pod_axis is None or self.pod_size <= 1:
             return x
         return lax.psum(x, self.pod_axis)
+
+    def metrics_reduce(self, sums: Dict[str, jax.Array],
+                       means: Optional[Dict[str, jax.Array]] = None
+                       ) -> Dict[str, jax.Array]:
+        """ONE stacked small-payload reduction for all step metrics.
+
+        Replaces the nested ``pod_psum(node_psum(dp_psum(...)))`` chain —
+        three latency-bound collectives per metric per step — with a
+        single ``lax.psum`` of one stacked fp32 vector over the tuple of
+        present gradient axes (data, node, pod).  ``sums`` entries come
+        back globally summed (the loss, pre-scaled per shard); ``means``
+        entries come back divided by the participating rank count (for
+        values replicated across those axes — grad_norm, lr — the mean IS
+        the value).  Axes of size 1 drop out; with no live axis the
+        inputs pass through unchanged."""
+        means = means or {}
+        present = [(a, s) for a, s in ((self.dp_axis, self.dp_size),
+                                       (self.node_axis, self.node_size),
+                                       (self.pod_axis, self.pod_size))
+                   if a is not None and s > 1]
+        if not present:
+            return {**sums, **means}
+        vals = [jnp.asarray(v, jnp.float32).reshape(())
+                for v in list(sums.values()) + list(means.values())]
+        red = lax.psum(jnp.stack(vals), tuple(a for a, _ in present))
+        n_ranks = 1
+        for _, s in present:
+            n_ranks *= s
+        out: Dict[str, jax.Array] = {}
+        for i, k in enumerate(sums):
+            out[k] = red[i]
+        for j, k in enumerate(means):
+            out[k] = red[len(sums) + j] / n_ranks
+        return out
 
     # -- node-axis (NIC tier) collectives --------------------------------------
 

@@ -65,6 +65,34 @@ class CostBreakdown:
         return out
 
 
+def step_time_bounds(t_compute: float, t_memory: float,
+                     t_collective: float, *,
+                     n_buckets: int = 1) -> Dict[str, float]:
+    """Serial and overlap-aware analytic step-time bounds.
+
+    The historical roofline summed comm + compute serially — correct for
+    the monolithic sync (one reduce AFTER the whole backward pass), but a
+    pure upper bound once gradients go out in buckets (DESIGN.md §11).
+    With ``n_buckets`` in flight, all but the LAST bucket's transfer can
+    hide under compute; one bucket's worth of comm is structurally
+    exposed (the final bucket only exists when the backward is done):
+
+        serial    = max(t_compute, t_memory) + t_collective
+        overlap   = max(compute_side, t_collective * (n-1)/n)
+                    + t_collective / n
+
+    ``n_buckets = 1`` collapses overlap to serial exactly, so the two
+    bounds bracket every bucketing choice; the overlap bench
+    (benchmarks/overlap_step.py) targets the gap between them."""
+    n = max(int(n_buckets), 1)
+    compute_side = max(t_compute, t_memory)
+    exposed = t_collective / n
+    serial = compute_side + t_collective
+    overlap = max(compute_side, t_collective - exposed) + exposed
+    return {"t_step_serial": serial, "t_step_overlap": overlap,
+            "exposed_comm_s": exposed, "n_buckets": float(n)}
+
+
 def _attn_flops(cfg: ArchConfig, T: float, s_kv_avg: float, tp: int,
                 b: float, sq: float) -> float:
     """One attention layer forward (executed totals)."""

@@ -46,6 +46,24 @@ from repro.runtime.exec_cache import DEFAULT_CAPACITY, ExecutableCache
 _PROGRAM_IDS = itertools.count()
 
 
+class StepHandle:
+    """The pending result of one :meth:`StepProgram.issue`.
+
+    JAX dispatch is asynchronous, so the issued computation is already
+    running (or enqueued) when the handle exists; ``out`` materialises —
+    and the program's Stage-2 feedback runs — at the program's next
+    :meth:`StepProgram.await_all`.  ``ready`` flips once that barrier has
+    passed through this handle.
+    """
+
+    __slots__ = ("out", "t0", "ready")
+
+    def __init__(self, out, t0: Optional[float]):
+        self.out = out
+        self.t0 = t0
+        self.ready = False
+
+
 class StepProgram:
     """One step function's runtime: executable cache + replay recorder.
 
@@ -74,6 +92,9 @@ class StepProgram:
         self._measured = getattr(ctx, "timing_kind",
                                  lambda: "sim")() == "measured"
         self._last_elapsed_s: Optional[float] = None
+        self._pending: list = []        # issued, un-awaited StepHandles
+        self._issued = 0                # lifetime issue() count
+        self._awaits = 0                # lifetime non-empty await_all()s
         ctx.register_program(self.name)
 
     # -- lifecycle -------------------------------------------------------------
@@ -119,6 +140,53 @@ class StepProgram:
         self._last_elapsed_s = self._clock() - t0
         return out
 
+    # -- issue/await lifecycle (DESIGN.md §11) ---------------------------------
+
+    def issue(self, *args, **kwargs) -> StepHandle:
+        """Launch one step WITHOUT waiting on it.
+
+        Same executable-cache protocol as ``__call__``, but the call is
+        never blocked-until-ready: JAX's async dispatch keeps it in
+        flight, so the host can issue further work (another program, the
+        next decode tick) that overlaps it.  The result — and measured
+        timing + Stage-2 observation — lands at :meth:`await_all`.
+        """
+        t0 = self._clock() if self._measured else None
+        fn = self.cache.get(self.signature())
+        if fn is not None:
+            with self.ctx.recording(self.name):
+                out = fn(*args, **kwargs)
+        else:
+            fn = self._builder()
+            with self.ctx.recording(self.name):
+                out = fn(*args, **kwargs)
+            self.cache.put(self.signature(), fn)
+        handle = StepHandle(out, t0)
+        self._pending.append(handle)
+        self._issued += 1
+        return handle
+
+    def await_all(self) -> list:
+        """Barrier every issued step: block their outputs (measured mode
+        wall-clocks first-issue→drained as the overlap region's elapsed
+        time), close the communicators' issue windows, and run ONE
+        Stage-2 observation over the whole region.  Returns the handles'
+        outputs in issue order; an empty pending list is a no-op."""
+        handles, self._pending = self._pending, []
+        outs = [h.out for h in handles]
+        if handles and self._measured:
+            jax.block_until_ready(outs)
+            self._last_elapsed_s = self._clock() - handles[0].t0
+        for h in handles:
+            h.ready = True
+        # close the open issue windows even when nothing was pending —
+        # an await is a barrier, not a query
+        self.ctx.await_all()
+        if handles:
+            self._awaits += 1
+            self.observe()
+        return outs
+
     def observe(self) -> bool:
         """Stage-2 feedback for one executed step: replay THIS program's
         recorded collectives into the balancers, along with the step's
@@ -156,12 +224,15 @@ class StepProgram:
         communicators and its compiled executables."""
         self.ctx.unregister_program(self.name)
         self.cache.clear()
+        self._pending.clear()
 
     # -- reporting -------------------------------------------------------------
 
     def report(self) -> Dict[str, Any]:
         return {"program": self.name,
-                "executable_cache": self.cache.report()}
+                "executable_cache": self.cache.report(),
+                "issued": self._issued, "awaits": self._awaits,
+                "in_flight": len(self._pending)}
 
 
 @contextlib.contextmanager

@@ -89,6 +89,7 @@ class ServeEngine:
         executable-cache stats."""
         rep = dict(self.ctx.comm_report())
         rep["executable_cache"] = self._program.cache.report()
+        rep["program"] = self._program.report()
         return rep
 
     def save_tuning(self, path: Optional[str] = None) -> int:
@@ -109,13 +110,17 @@ class ServeEngine:
 
     # -- internals --------------------------------------------------------------
     def _fused_step(self, tokens: np.ndarray) -> np.ndarray:
-        # StepProgram tick: execute through the plan-keyed executable cache
-        # and replay this engine's collectives into Stage 2 (prefill ticks
-        # included — with long prompts they are most of the collective
-        # traffic).  A share move re-keys the next call; no manual re-jit.
-        logits, self.cache = self._program.step(
-            self.p, self.cache, jnp.asarray(tokens[:, None]),
-            jnp.asarray(self.pos))
+        # StepProgram tick via the issue/await lifecycle (DESIGN.md §11):
+        # the fused step is issued asynchronously — its decode-path
+        # all_gathers are in flight while the host prepares the tick —
+        # and await_all barriers it, closes the issue windows its traced
+        # ctx.issue scopes opened, and replays this engine's collectives
+        # into Stage 2 (prefill ticks included — with long prompts they
+        # are most of the collective traffic).  A share move re-keys the
+        # next call; no manual re-jit.
+        self._program.issue(self.p, self.cache, jnp.asarray(tokens[:, None]),
+                            jnp.asarray(self.pos))
+        logits, self.cache = self._program.await_all()[-1]
         return np.asarray(logits)
 
     def _admit_wave(self) -> None:

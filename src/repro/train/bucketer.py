@@ -1,0 +1,186 @@
+"""GradBucketer — size-targeted, reverse-ordered gradient buckets
+(DESIGN.md §11).
+
+The monolithic ``sync_grads`` fires one reduce per parameter leaf after
+the full backward pass, so the fabric idles during compute and compute
+idles during sync.  Bucketing partitions the grad pytree into
+``--bucket-mb``-sized slabs, each issued as ONE ordinary RoutePlan (a
+single flat concatenated payload) inside its own ``ctx.issue(tag)``
+scope, in *reverse* leaf order — the backward pass materialises the last
+layers' gradients first, so reverse-topological issue order is what lets
+the first buckets overlap the rest of the backward on real hardware (and
+what the issue-window contention model prices here).
+
+Packing rules:
+  * pieces are whole leaves, or axis-0 row slabs of leaves bigger than
+    the target — for scanned ``[L, ...]`` parameter stacks that is
+    per-layer granularity, taken from the END of the stack first;
+  * buckets are dtype-homogeneous (pieces concatenate into one flat
+    payload) and kind-homogeneous: ep_a2a expert grads reduce over
+    node+pod only (their data-axis sum already happened in the backward
+    all_to_all), so they never share a plan with dense grads;
+  * a piece larger than the target gets a bucket of its own.
+
+Bucketed and monolithic sync are bit-exact: the reduce is elementwise
+over the same rank set, and concatenation/slicing only re-addresses
+elements (tests/test_overlap.py holds this across dtypes × meshes ×
+expert routing).  ``bucket_mb <= 0`` bypasses this module entirely —
+``sync_grads`` keeps the exact legacy per-leaf path, byte-identical
+plans and all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def is_expert_param(path) -> bool:
+    """ep_a2a expert leaves — grads already summed over data ranks by the
+    backward all_to_all (train_step docstring)."""
+    return any(getattr(k, "key", None) == "experts" for k in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPiece:
+    """One contiguous chunk of one grad leaf.
+
+    ``rows`` is an axis-0 ``[start, stop)`` slab for leaves split across
+    buckets, or None for a whole leaf.
+    """
+
+    leaf: int                           # index into the flattened leaves
+    rows: Optional[Tuple[int, int]]
+    nbytes: int
+
+    def take(self, x: jax.Array) -> jax.Array:
+        if self.rows is None:
+            return x
+        return x[self.rows[0]:self.rows[1]]
+
+
+@dataclasses.dataclass(frozen=True)
+class GradBucket:
+    tag: str                            # issue-scope tag: "g0", "g1", ...
+    pieces: Tuple[BucketPiece, ...]
+    nbytes: int
+    dtype: str
+    expert: bool
+
+
+class GradBucketer:
+    """Static bucket plan for one grad pytree structure.
+
+    Built at trace time from leaf shapes/dtypes only — the plan is pure
+    metadata, so the same bucketer serves every step of a run (the tree
+    structure never changes between steps).
+    """
+
+    def __init__(self, grads, *, bucket_mb: float, ep: bool = False):
+        if bucket_mb <= 0:
+            raise ValueError("GradBucketer needs bucket_mb > 0; "
+                             "bucket_mb=0 is the monolithic path")
+        flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+        self.treedef = treedef
+        self.n_leaves = len(flat)
+        self.target_bytes = max(int(bucket_mb * 2 ** 20), 1)
+        self.buckets = self._pack(flat, ep)
+
+    def _pieces(self, flat, ep) -> List[Tuple[BucketPiece, str, bool]]:
+        """(piece, dtype, expert) in issue order: reverse leaf order,
+        and reverse slab order within a split leaf."""
+        out: List[Tuple[BucketPiece, str, bool]] = []
+        for i in reversed(range(len(flat))):
+            path, g = flat[i]
+            expert = ep and is_expert_param(path)
+            dtype = str(jnp.dtype(g.dtype))
+            itemsize = jnp.dtype(g.dtype).itemsize
+            nbytes = int(g.size) * itemsize
+            lead = g.shape[0] if g.ndim >= 1 else 0
+            if nbytes > self.target_bytes and lead > 1:
+                row_bytes = max(nbytes // lead, 1)
+                per = max(self.target_bytes // row_bytes, 1)
+                starts = list(range(0, lead, per))
+                for start in reversed(starts):
+                    stop = min(start + per, lead)
+                    out.append((BucketPiece(i, (start, stop),
+                                            (stop - start) * row_bytes),
+                                dtype, expert))
+            else:
+                out.append((BucketPiece(i, None, nbytes), dtype, expert))
+        return out
+
+    def _pack(self, flat, ep) -> Tuple[GradBucket, ...]:
+        buckets: List[GradBucket] = []
+        cur: List[BucketPiece] = []
+        cur_bytes = 0
+        cur_key: Optional[Tuple[str, bool]] = None
+
+        def close():
+            nonlocal cur, cur_bytes
+            if cur:
+                buckets.append(GradBucket(
+                    tag=f"g{len(buckets)}", pieces=tuple(cur),
+                    nbytes=cur_bytes, dtype=cur_key[0],
+                    expert=cur_key[1]))
+                cur, cur_bytes = [], 0
+
+        for piece, dtype, expert in self._pieces(flat, ep):
+            key = (dtype, expert)
+            if cur and (key != cur_key
+                        or cur_bytes + piece.nbytes > self.target_bytes):
+                close()
+            cur_key = key
+            cur.append(piece)
+            cur_bytes += piece.nbytes
+        close()
+        return tuple(buckets)
+
+    # -- execution -------------------------------------------------------------
+
+    def sync(self, grads, ctx):
+        """Reduce every bucket through the ctx, each inside its own
+        ``ctx.issue(tag)`` scope (one RoutePlan / one Stage-2
+        sub-recorder per bucket).  Returns the synced pytree; the caller
+        still owns the ``ctx.await_all`` barrier before the optimizer."""
+        leaves = jax.tree_util.tree_leaves(grads)
+        if len(leaves) != self.n_leaves:
+            raise ValueError(
+                f"grad tree has {len(leaves)} leaves but the bucket plan "
+                f"was built for {self.n_leaves}")
+        # leaf index -> list of (start_row, synced slab) or whole leaf
+        parts: List[List[Tuple[int, jax.Array]]] = [[] for _ in leaves]
+        for b in self.buckets:
+            segs = [b.pieces[k].take(leaves[b.pieces[k].leaf])
+                    for k in range(len(b.pieces))]
+            with ctx.issue(b.tag):
+                flat = (jnp.concatenate([s.reshape(-1) for s in segs])
+                        if len(segs) > 1 else segs[0].reshape(-1))
+                if b.expert:
+                    red = ctx.pod_psum(ctx.node_all_reduce(flat))
+                else:
+                    red = ctx.grad_all_reduce(flat)
+            off = 0
+            for p, seg in zip(b.pieces, segs):
+                n = seg.size
+                parts[p.leaf].append(
+                    (p.rows[0] if p.rows else 0,
+                     red[off:off + n].reshape(seg.shape)))
+                off += n
+        synced = []
+        for i, leaf in enumerate(leaves):
+            slabs = sorted(parts[i], key=lambda t: t[0])
+            if len(slabs) == 1:
+                synced.append(slabs[0][1])
+            else:
+                synced.append(jnp.concatenate([s for _, s in slabs],
+                                              axis=0))
+        return jax.tree_util.tree_unflatten(self.treedef, synced)
+
+    def describe(self) -> List[dict]:
+        return [{"tag": b.tag, "nbytes": b.nbytes, "dtype": b.dtype,
+                 "expert": b.expert, "pieces": len(b.pieces)}
+                for b in self.buckets]

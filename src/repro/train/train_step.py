@@ -12,6 +12,14 @@ Gradient-sync topology (DESIGN.md §5, §9):
     reduce over the node axis (NIC-tier flex) and psum over the pod axis.
 The local loss is pre-scaled by 1/(dp*nodes*pods) so every reduce lands
 directly on the global-mean gradient.
+
+With ``bucket_mb > 0`` the sync is bucketed (DESIGN.md §11): a
+GradBucketer partitions the grad pytree into size-targeted buckets issued
+in reverse-topological order, each its own RoutePlan under a
+``ctx.issue`` scope, with ``ctx.await_all`` barriering every in-flight
+bucket before the optimizer.  Bucketed and monolithic sync are bit-exact;
+``bucket_mb = 0`` (the default) takes the legacy per-leaf path,
+byte-identical plans included.
 """
 
 from __future__ import annotations
@@ -26,16 +34,24 @@ from repro.models.config import ArchConfig
 from repro.models.tp import ParallelCtx
 from repro.models.transformer import lm_loss
 from repro.optim.adamw import AdamWConfig, AdamWState, apply_updates
+from repro.train.bucketer import GradBucketer, is_expert_param
 
 
-def is_expert_param(path) -> bool:
-    return any(getattr(k, "key", None) == "experts" for k in path)
-
-
-def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx):
+def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx, *,
+               bucket_mb: float = 0.0):
     """Reduce per the topology above — every collective goes through the
-    ctx, so the RoutePlan engine is the only communication backend."""
+    ctx, so the RoutePlan engine is the only communication backend.
+
+    ``bucket_mb > 0`` switches to the bucketed overlap path (one
+    RoutePlan per size-targeted bucket, reverse leaf order); the caller
+    owns the ``ctx.await_all`` barrier.  ``bucket_mb = 0`` is the
+    monolithic per-leaf reduce, unchanged from before bucketing existed.
+    """
     ep = cfg.moe is not None and cfg.moe.impl == "ep_a2a"
+
+    if bucket_mb > 0:
+        return GradBucketer(grads, bucket_mb=bucket_mb, ep=ep).sync(
+            grads, ctx)
 
     def sync(path, g):
         if ep and is_expert_param(path):
@@ -46,7 +62,7 @@ def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx):
 
 
 def make_train_step(cfg: ArchConfig, ctx: ParallelCtx, opt: AdamWConfig,
-                    *, remat: bool = True):
+                    *, remat: bool = True, bucket_mb: float = 0.0):
     """Returns step(params, opt_state, batch) -> (params, opt_state,
     metrics).  Call under shard_map with param_specs shardings."""
     denom = (max(ctx.dp_size, 1) * max(ctx.node_size, 1)
@@ -57,11 +73,17 @@ def make_train_step(cfg: ArchConfig, ctx: ParallelCtx, opt: AdamWConfig,
 
     def step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        grads = sync_grads(grads, cfg, ctx)
+        grads = sync_grads(grads, cfg, ctx, bucket_mb=bucket_mb)
+        if bucket_mb > 0:
+            # barrier every in-flight bucket before the optimizer reads
+            # the grads (and close the contention window)
+            grads = ctx.await_all(grads)
         params, opt_state, om = apply_updates(params, grads, opt_state, opt)
-        # report the global mean loss
-        gloss = ctx.pod_psum(ctx.node_psum(ctx.dp_psum(loss)))
-        metrics = {"loss": gloss, **om}
+        # ONE stacked small-payload reduce for all step metrics: the loss
+        # (pre-scaled per shard -> global sum IS the mean) plus the
+        # optimizer metrics, which are replicated over the grad axes
+        # after sync (mean = value).
+        metrics = ctx.metrics_reduce({"loss": loss}, om)
         return params, opt_state, metrics
 
     return step

@@ -165,8 +165,8 @@ def test_interleaved_recorders_keep_disjoint_multisets():
     comm.observe_executed_step(rb)
     assert len(ra.issued_calls()) == 4         # multiplicity kept
     assert len(rb.issued_calls()) == 2         # NOT overwritten by train
-    nb_a = {n for _, n in ra.issued_calls()}
-    nb_b = {n for _, n in rb.issued_calls()}
+    nb_a = {n for _, n, _w in ra.issued_calls()}
+    nb_b = {n for _, n, _w in rb.issued_calls()}
     assert nb_a.isdisjoint(nb_b)               # disjoint logs, same comm
     assert comm.issued_calls() == []           # default recorder untouched
     trace_train()                              # Stage-2 re-trace of train
@@ -291,7 +291,7 @@ def test_interleaved_programs_disjoint_replay_no_tag():
     ra = comm.recorder(prog_a.name).issued_calls()
     rb = comm.recorder(prog_b.name).issued_calls()
     assert len(ra) == 3 and len(rb) == 1       # per-step multiplicity
-    assert {n for _, n in ra}.isdisjoint({n for _, n in rb})
+    assert {n for _, n, _w in ra}.isdisjoint({n for _, n, _w in rb})
     # both programs report through the shared comm's report
     progs = comm.report()["programs"]
     assert progs[prog_a.name]["replay_len"] == 3
