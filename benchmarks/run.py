@@ -6,10 +6,10 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (degraded_rail, fig2_improvement, fig5_runtime,
-                        future_tree_allreduce, hierarchy_crossover,
-                        overlap_step, table1_idle_bw, table2_bandwidth,
-                        roofline_report, perf_hillclimb)
+from benchmarks import (compressed_path, degraded_rail, fig2_improvement,
+                        fig5_runtime, future_tree_allreduce,
+                        hierarchy_crossover, overlap_step, table1_idle_bw,
+                        table2_bandwidth, roofline_report, perf_hillclimb)
 
 
 def main() -> None:
@@ -24,6 +24,7 @@ def main() -> None:
         ("hierarchy_crossover", hierarchy_crossover.run),
         ("degraded_rail", degraded_rail.run),
         ("overlap_step", overlap_step.run),
+        ("compressed_path", compressed_path.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -99,11 +99,27 @@ class TuningProfile:
         except (AttributeError, TypeError, ValueError):
             return None
 
+    def lookup_codecs(self, profile: str, algo: str, op: Collective,
+                      n_ranks: int, bucket: int, grid: int
+                      ) -> Optional[Dict[str, str]]:
+        """Saved per-link wire-codec choice for one slot (None when the
+        entry predates codecs or carries none) — restored alongside the
+        shares so a warm start executes the same compressed plan the cold
+        run tuned (DESIGN.md §12)."""
+        e = self._entries.get(_key(profile, algo, op, n_ranks, bucket, grid))
+        codecs = (e or {}).get("codecs")
+        if not isinstance(codecs, dict):
+            return None
+        try:
+            return {str(link): str(name) for link, name in codecs.items()}
+        except (AttributeError, TypeError, ValueError):
+            return None
+
     def record(self, profile: str, algo: str, op: Collective, n_ranks: int,
                bucket: int, grid: int, shares: Mapping[str, int], *,
                iterations: int = 0, converged: bool = True,
-               members: Optional[Mapping[str, Mapping[str, int]]] = None
-               ) -> None:
+               members: Optional[Mapping[str, Mapping[str, int]]] = None,
+               codecs: Optional[Mapping[str, str]] = None) -> None:
         key = _key(profile, algo, op, n_ranks, bucket, grid)
         self._entries[key] = {
             "profile": key[0], "secondary_algo": key[1], "op": key[2],
@@ -115,6 +131,9 @@ class TuningProfile:
             self._entries[key]["members"] = {
                 str(link): {str(m): int(w) for m, w in ws.items()}
                 for link, ws in members.items()}
+        if codecs:
+            self._entries[key]["codecs"] = {
+                str(link): str(name) for link, name in codecs.items()}
 
     def save(self, path: Optional[str] = None) -> str:
         """Merge with whatever is on disk, then write atomically."""

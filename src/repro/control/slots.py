@@ -111,6 +111,12 @@ class SlotController:
     #: tuple (multi-member links only) — the profile's per-rail layout.
     link_members: Dict[str, Sequence[LinkMember]] = dataclasses.field(
         default_factory=dict)
+    #: chosen wire codec per LINK name (DESIGN.md §12) — empty means every
+    #: path carries raw bytes (the byte-identical default).  Set at cold
+    #: tune from the timing model's choose_codecs verdict, restored verbatim
+    #: by a TuningProfile warm start: the codec choice is part of the slot's
+    #: tuned identity, exactly like the shares it was tuned against.
+    codecs: Dict[str, str] = dataclasses.field(default_factory=dict)
     #: per-link intra-class balancers over member weights — the machinery
     #: that drains ONE degraded instance while its siblings (and the
     #: class-level share vector) hold (DESIGN.md §10).
@@ -141,7 +147,8 @@ class SlotController:
                   probe_period: Optional[int] = None,
                   tier: str = "intra",
                   plan_quantizer: Optional[PlanQuantizer] = None,
-                  members: Optional[MemberMap] = None
+                  members: Optional[MemberMap] = None,
+                  codecs: Optional[Mapping[str, str]] = None
                   ) -> "SlotController":
         """Run Algorithm 1 for the slot — the paper's profiling phase.
 
@@ -149,13 +156,17 @@ class SlotController:
         heterogeneous latency/bandwidth characters; this is also what
         keeps its trajectory bit-identical to the pre-member model); the
         converged class shares are then subdivided across each link's
-        instances health-proportionally (``_member_balancers``)."""
+        instances health-proportionally (``_member_balancers``).
+        ``codecs`` is the per-link wire-codec choice the ``measure``
+        oracle was already pricing — it rides along so plans and reports
+        agree with the tuning."""
         res = initial_tune(list(paths), primary, measure)
         return cls(op, bucket, res, LoadBalancer(res.shares, primary),
                    warm=False, probe_period=probe_period, tier=tier,
                    plan_quantizer=plan_quantizer,
                    link_members=dict(members or {}),
-                   member_balancers=_member_balancers(members))
+                   member_balancers=_member_balancers(members),
+                   codecs=dict(codecs or {}))
 
     @classmethod
     def warm_start(cls, op: Collective, bucket: int,
@@ -165,10 +176,13 @@ class SlotController:
                    plan_quantizer: Optional[PlanQuantizer] = None,
                    members: Optional[MemberMap] = None,
                    member_weights: Optional[Mapping[str, Mapping[str, int]]]
-                   = None) -> "SlotController":
+                   = None,
+                   codecs: Optional[Mapping[str, str]] = None
+                   ) -> "SlotController":
         """Adopt converged shares from a TuningProfile: zero Algorithm-1
         iterations, identical downstream RoutePlans (plans are a pure
-        function of the shares and member weights, both restored)."""
+        function of the shares, member weights and codec choice — all
+        restored)."""
         shares = dict(shares)
         res = TuneResult(shares=shares,
                          active=[p for p, s in shares.items() if s > 0],
@@ -178,7 +192,8 @@ class SlotController:
                    plan_quantizer=plan_quantizer,
                    link_members=dict(members or {}),
                    member_balancers=_member_balancers(members,
-                                                      member_weights))
+                                                      member_weights),
+                   codecs=dict(codecs or {}))
 
     # -- control-state views --------------------------------------------------
 
@@ -329,6 +344,46 @@ class SlotController:
             }
         return out
 
+    def codec_objects(self) -> Optional[Dict[str, object]]:
+        """{link: PayloadCodec} for the slot's chosen codecs, or None —
+        the shape every pricing call (timings_for, algbw) consumes."""
+        if not self.codecs:
+            return None
+        from repro.core.codecs import get_codec
+        return {link: get_codec(c) for link, c in self.codecs.items()}
+
+    def wire_report(self, model, n_ranks: int) -> Dict[str, object]:
+        """Per-path wire-vs-logical byte accounting at the slot's bucket
+        payload (the §12 report satellite).  ``logical_bytes`` is what the
+        path's algorithm ships uncompressed; ``wire_bytes`` is after the
+        chosen codec; ``bytes_saved`` rolls up what the codecs took off
+        the slow links."""
+        from repro.core.codecs import get_codec
+        from repro.core.topology import RingSchedule
+        paths: Dict[str, Dict[str, object]] = {}
+        total_logical = total_wire = 0.0
+        for p, frac in sorted(self.balancer.fractions().items()):
+            if frac <= 0.0:
+                continue
+            link = model.profile.link(p)
+            if link.is_primary:
+                logical = RingSchedule(self.op, n_ranks).wire_bytes(
+                    frac * self.bucket)
+            else:
+                _steps, wire_fn = model.secondary_algo_cost(self.op, n_ranks)
+                logical = wire_fn(frac * self.bucket)
+            cname = self.codecs.get(p, "")
+            wire = get_codec(cname).wire_bytes(logical) if cname else logical
+            paths[p] = {"codec": cname or "off",
+                        "logical_bytes": int(logical),
+                        "wire_bytes": int(wire)}
+            total_logical += logical
+            total_wire += wire
+        return {"paths": paths,
+                "logical_bytes": int(total_logical),
+                "wire_bytes": int(total_wire),
+                "bytes_saved": int(total_logical - total_wire)}
+
     def describe(self, model, n_ranks: int) -> Dict[str, object]:
         """The per-slot block of ``FlexCommunicator.report()``."""
         out = {
@@ -343,10 +398,14 @@ class SlotController:
             "evaluator": self.balancer.evaluator.describe(),
             "predicted_algbw_GBps": model.algbw_GBps(
                 self.op, n_ranks, self.bucket, self.balancer.fractions(),
-                member_weights=self.member_weights() or None),
+                member_weights=self.member_weights() or None,
+                codecs=self.codec_objects()),
             "nccl_algbw_GBps": model.nccl_baseline_GBps(
                 self.op, n_ranks, self.bucket),
+            "wire": self.wire_report(model, n_ranks),
         }
+        if self.codecs:
+            out["codecs"] = dict(self.codecs)
         if self.member_balancers:
             out["members"] = self.members_report()
         return out
@@ -357,6 +416,8 @@ class SlotController:
         out: Dict[str, object] = {
             "warm": self.warm, "stage1_iters": self.tuned.iterations,
             "converged": self.tuned.converged}
+        if self.codecs:
+            out["codecs"] = dict(self.codecs)
         if self.member_balancers:
             out["members"] = self.member_weights()
         return out
@@ -372,9 +433,11 @@ class SlotController:
             row = out.setdefault(sc.tier, {
                 "slots": 0, "warm": 0, "converged": 0,
                 "stage2_adjustments": 0, "probes": 0,
-                "member_moves": 0, "drained_members": 0})
+                "member_moves": 0, "drained_members": 0,
+                "compressed_slots": 0})
             row["slots"] += 1
             row["warm"] += int(sc.warm)
+            row["compressed_slots"] += int(bool(sc.codecs))
             row["converged"] += int(sc.tuned.converged)
             row["stage2_adjustments"] += len(sc.balancer.adjustments)
             row["probes"] += sum(1 for a in sc.balancer.adjustments

@@ -55,16 +55,20 @@ class TimingSource:
         self.model = model
 
     def stage1_measure(self, op: Collective, n_ranks: int,
-                       payload_bytes: int) -> MeasureFn:
+                       payload_bytes: int, codecs=None) -> MeasureFn:
         """Algorithm 1's MeasurePathTimings for one slot — the profiling
-        phase runs against the measurement oracle on every source."""
-        return measure_fn(self.model, op, n_ranks, payload_bytes)
+        phase runs against the measurement oracle on every source.
+        ``codecs`` (link -> PayloadCodec) prices compressed secondary
+        paths at wire bytes; None is the exact historical oracle."""
+        return measure_fn(self.model, op, n_ranks, payload_bytes,
+                          codecs=codecs)
 
     def timings_for(self, op: Collective, n_ranks: int, payload_bytes: int,
                     fractions: Mapping[str, float], *,
                     bucket: Optional[int] = None,
                     member_weights: Optional[Mapping[str, Mapping[str, float]]]
-                    = None, contention: float = 1.0) -> Dict[str, float]:
+                    = None, contention: float = 1.0,
+                    codecs=None) -> Dict[str, float]:
         """Per-call per-path completion times.  ``member_weights`` is the
         slot's live instance subdivision (link -> member -> weight);
         sources that can price instances individually (the simulator) add
@@ -72,7 +76,10 @@ class TimingSource:
         per-instance drain balancers.  ``contention`` is the in-flight
         plan demand the call ran under (issue/await windows, DESIGN.md
         §11): analytic sources divide link bandwidth by it; measured
-        sources ignore it — wall clock already embeds real contention."""
+        sources ignore it — wall clock already embeds real contention.
+        ``codecs`` is the slot's chosen per-link wire codecs (DESIGN.md
+        §12): analytic sources price the codec-scaled wire; measured
+        sources ignore it for the same reason as contention."""
         raise NotImplementedError
 
     def ingest_step(self, calls: Sequence[StepCall],
@@ -94,7 +101,14 @@ class SimTimingSource(TimingSource):
     kind = "sim"
 
     def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
-                    bucket=None, member_weights=None, contention=1.0):
+                    bucket=None, member_weights=None, contention=1.0,
+                    codecs=None):
+        if codecs:
+            return self.model.measure(op, n_ranks, payload_bytes, fractions,
+                                      member_weights=member_weights,
+                                      contention=contention, codecs=codecs)
+        # no-codec slots call the exact historical signature — same float
+        # ops, same noise stream (the §10 parity discipline)
         return self.model.measure(op, n_ranks, payload_bytes, fractions,
                                   member_weights=member_weights,
                                   contention=contention)
@@ -172,9 +186,11 @@ class MeasuredTimingSource(TimingSource):
     # -- TimingSource API ----------------------------------------------------
 
     def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
-                    bucket=None, member_weights=None, contention=1.0):
-        # contention accepted but unused: measured wall clock already
-        # embeds whatever overlap actually happened on the fabric.
+                    bucket=None, member_weights=None, contention=1.0,
+                    codecs=None):
+        # contention and codecs accepted but unused: measured wall clock
+        # already embeds whatever overlap (and wire compression) actually
+        # happened on the fabric.
         # member_weights accepted but unpriced: one scalar step duration
         # cannot attribute slowness to an INSTANCE (the module-docstring
         # observability caveat, one level deeper).  Per-member hardware
@@ -271,17 +287,25 @@ class DegradedTimingSource(TimingSource):
         self.kind = inner.kind          # shadow the class attribute
 
     def stage1_measure(self, op: Collective, n_ranks: int,
-                       payload_bytes: int) -> MeasureFn:
-        return self.inner.stage1_measure(op, n_ranks, payload_bytes)
+                       payload_bytes: int, codecs=None) -> MeasureFn:
+        return self.inner.stage1_measure(op, n_ranks, payload_bytes,
+                                         codecs=codecs)
 
     def timings_for(self, op, n_ranks, payload_bytes, fractions, *,
-                    bucket=None, member_weights=None, contention=1.0):
+                    bucket=None, member_weights=None, contention=1.0,
+                    codecs=None):
         out = dict(self.inner.timings_for(
             op, n_ranks, payload_bytes, fractions, bucket=bucket,
-            member_weights=member_weights, contention=contention))
-        sim = self.model.measure(op, n_ranks, payload_bytes, fractions,
-                                 member_weights=member_weights,
-                                 contention=contention)
+            member_weights=member_weights, contention=contention,
+            codecs=codecs))
+        if codecs:
+            sim = self.model.measure(op, n_ranks, payload_bytes, fractions,
+                                     member_weights=member_weights,
+                                     contention=contention, codecs=codecs)
+        else:
+            sim = self.model.measure(op, n_ranks, payload_bytes, fractions,
+                                     member_weights=member_weights,
+                                     contention=contention)
         # overlay ONLY instance entries (keys the class-level source does
         # not produce): the emulated per-rail counters
         for key, t in sim.items():

@@ -47,6 +47,7 @@ structurally via the per-axis collective-byte breakdown.
 
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Mapping, Sequence, Tuple
 
 import jax
@@ -55,6 +56,7 @@ from jax import lax
 
 from repro.compat import axis_size
 from repro.core.tuner import SHARE_GRID  # noqa: F401  (re-export for callers)
+from repro.kernels import ops as _kops
 
 #: payload partition granularity (chunks); shares in grid units are mapped
 #: onto this chunk grid.  16 keeps the jit-variant cache small (DESIGN.md §2).
@@ -162,6 +164,123 @@ def merge_columns(segs: Mapping[str, jax.Array], order: Sequence[str],
 
 
 # ---------------------------------------------------------------------------
+# wire-codec composites (DESIGN.md §12)
+#
+# A compressed hop is encode -> ppermute wire payload -> decode(-accumulate),
+# with the fp8 decompress fused into the staged reduce (kernels/codec.py).
+# Each composite carries a straight-through custom_vjp: the backward pass
+# treats the codec as identity and rides the inverse permutation raw — the
+# standard straight-through estimator for quantized collectives, and the same
+# shape of VJP ops.accumulate already uses (without it the pallas_calls are
+# opaque to AD and differentiated staged rings fail to lower).  Codecs are
+# only ever attached by an opt-in --compress plan, so the default data plane
+# never touches these.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _codec_permute(x: jax.Array, axis_name: str,
+                   perm: Tuple[Tuple[int, int], ...],
+                   codec_name: str) -> jax.Array:
+    """ppermute ``x`` through the wire codec: encoded values (+ per-chunk
+    scales) cross the link; the receiver decodes back to x's shape/dtype."""
+    payload = _kops.wire_encode(x, codec_name=codec_name)
+    moved = jax.tree.map(
+        lambda t: lax.ppermute(t, axis_name, list(perm)), payload)
+    vals, scales = moved if isinstance(moved, tuple) else (moved, None)
+    return _kops.wire_decode(vals, scales, codec_name=codec_name,
+                             shape=x.shape, dtype=x.dtype)
+
+
+def _codec_permute_fwd(x, axis_name, perm, codec_name):
+    return _codec_permute(x, axis_name, perm, codec_name), None
+
+
+def _codec_permute_bwd(axis_name, perm, codec_name, _res, g):
+    inv = [(d, s) for s, d in perm]
+    return (lax.ppermute(g, axis_name, inv),)
+
+
+_codec_permute.defvjp(_codec_permute_fwd, _codec_permute_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _codec_permute_accumulate(cur: jax.Array, mine: jax.Array,
+                              axis_name: str,
+                              perm: Tuple[Tuple[int, int], ...],
+                              codec_name: str) -> jax.Array:
+    """One compressed ring-reduce step: the running partial crosses the link
+    encoded and the receiver dequantizes + accumulates its local chunk in a
+    single fused kernel (fp32 accumulation, resolve_accumulate's contract)."""
+    payload = _kops.wire_encode(cur, codec_name=codec_name)
+    moved = jax.tree.map(
+        lambda t: lax.ppermute(t, axis_name, list(perm)), payload)
+    vals, scales = moved if isinstance(moved, tuple) else (moved, None)
+    return _kops.wire_decode_accumulate(vals, scales, mine,
+                                        codec_name=codec_name)
+
+
+def _codec_permute_accumulate_fwd(cur, mine, axis_name, perm, codec_name):
+    return _codec_permute_accumulate(cur, mine, axis_name, perm,
+                                     codec_name), None
+
+
+def _codec_permute_accumulate_bwd(axis_name, perm, codec_name, _res, g):
+    inv = [(d, s) for s, d in perm]
+    # out = permute(cur) + mine, straight-through: cur's cotangent rides the
+    # inverse permutation, mine's passes through (the (g, g) of accumulate).
+    return lax.ppermute(g, axis_name, inv), g
+
+
+_codec_permute_accumulate.defvjp(_codec_permute_accumulate_fwd,
+                                 _codec_permute_accumulate_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _codec_ring_gather(flat: jax.Array, axis_name: str,
+                       codec_name: str) -> jax.Array:
+    """Compressed ring all-gather of a flat chunk -> [n, m] rows by rank.
+
+    Encode ONCE at the source and forward the wire payload verbatim: every
+    rank decodes the same (values, scales) for row j, so the gather stays
+    rank-consistent and each element is quantized exactly once regardless
+    of hop count.  (Per-hop recompression would give each rank a different
+    error for the same row.)
+    """
+    n = axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = _ring_perm(n)
+    payload = _kops.wire_encode(flat, codec_name=codec_name)
+    collected = [payload]
+    cur = payload
+    for _ in range(n - 1):
+        cur = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), cur)
+        collected.append(cur)
+    rows = jnp.stack([
+        _kops.wire_decode(p[0] if isinstance(p, tuple) else p,
+                          p[1] if isinstance(p, tuple) else None,
+                          codec_name=codec_name, shape=flat.shape,
+                          dtype=flat.dtype)
+        for p in collected])               # entry k holds rank (idx - k) % n
+    order = (idx - jnp.arange(n)) % n
+    return jnp.take(rows, jnp.argsort(order), axis=0)  # entry j = rank j
+
+
+def _codec_ring_gather_fwd(flat, axis_name, codec_name):
+    return _codec_ring_gather(flat, axis_name, codec_name), None
+
+
+def _codec_ring_gather_bwd(axis_name, codec_name, _res, g):
+    # all-gather transpose: rank r's contribution shows up in every rank's
+    # row r, so its cotangent is the cross-rank sum of that row
+    # (straight-through past the codec).
+    mine = jnp.take(g, lax.axis_index(axis_name), axis=0)
+    return (lax.psum(mine, axis_name),)
+
+
+_codec_ring_gather.defvjp(_codec_ring_gather_fwd, _codec_ring_gather_bwd)
+
+
+# ---------------------------------------------------------------------------
 # staged-path primitives: chunk-pipelined ppermute rings
 # ---------------------------------------------------------------------------
 
@@ -191,18 +310,27 @@ def _split_subchunks(flat: jax.Array, substeps: int
 
 
 def ring_all_gather(x: jax.Array, axis_name: str, *,
-                    substeps: int = 1) -> jax.Array:
+                    substeps: int = 1, codec: str = "") -> jax.Array:
     """All-gather via N-1 ppermute steps; result ordered by rank like
     ``lax.all_gather(x, axis_name, tiled=False)`` (leading axis = rank).
 
     ``substeps > 1`` chunk-pipelines the ring: the payload is split into
     sub-chunks forwarded independently each step (pure data movement, so the
-    result is bit-identical for any substeps).
+    result is bit-identical for any substeps).  ``codec`` (DESIGN.md §12)
+    encodes each sub-chunk once at its source and forwards the wire payload
+    verbatim — rank-consistent, one quantization per element.
     """
     n = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     perm = _ring_perm(n)
     subs, pad, s = _split_subchunks(x.reshape(-1), substeps)
+    if codec:
+        rows = jnp.concatenate(
+            [_codec_ring_gather(sub, axis_name, codec) for sub in subs],
+            axis=1)
+        if pad:
+            rows = rows[:, :-pad]
+        return rows.reshape((n,) + x.shape)
     collected = [[sub] for sub in subs]
     curs = list(subs)
     for _ in range(n - 1):
@@ -221,7 +349,8 @@ def ring_all_gather(x: jax.Array, axis_name: str, *,
 
 
 def ring_reduce_scatter(x: jax.Array, axis_name: str,
-                        accumulate=None, *, substeps: int = 1) -> jax.Array:
+                        accumulate=None, *, substeps: int = 1,
+                        codec: str = "") -> jax.Array:
     """Reduce-scatter via the classic N-1 step ring, chunk-pipelined.
 
     `x` has leading dim divisible by N; returns this rank's reduced chunk.
@@ -229,7 +358,11 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str,
     Pallas ``chunk_accumulate`` kernel is injected by the routing layer for
     floating payloads (the paper's reduce-sum hot spot).  ``substeps > 1``
     splits each rank-chunk into sub-chunks whose transfers interleave across
-    ring steps (the §3.1 double-buffered pipeline, lowered).
+    ring steps (the §3.1 double-buffered pipeline, lowered).  ``codec``
+    (DESIGN.md §12) sends each running partial encoded and replaces the
+    accumulate with the fused dequantize-accumulate kernel — the local
+    chunks still enter at full precision, only in-flight partials are
+    quantized.
     """
     if accumulate is None:
         accumulate = lambda a, b: a + b
@@ -241,13 +374,19 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str,
     # step s: rank r sends the partial for chunk (r - s - 1) and
     # receives+reduces the partial for chunk (r - s - 2); after N-1 steps
     # rank r owns fully reduced chunk r — matching psum_scatter's layout.
+    perm_t = tuple(perm)
     curs = [jnp.take(sub, (idx - 1) % n, axis=0) for sub in subs]
     for step in range(n - 1):
         # double buffer: all sub-chunk sends of this ring step are issued
         # before any reduce, so transfer j+1 overlaps the accumulate of j
-        recvd = [lax.ppermute(c, axis_name, perm) for c in curs]
         mines = [jnp.take(sub, (idx - step - 2) % n, axis=0) for sub in subs]
-        curs = [accumulate(r, mine) for r, mine in zip(recvd, mines)]
+        if codec:
+            curs = [_codec_permute_accumulate(c, mine, axis_name, perm_t,
+                                              codec)
+                    for c, mine in zip(curs, mines)]
+        else:
+            recvd = [lax.ppermute(c, axis_name, perm) for c in curs]
+            curs = [accumulate(r, mine) for r, mine in zip(recvd, mines)]
     out = jnp.concatenate(curs) if s > 1 else curs[0]
     if pad:
         out = out[:-pad]
@@ -255,14 +394,14 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str,
 
 
 def ring_all_reduce(x: jax.Array, axis_name: str, accumulate=None, *,
-                    substeps: int = 1) -> jax.Array:
+                    substeps: int = 1, codec: str = "") -> jax.Array:
     """All-reduce = ring reduce-scatter + ring all-gather (2(N-1) steps)."""
     n = axis_size(axis_name)
     flat, pad = _flatten_pad(x, n)
     mine = ring_reduce_scatter(flat.reshape(n, -1), axis_name, accumulate,
-                               substeps=substeps)
-    gathered = ring_all_gather(mine, axis_name,
-                               substeps=substeps)      # [n, chunk] by rank
+                               substeps=substeps, codec=codec)
+    gathered = ring_all_gather(mine, axis_name, substeps=substeps,
+                               codec=codec)            # [n, chunk] by rank
     # rank r contributed chunk r, so rank order == payload order.
     flat_out = gathered.reshape(-1)
     if pad:
@@ -270,11 +409,14 @@ def ring_all_reduce(x: jax.Array, axis_name: str, accumulate=None, *,
     return flat_out.reshape(x.shape)
 
 
-def ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+def ring_all_to_all(x: jax.Array, axis_name: str, *,
+                    codec: str = "") -> jax.Array:
     """all-to-all via N-1 ppermute rotations (tiled semantics, axis 0).
 
     Already pipelined by construction: every rotation is independent, so the
-    N-1 permutes can all be in flight at once.
+    N-1 permutes can all be in flight at once.  ``codec`` compresses each
+    rotation's wire transfer; the resident block never hits a link and stays
+    exact.
     """
     n = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
@@ -286,7 +428,10 @@ def ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     for s in range(1, n):
         send = jnp.take(blocks, (idx + s) % n, axis=0)
         perm = [(i, (i + s) % n) for i in range(n)]
-        got = lax.ppermute(send, axis_name, perm)          # from rank idx-s
+        if codec:
+            got = _codec_permute(send, axis_name, tuple(perm), codec)
+        else:
+            got = lax.ppermute(send, axis_name, perm)      # from rank idx-s
         received.append(got)
     stacked = jnp.stack(received)        # entry s = block from rank (idx-s)
     order = (idx - jnp.arange(n)) % n
@@ -295,20 +440,26 @@ def ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     return out.reshape((n * chunk,) + x.shape[1:])
 
 
-def tree_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+def tree_all_reduce(x: jax.Array, axis_name: str, *,
+                    codec: str = "") -> jax.Array:
     """All-reduce via recursive doubling: log2(N) butterfly steps.
 
     The paper's §6 future work for the 8-GPU AllReduce problem: a ring pays
     2(N-1) sequential steps, which amplifies secondary-path latency; the
     butterfly pays log2(N), trading 1.7x more wire bytes for 4.7x fewer
-    latency units at N=8.  Requires power-of-two N.
+    latency units at N=8.  Requires power-of-two N.  ``codec`` compresses
+    each butterfly exchange (the local operand stays exact).
     """
     n = axis_size(axis_name)
     assert n & (n - 1) == 0, "recursive doubling needs power-of-two ranks"
     k = 0
     while (1 << k) < n:
         perm = [(i, i ^ (1 << k)) for i in range(n)]
-        x = x + lax.ppermute(x, axis_name, perm)
+        if codec:
+            x = _codec_permute_accumulate(x, x, axis_name, tuple(perm),
+                                          codec)
+        else:
+            x = x + lax.ppermute(x, axis_name, perm)
         k += 1
     return x
 
@@ -317,7 +468,8 @@ def tree_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
 # ortho-route primitives
 # ---------------------------------------------------------------------------
 
-def ortho_all_gather(x: jax.Array, axis_name: str, ortho_name: str) -> jax.Array:
+def ortho_all_gather(x: jax.Array, axis_name: str, ortho_name: str, *,
+                     codec: str = "") -> jax.Array:
     """Gather over `axis_name` routing payload via `ortho_name` links.
 
     Neighbor-row detour: ppermute the share one step along the idle ortho
@@ -333,20 +485,30 @@ def ortho_all_gather(x: jax.Array, axis_name: str, ortho_name: str) -> jax.Array
         return lax.all_gather(x, axis_name)
     fwd = [(i, (i + 1) % m) for i in range(m)]
     bwd = [(i, (i - 1) % m) for i in range(m)]
+    if codec:
+        guest = _codec_permute(x, ortho_name, tuple(fwd), codec)
+        gathered = lax.all_gather(guest, axis_name)     # [n, ...]
+        return _codec_permute(gathered, ortho_name, tuple(bwd), codec)
     guest = lax.ppermute(x, ortho_name, fwd)
     gathered = lax.all_gather(guest, axis_name)         # [n, ...]
     return lax.ppermute(gathered, ortho_name, bwd)
 
 
-def ortho_all_reduce(x: jax.Array, axis_name: str, ortho_name: str) -> jax.Array:
+def ortho_all_reduce(x: jax.Array, axis_name: str, ortho_name: str, *,
+                     codec: str = "") -> jax.Array:
     """All-reduce over `axis_name` via the neighbor-row detour (see
     ortho_all_gather): permute -> psum on the neighbor row -> permute back.
-    Lossless for any ortho-axis sharding."""
+    Lossless for any ortho-axis sharding (with ``codec``, the two detour
+    hops carry encoded payloads; the psum itself is native)."""
     m = axis_size(ortho_name)
     if m <= 1:
         return lax.psum(x, axis_name)
     fwd = [(i, (i + 1) % m) for i in range(m)]
     bwd = [(i, (i - 1) % m) for i in range(m)]
+    if codec:
+        guest = _codec_permute(x, ortho_name, tuple(fwd), codec)
+        reduced = lax.psum(guest, axis_name)
+        return _codec_permute(reduced, ortho_name, tuple(bwd), codec)
     guest = lax.ppermute(x, ortho_name, fwd)
     reduced = lax.psum(guest, axis_name)
     return lax.ppermute(reduced, ortho_name, bwd)

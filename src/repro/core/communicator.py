@@ -52,6 +52,8 @@ from repro.control import (DegradedTimingSource, MeasuredTimingSource,
 from repro.core import collectives as mp
 from repro.core import routing
 from repro.core.balancer import LoadBalancer
+from repro.core.codecs import (canonical_spec, codecs_for_pricing, get_codec,
+                               parse_compress)
 from repro.core.links import LinkSpec, NodeProfile, PROFILES
 from repro.core.pipeline import StageTimes, optimal_chunk_bytes
 from repro.core.routing import PlanCache, RoutePlan
@@ -99,6 +101,11 @@ class CommConfig:
     #: TuningProfile JSON path ("" = off): converged Stage-1 shares are
     #: warm-started from it, skipping the profiling phase entirely.
     tuning_cache: str = ""
+    #: secondary-path wire-codec spec ("" = off, the byte-identical
+    #: default), e.g. ``"secondary=fp8"`` or ``"staged=bf16,ortho=fp8"``
+    #: (core/codecs.py, DESIGN.md §12).  The timing model still *chooses*
+    #: per slot whether each codec pays; the primary path never compresses.
+    compress: str = ""
     #: registry-isolation tag: part of the comm_init_rank memo key.  Live
     #: workloads no longer need it — per-program ReplayRecorders keep their
     #: Stage-2 replay logs disjoint on a shared communicator — but tools
@@ -257,6 +264,13 @@ class FlexCommunicator:
             else SimTimingSource(self.model))
         if self.config.timing == "measured" and not self.profile.healthy:
             self.timing = DegradedTimingSource(self.timing)
+        # validate the compress spec at construction so a bad --compress
+        # fails loudly here, not at the first collective
+        parse_compress(self.config.compress)
+        #: memoized per-slot codec choice (DESIGN.md §12): (op, bucket) ->
+        #: {link: codec_name}.  Seeded from a TuningProfile warm start,
+        #: else decided once by the timing model's choose_codecs.
+        self._codec_choice: Dict[Tuple[Collective, int], Dict[str, str]] = {}
         #: control plane: one SlotController per tuned (op, size-bucket).
         self._slots: Dict[Tuple[Collective, int], SlotController] = {}
         #: Stage-1 warm-start store (control/profile.py); empty when no
@@ -487,6 +501,40 @@ class FlexCommunicator:
         cross-communicator reporting (e.g. the cluster rollup)."""
         return tuple(self._slots.values())
 
+    # -- wire codecs (DESIGN.md §12) -------------------------------------------
+
+    def _algo_key(self) -> str:
+        """The TuningProfile algo-key component: the secondary algorithm,
+        with the canonical compress spec folded in when compression is on.
+        Compressed tunings live under their own warm-start keys (shares
+        tuned against codec pricing are not valid for raw wire), and the
+        default keys stay exactly historical."""
+        spec = canonical_spec(self.config.compress)
+        base = self.config.secondary_algo
+        return f"{base}+{spec}" if spec else base
+
+    def slot_codecs(self, op: Collective, bucket: int) -> Dict[str, str]:
+        """Chosen wire codec per LINK for one slot ({} = all raw).  The
+        timing model decides whether each configured codec PAYS at this
+        bucket (``choose_codecs``): tiny messages never compress, and the
+        primary path is structurally excluded.  Memoized — the choice is
+        part of the slot's tuned identity (and warm starts pre-seed it
+        from the TuningProfile via :meth:`slot`)."""
+        key = (op, bucket)
+        got = self._codec_choice.get(key)
+        if got is not None:
+            return got
+        chosen: Dict[str, str] = {}
+        if (self.config.compress and self.config.backend != "nccl"
+                and self.n_ranks > 1):
+            route_of = {p: self.route_of(p) for p in self.path_names}
+            cands = codecs_for_pricing(self.config.compress, route_of,
+                                       self.profile.primary.name)
+            chosen = self.model.choose_codecs(op, self.n_ranks, bucket,
+                                              cands)
+        self._codec_choice[key] = chosen
+        return chosen
+
     def slot(self, op: Collective, bucket: int) -> SlotController:
         """The SlotController for one (op, size-bucket); created on first
         use — warm from the TuningProfile when it has a matching entry,
@@ -509,25 +557,56 @@ class FlexCommunicator:
                 self.timing.stage1_measure(op, self.n_ranks, bucket),
                 tier=self.profile.tier)
         else:
+            algo_key = self._algo_key()
             saved = self._profile_store.lookup(
-                self.config.profile, self.config.secondary_algo, op,
+                self.config.profile, algo_key, op,
                 self.n_ranks, bucket, SHARE_GRID)
             if saved is not None and set(saved) <= set(self.path_names):
                 saved_members = self._profile_store.lookup_members(
-                    self.config.profile, self.config.secondary_algo, op,
+                    self.config.profile, algo_key, op,
                     self.n_ranks, bucket, SHARE_GRID)
+                saved_codecs = self._profile_store.lookup_codecs(
+                    self.config.profile, algo_key, op,
+                    self.n_ranks, bucket, SHARE_GRID)
+                if saved_codecs is not None:
+                    # the warm-started plan must execute the codec choice
+                    # the cold run tuned against, not re-decide it
+                    self._codec_choice[key] = dict(saved_codecs)
                 sc = SlotController.warm_start(op, bucket, saved, primary,
                                                probe_period=probe,
                                                tier=self.profile.tier,
                                                plan_quantizer=quantizer,
                                                members=members,
-                                               member_weights=saved_members)
+                                               member_weights=saved_members,
+                                               codecs=self.slot_codecs(
+                                                   op, bucket))
             else:
-                sc = SlotController.tune_cold(
-                    op, bucket, list(self.path_names), primary,
-                    self.timing.stage1_measure(op, self.n_ranks, bucket),
-                    probe_period=probe, tier=self.profile.tier,
-                    plan_quantizer=quantizer, members=members)
+                chosen = self.slot_codecs(op, bucket)
+                # fixpoint: the initial choice prices each codec on the
+                # FULL payload, but the tuner may route only a sliver down
+                # a compressed path, where the setup term flips the sign —
+                # re-choose at the converged fractions and re-tune.  The
+                # set only ever shrinks, so this terminates.
+                while True:
+                    codec_objs = ({l: get_codec(c)
+                                   for l, c in chosen.items()} or None)
+                    sc = SlotController.tune_cold(
+                        op, bucket, list(self.path_names), primary,
+                        self.timing.stage1_measure(op, self.n_ranks, bucket,
+                                                   codecs=codec_objs),
+                        probe_period=probe, tier=self.profile.tier,
+                        plan_quantizer=quantizer, members=members,
+                        codecs=chosen)
+                    if not chosen:
+                        break
+                    refined = self.model.choose_codecs(
+                        op, self.n_ranks, bucket,
+                        {l: get_codec(c) for l, c in chosen.items()},
+                        fracs=sc.tuned.fractions())
+                    if refined == chosen:
+                        break
+                    chosen = refined
+                    self._codec_choice[key] = chosen
         self._slots[key] = sc
         return sc
 
@@ -553,7 +632,7 @@ class FlexCommunicator:
         timings = self.timing.timings_for(
             op, self.n_ranks, payload_bytes, sc.fractions(),
             bucket=sc.bucket, member_weights=sc.member_weights() or None,
-            contention=contention)
+            contention=contention, codecs=sc.codec_objects())
         sc.report(timings)
 
     def save_tuning(self, path: Optional[str] = None) -> int:
@@ -567,11 +646,12 @@ class FlexCommunicator:
             return n
         for (op, bucket), sc in self._slots.items():
             self._profile_store.record(
-                self.config.profile, self.config.secondary_algo, op,
+                self.config.profile, self._algo_key(), op,
                 self.n_ranks, bucket, SHARE_GRID, sc.tuned.shares,
                 iterations=sc.tuned.iterations,
                 converged=sc.tuned.converged,
-                members=sc.member_weights() or None)
+                members=sc.member_weights() or None,
+                codecs=sc.codecs or None)
             n += 1
         target = path or self.config.tuning_cache
         if target and n:
@@ -631,10 +711,17 @@ class FlexCommunicator:
             sc = self.slot(op, bucket)
             shares = {self.route_of(p): s
                       for p, s in sc.shares.items() if s > 0}
+            # route-class keyed codec choice: canonicalization inside
+            # build_plan drops entries for inactive classes, so the
+            # no-codec plan stays bit-identical (DESIGN.md §12)
+            path_codecs = ({self.route_of(l): c
+                            for l, c in sc.codecs.items()
+                            if l in self.path_names} or None)
             return routing.build_plan(
                 op, self.axis_name, shares, self.ortho_name,
                 staged_substeps=self.staged_substeps_for(op, bucket, shares),
-                member_layout=self._member_layout(sc))
+                member_layout=self._member_layout(sc),
+                path_codecs=path_codecs)
 
         return self.plan_cache.lookup(op, bucket, build)
 
@@ -712,11 +799,19 @@ class FlexCommunicator:
 
     def report(self) -> Dict[str, object]:
         out: Dict[str, object] = {}
+        rollup = SlotController.rollup(self._slots.values())
         for (op, bucket), sc in self._slots.items():
-            out[f"{op.value}@{bucket}"] = sc.describe(self.model,
-                                                      self.n_ranks)
+            desc = sc.describe(self.model, self.n_ranks)
+            out[f"{op.value}@{bucket}"] = desc
+            # "offloaded bytes saved": what the wire codecs took off the
+            # secondary paths, rolled up per fabric tier (DESIGN.md §12)
+            row = rollup.get(sc.tier)
+            if row is not None:
+                row["offloaded_bytes_saved"] = (
+                    row.get("offloaded_bytes_saved", 0)
+                    + desc["wire"]["bytes_saved"])
         out["tier"] = self.profile.tier
-        out["rollup"] = SlotController.rollup(self._slots.values())
+        out["rollup"] = rollup
         out["timing_source"] = self.timing.kind
         out["plan_cache"] = self.plan_cache.report()
         if self._recorders:

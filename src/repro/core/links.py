@@ -431,7 +431,8 @@ def register_profile(profile: NodeProfile) -> NodeProfile:
     return profile
 
 
-def idle_bw_opportunity(profile: NodeProfile) -> float:
+def idle_bw_opportunity(profile: NodeProfile,
+                        codecs: Optional[Dict[str, object]] = None) -> float:
     """Table-1 'Idle BW Opportunity': idle bandwidth / primary bandwidth.
 
     With path contention the idle bandwidth is capped by the shared PCIe
@@ -442,17 +443,42 @@ def idle_bw_opportunity(profile: NodeProfile) -> float:
     describes the fabric as it actually runs, not as it was sold.  The
     contention ceiling itself is NOT health-scaled: it is the shared PCIe
     interface's limit, which a sick NIC behind it does nothing to raise.
+
+    ``codecs`` (link name -> :class:`~repro.core.codecs.PayloadCodec`)
+    scales each compressed secondary link's EFFECTIVE bandwidth by
+    1/wire_ratio: a 4:1 codec moves four logical bytes per wire byte, so
+    the link offers that much more opportunity (DESIGN.md §12).  The
+    primary is never codec-scaled (codecs only attach to secondary
+    paths), and neither is the PCIe ceiling — compression changes what a
+    byte carries, not how many bytes the switch can move.
     """
+    codecs = codecs or {}
+
+    def eff(l) -> float:
+        bw = l.raw_GBps * l.health_factor
+        codec = codecs.get(l.name)
+        if codec is not None and codec.wire_ratio > 0:
+            bw /= codec.wire_ratio
+        return bw
+
     primary = profile.primary.raw_GBps * profile.primary.health_factor
     contended = [l for l in profile.secondary if l.shares_pcie_switch]
     free = [l for l in profile.secondary if not l.shares_pcie_switch]
-    idle = sum(l.raw_GBps * l.health_factor for l in free)
+    idle = sum(eff(l) for l in free)
     if contended:
         cap = profile.pcie_switch_ceiling_GBps
-        total = sum(l.raw_GBps * l.health_factor for l in contended)
+        total = sum(eff(l) for l in contended)
         # The contended routes can jointly move at most the PCIe interface BW
-        # (bidirectional = 2x the unidirectional ceiling).
-        idle += min(total, (cap * 2.0) if cap is not None else total)
+        # (bidirectional = 2x the unidirectional ceiling).  The ceiling is
+        # on WIRE bytes: a codec raises the logical throughput the switch
+        # admits by the same 1/wire_ratio, so scale the admitted total by
+        # the bandwidth-weighted ratio of the contended links.
+        if cap is not None:
+            raw = sum(l.raw_GBps * l.health_factor for l in contended)
+            boost = total / raw if raw > 0 else 1.0
+            idle += min(total, cap * 2.0 * boost)
+        else:
+            idle += total
     if primary <= 0.0:
         # a dead primary (--degrade nvlink=0): every idle byte/s is
         # infinite relative opportunity — same convention as the timing

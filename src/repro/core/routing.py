@@ -62,6 +62,38 @@ MAX_STAGED_SUBSTEPS = 8
 #: :func:`canonical_member_layout`.
 MemberLayout = Tuple[Tuple[str, Tuple[Tuple[str, int], ...]], ...]
 
+#: per-path wire codecs: ((path_class, codec_name), ...) in PATH_ORDER, only
+#: non-primary classes with a real codec.  See :func:`canonical_path_codecs`.
+PathCodecs = Tuple[Tuple[str, str], ...]
+
+
+def canonical_path_codecs(codecs: Optional[Mapping[str, str]],
+                          units: Mapping[str, int]) -> PathCodecs:
+    """Canonicalize a per-class codec assignment into plan identity.
+
+    Same cache-key hygiene rules as :func:`canonical_member_layout`:
+
+    * the primary class is dropped unconditionally — the NVLink path never
+      compresses (the paper's lossless contract; core/codecs.py);
+    * classes carrying no payload are dropped — a drained class moves no
+      wire bytes to encode;
+    * "off"/empty entries are dropped — so every no-codec plan, including
+      one built by a --compress launch whose pricing declined compression,
+      is bit-identical to the pre-codec model's (plan hash, equality, and
+      ``plan_signature()`` all unchanged; the DESIGN.md §12 parity
+      contract).
+    """
+    if not codecs:
+        return ()
+    rows = []
+    for cls in PATH_ORDER:
+        if cls == PATH_PRIMARY or units.get(cls, 0) <= 0:
+            continue
+        name = codecs.get(cls, "")
+        if name and name != "off":
+            rows.append((cls, str(name)))
+    return tuple(rows)
+
 
 def canonical_member_layout(
         layout: Optional[Mapping[str, Sequence[Tuple[str, int]]]],
@@ -133,6 +165,13 @@ class RoutePlan:
     staged_substeps: int = DEFAULT_STAGED_SUBSTEPS
     accumulate: str = ACC_AUTO
     member_layout: MemberLayout = ()
+    #: per-path wire codecs (DESIGN.md §12) — canonicalized so no-codec
+    #: plans stay bit-identical to the pre-codec model; a codec choice
+    #: re-keys the PlanCache slot and the executable cache (the frozen plan
+    #: IS the key), changes the staged/ortho executors' lowering to the
+    #: encode→permute→decode-accumulate composites, and is priced by the
+    #: PathTimingModel at wire bytes.
+    path_codecs: PathCodecs = ()
 
     def units(self) -> Dict[str, int]:
         return dict(self.chunk_units)
@@ -152,6 +191,13 @@ class RoutePlan:
                 return weights
         return None
 
+    def codec_for(self, path: str) -> str:
+        """The wire codec of one path class ("" = raw bytes)."""
+        for cls, name in self.path_codecs:
+            if cls == path:
+                return name
+        return ""
+
 
 def build_plan(collective: Collective, axis_name: str,
                shares: Optional[Mapping[str, int]] = None,
@@ -160,7 +206,8 @@ def build_plan(collective: Collective, axis_name: str,
                staged_substeps: int = DEFAULT_STAGED_SUBSTEPS,
                accumulate: str = ACC_AUTO,
                member_layout: Optional[Mapping[str, Sequence[Tuple[str, int]]]]
-               = None) -> RoutePlan:
+               = None,
+               path_codecs: Optional[Mapping[str, str]] = None) -> RoutePlan:
     """Quantize a share vector into a RoutePlan.
 
     ``shares=None`` (or an ortho share with no ortho axis) degrades to the
@@ -175,6 +222,12 @@ def build_plan(collective: Collective, axis_name: str,
     class's layout rather than merging it: the two classes subdivide over
     DIFFERENT physical links, so a combined weight vector would be
     meaningless.
+
+    ``path_codecs`` maps non-primary path classes to wire codec names
+    (core/codecs.py); entries canonicalize away unless the class both
+    carries payload and names a real codec, so default plans stay
+    bit-identical.  The a2a fold likewise drops the ortho codec — the
+    folded units travel the staged class's links under the staged codec.
     """
     if shares is None:
         units: Dict[str, int] = {PATH_PRIMARY: grain}
@@ -195,7 +248,8 @@ def build_plan(collective: Collective, axis_name: str,
                      chunk_units=chunk_units, grain=grain,
                      staged_substeps=substeps, accumulate=accumulate,
                      member_layout=canonical_member_layout(member_layout,
-                                                           units))
+                                                           units),
+                     path_codecs=canonical_path_codecs(path_codecs, units))
 
 
 def resolve_accumulate(plan: RoutePlan, dtype,
@@ -269,13 +323,17 @@ def _ar_primary(seg, plan, acc):
 
 @register_executor(Collective.ALL_REDUCE, PATH_STAGED)
 def _ar_staged(seg, plan, acc):
+    # with a codec, the ring's fused dequantize-accumulate replaces `acc`
+    # (same fp32 accumulation contract, one kernel per step)
     return cx.ring_all_reduce(seg, plan.axis_name, acc,
-                              substeps=plan.staged_substeps)
+                              substeps=plan.staged_substeps,
+                              codec=plan.codec_for(PATH_STAGED))
 
 
 @register_executor(Collective.ALL_REDUCE, PATH_ORTHO)
 def _ar_ortho(seg, plan, acc):
-    return cx.ortho_all_reduce(seg, plan.axis_name, plan.ortho_name)
+    return cx.ortho_all_reduce(seg, plan.axis_name, plan.ortho_name,
+                               codec=plan.codec_for(PATH_ORTHO))
 
 
 # -- all_gather --------------------------------------------------------------
@@ -288,12 +346,14 @@ def _ag_primary(seg, plan, acc):
 @register_executor(Collective.ALL_GATHER, PATH_STAGED)
 def _ag_staged(seg, plan, acc):
     return cx.ring_all_gather(seg, plan.axis_name,
-                              substeps=plan.staged_substeps)
+                              substeps=plan.staged_substeps,
+                              codec=plan.codec_for(PATH_STAGED))
 
 
 @register_executor(Collective.ALL_GATHER, PATH_ORTHO)
 def _ag_ortho(seg, plan, acc):
-    return cx.ortho_all_gather(seg, plan.axis_name, plan.ortho_name)
+    return cx.ortho_all_gather(seg, plan.axis_name, plan.ortho_name,
+                               codec=plan.codec_for(PATH_ORTHO))
 
 
 # -- reduce_scatter (segments are [lead, f_p] column groups) -----------------
@@ -307,12 +367,14 @@ def _rs_primary(seg, plan, acc):
 @register_executor(Collective.REDUCE_SCATTER, PATH_STAGED)
 def _rs_staged(seg, plan, acc):
     return cx.ring_reduce_scatter(seg, plan.axis_name, acc,
-                                  substeps=plan.staged_substeps)
+                                  substeps=plan.staged_substeps,
+                                  codec=plan.codec_for(PATH_STAGED))
 
 
 @register_executor(Collective.REDUCE_SCATTER, PATH_ORTHO)
 def _rs_ortho(seg, plan, acc):
-    red = cx.ortho_all_reduce(seg, plan.axis_name, plan.ortho_name)
+    red = cx.ortho_all_reduce(seg, plan.axis_name, plan.ortho_name,
+                              codec=plan.codec_for(PATH_ORTHO))
     n = axis_size(plan.axis_name)
     idx = lax.axis_index(plan.axis_name)
     lead = seg.shape[0]
@@ -329,7 +391,8 @@ def _a2a_primary(seg, plan, acc):
 
 @register_executor(Collective.ALL_TO_ALL, PATH_STAGED)
 def _a2a_staged(seg, plan, acc):
-    return cx.ring_all_to_all(seg, plan.axis_name)
+    return cx.ring_all_to_all(seg, plan.axis_name,
+                              codec=plan.codec_for(PATH_STAGED))
 
 
 # ---------------------------------------------------------------------------

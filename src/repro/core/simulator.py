@@ -55,6 +55,7 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.codecs import PayloadCodec
 from repro.core.links import LinkMember, LinkSpec, NodeProfile, PROFILES
 from repro.core.topology import Collective, RingSchedule
 
@@ -227,10 +228,16 @@ class PathTimingModel:
     # -- per-path timing -----------------------------------------------------
     def path_time(self, link_name: str, op: Collective, n_ranks: int,
                   payload_bytes: float, share: float,
-                  contention: float = 1.0) -> float:
+                  contention: float = 1.0,
+                  codec: Optional[PayloadCodec] = None) -> float:
         """Completion time (s) for `share` of the payload on one path.
         ``contention`` divides the link bandwidth by the in-flight plan
-        demand; 1.0 is the bitwise-identical serial case."""
+        demand; 1.0 is the bitwise-identical serial case.  ``codec``
+        (secondary paths only; DESIGN.md §12) prices the transfer at WIRE
+        bytes — logical bytes scaled by the codec's ratio — plus the
+        codec's setup + throughput term; the primary path ignores it (the
+        lossless NVLink contract).  ``codec=None`` runs the exact
+        historical arithmetic."""
         if share <= 0.0:
             return 0.0
         link = self.profile.link(link_name)
@@ -247,8 +254,12 @@ class PathTimingModel:
             lat = lat / AR_STEP_PENALTY  # butterfly has no serialized
             # recv->reduce->forward chain; each step is a paired exchange
         bw = link.effective_GBps / contention
+        t_codec = 0.0
+        if codec is not None:
+            t_codec = codec.codec_time_s(wire)   # process the logical bytes
+            wire = codec.wire_bytes(wire)        # ...but ship wire bytes
         t = (link.fixed_overhead_us * 1e-6 + steps * lat
-             + wire / (bw * 1e9))
+             + wire / (bw * 1e9) + t_codec)
         return t
 
     # -- per-instance timing ---------------------------------------------------
@@ -287,13 +298,16 @@ class PathTimingModel:
     def member_time(self, link: LinkSpec, member: LinkMember, op: Collective,
                     n_ranks: int, payload_bytes: float, member_share: float,
                     bw_scale: float = 1.0,
-                    contention: float = 1.0) -> float:
+                    contention: float = 1.0,
+                    codec: Optional[PayloadCodec] = None) -> float:
         """Completion time (s) for ``member_share`` of the payload on ONE
         instance: the class's latency structure at a 1/n_members slice of
         the class bandwidth, scaled by the instance's health (and by the
         PCIe-switch ``bw_scale`` when the class sits behind the switch).
         ``contention`` divides the instance's slice by the in-flight plan
-        demand — concurrent plans contend per member, not just per class."""
+        demand — concurrent plans contend per member, not just per class.
+        ``codec`` prices secondary-path wire bytes at the codec's ratio
+        plus its encode/decode term (primary instances ignore it)."""
         if member_share <= 0.0:
             return 0.0
         if link.is_primary:
@@ -314,13 +328,19 @@ class PathTimingModel:
               * bw_scale) / contention
         if bw <= 0.0:
             return float("inf")
+        t_codec = 0.0
+        if codec is not None:
+            t_codec = codec.codec_time_s(wire)
+            wire = codec.wire_bytes(wire)
         return (link.fixed_overhead_us * 1e-6 + steps * lat
-                + wire / (bw * 1e9))
+                + wire / (bw * 1e9) + t_codec)
 
     def measure(self, op: Collective, n_ranks: int, payload_bytes: float,
                 shares: Mapping[str, float],
                 member_weights: Optional[Mapping[str, Mapping[str, float]]]
-                = None, contention: float = 1.0) -> Dict[str, float]:
+                = None, contention: float = 1.0,
+                codecs: Optional[Mapping[str, PayloadCodec]] = None
+                ) -> Dict[str, float]:
         """Algorithm 1's MeasurePathTimings: per-path completion times (s).
 
         ``shares`` are keyed by link (class) name.  ``member_weights``
@@ -337,6 +357,15 @@ class PathTimingModel:
         is NOT re-scaled — k plans at 1/k bandwidth present the same
         instantaneous switch demand as one).  The default 1.0 divides by
         exactly one: bitwise-identical to the serial pricing.
+
+        ``codecs`` optionally maps link name -> PayloadCodec (DESIGN.md
+        §12): that link's wire term is priced at codec-scaled bytes plus
+        the codec's setup/throughput cost.  Primary links never receive a
+        codec (``codecs_for_pricing`` excludes them), and the switch-demand
+        computation is deliberately NOT codec-scaled — the instantaneous
+        GBps a link presents to the switch is its line rate regardless of
+        how few bytes the codec ships.  ``codecs=None`` (and ``{}``) runs
+        the exact historical arithmetic.
         """
         out: Dict[str, float] = {}
         splits: Dict[str, Dict[str, float]] = {}
@@ -369,6 +398,7 @@ class PathTimingModel:
         if ceiling is not None and demand > ceiling:
             scale = ceiling / demand
         for name, share in shares.items():
+            codec = (codecs or {}).get(name)
             if name in splits and share > 0.0:
                 link = self.profile.link(name)
                 w = splits[name]
@@ -378,7 +408,7 @@ class PathTimingModel:
                     m.name: self.member_time(
                         link, m, op, n_ranks, payload_bytes,
                         share * w.get(m.name, 0.0) / wsum, bw_scale,
-                        contention=contention)
+                        contention=contention, codec=codec)
                     for m in link.instances}
                 t = max(times.values())
                 mult = 1.0
@@ -390,7 +420,7 @@ class PathTimingModel:
                 out[name] = max(t * mult, 0.0)
                 continue
             t = self.path_time(name, op, n_ranks, payload_bytes, share,
-                               contention=contention)
+                               contention=contention, codec=codec)
             if name in contended and scale < 1.0 and share > 0.0:
                 link = self.profile.link(name)
                 steps, wire_fn = self.secondary_algo_cost(op, n_ranks)
@@ -403,8 +433,12 @@ class PathTimingModel:
                     # apply — the contended recompute must price the
                     # identical algorithm, just at the capped bandwidth
                     lat = lat / AR_STEP_PENALTY
+                t_codec = 0.0
+                if codec is not None:
+                    t_codec = codec.codec_time_s(wire)
+                    wire = codec.wire_bytes(wire)
                 t = (link.fixed_overhead_us * 1e-6 + steps * lat
-                     + wire / (bw * 1e9))
+                     + wire / (bw * 1e9) + t_codec)
             if self.noise > 0.0 and share > 0.0:
                 t *= float(1.0 + self._rng.normal(0.0, self.noise))
             out[name] = max(t, 0.0)
@@ -414,21 +448,59 @@ class PathTimingModel:
     def total_time(self, op: Collective, n_ranks: int, payload_bytes: float,
                    shares: Mapping[str, float],
                    member_weights: Optional[Mapping[str, Mapping[str, float]]]
-                   = None, contention: float = 1.0) -> float:
+                   = None, contention: float = 1.0,
+                   codecs: Optional[Mapping[str, PayloadCodec]] = None
+                   ) -> float:
         times = self.measure(op, n_ranks, payload_bytes, shares,
                              member_weights=member_weights,
-                             contention=contention)
+                             contention=contention, codecs=codecs)
         active = [t for name, t in times.items() if shares.get(name, 0.0) > 0]
         return max(active) if active else 0.0
 
     def algbw_GBps(self, op: Collective, n_ranks: int, payload_bytes: float,
                    shares: Mapping[str, float],
                    member_weights: Optional[Mapping[str, Mapping[str, float]]]
-                   = None, contention: float = 1.0) -> float:
+                   = None, contention: float = 1.0,
+                   codecs: Optional[Mapping[str, PayloadCodec]] = None
+                   ) -> float:
         t = self.total_time(op, n_ranks, payload_bytes, shares,
                             member_weights=member_weights,
-                            contention=contention)
+                            contention=contention, codecs=codecs)
         return (payload_bytes / t) / 1e9 if t > 0 else float("inf")
+
+    # -- codec selection ------------------------------------------------------
+    def choose_codecs(self, op: Collective, n_ranks: int,
+                      payload_bytes: float,
+                      candidates: Mapping[str, PayloadCodec],
+                      fracs: Optional[Mapping[str, float]] = None
+                      ) -> Dict[str, str]:
+        """Pick, per secondary link, whether the candidate codec PAYS.
+
+        A codec is kept only when the path finishes strictly faster with it
+        than without — wire-byte savings vs the codec's setup + throughput
+        cost (DESIGN.md §12).  Tiny messages lose to setup_s and never
+        compress; the primary path never appears (``candidates`` comes
+        from codecs_for_pricing, which excludes it).  Returns
+        {link_name: codec_name} for the winners only.
+
+        ``fracs`` evaluates each path at its actual share instead of the
+        full payload — the post-tune refinement pass: a codec that pays on
+        the whole message can lose on the slice the tuner actually routed
+        there (the setup term grows relative to the transfer), so the
+        caller re-chooses at the converged fractions and re-tunes until
+        the set is stable.
+        """
+        chosen: Dict[str, str] = {}
+        for name, codec in candidates.items():
+            if codec is None or self.profile.link(name).is_primary:
+                continue
+            frac = fracs.get(name, 1.0) if fracs is not None else 1.0
+            plain = self.path_time(name, op, n_ranks, payload_bytes, frac)
+            coded = self.path_time(name, op, n_ranks, payload_bytes, frac,
+                                   codec=codec)
+            if coded < plain:
+                chosen[name] = codec.name
+        return chosen
 
     def nccl_baseline_GBps(self, op: Collective, n_ranks: int,
                            payload_bytes: float) -> float:

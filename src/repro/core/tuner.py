@@ -28,14 +28,23 @@ MeasureFn = Callable[[Mapping[str, float]], Mapping[str, float]]
 
 
 def measure_fn(provider, op: Collective, n_ranks: int,
-               payload_bytes: float) -> MeasureFn:
+               payload_bytes: float, codecs=None) -> MeasureFn:
     """Adapt any timing provider exposing ``measure(op, n_ranks, payload,
     fracs)`` — the analytic simulator, a hardware profiler, a replayed
     trace — into the MeasureFn Algorithm 1 consumes.  The tuner is
     source-agnostic: it sees completion times, never where they came from
-    (the TimingSource seam of ``repro.control.timing`` builds on this)."""
+    (the TimingSource seam of ``repro.control.timing`` builds on this).
+
+    ``codecs`` (link name -> PayloadCodec, DESIGN.md §12) makes the oracle
+    price compressed secondary paths at wire bytes + codec cost, so
+    Algorithm 1 *chooses* splits that exploit the cheaper wire.  None (the
+    default) calls the provider with the exact historical signature —
+    byte-identical trajectories for uncompressed slots."""
 
     def measure(fracs: Mapping[str, float]) -> Mapping[str, float]:
+        if codecs:
+            return provider.measure(op, n_ranks, payload_bytes, fracs,
+                                    codecs=codecs)
         return provider.measure(op, n_ranks, payload_bytes, fracs)
 
     return measure

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import chunk_accumulate as _ca
+from repro.kernels import codec as _codec
 from repro.kernels import payload_partition as _pp
 
 
@@ -22,15 +23,20 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _accumulate(a: jax.Array, b: jax.Array, acc_dtype):
-    n = a.size
+def _pad_2d(x: jax.Array) -> jax.Array:
+    """Flatten + zero-pad to the [rows, LANE] tile shape the kernels need."""
+    n = x.size
     cols = _ca.LANE
     rows = -(-n // cols)
     rows_pad = (-rows) % _ca.SUBLANE
     pad = rows * cols - n + rows_pad * cols
-    af = jnp.pad(a.reshape(-1), (0, pad)).reshape(rows + rows_pad, cols)
-    bf = jnp.pad(b.reshape(-1), (0, pad)).reshape(rows + rows_pad, cols)
+    return jnp.pad(x.reshape(-1), (0, pad)).reshape(rows + rows_pad, cols)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _accumulate(a: jax.Array, b: jax.Array, acc_dtype):
+    n = a.size
+    af, bf = _pad_2d(a), _pad_2d(b)
     out = _ca.chunk_accumulate_2d(af, bf, acc_dtype=acc_dtype,
                                   interpret=_interpret())
     return out.reshape(-1)[:n].reshape(a.shape)
@@ -79,3 +85,70 @@ def merge_segments(segments: Sequence[jax.Array],
     """Per-route result reassembly (payload merge)."""
     return _pp.merge_segments(list(segments), block=block,
                               interpret=_interpret())
+
+
+# --- wire codecs (DESIGN.md §12) -------------------------------------------
+#
+# The flat-payload face of kernels/codec.py: arbitrary-shaped chunks are
+# padded to [rows, LANE] tiles, encoded to their wire form (fp8 values +
+# per-row f32 scales, or a bf16 half-width pack), and decoded — plain or
+# fused into the ring-step accumulate.  AD never reaches these pallas_calls:
+# the differentiated entry points are the straight-through composites in
+# core/collectives.py, and the error-feedback roundtrip runs on already-
+# computed gradients.
+
+@functools.partial(jax.jit, static_argnames=("codec_name",))
+def wire_encode(x: jax.Array, *, codec_name: str):
+    """Encode a chunk for the wire -> (values_2d, scales_or_None)."""
+    x2 = _pad_2d(x)
+    if codec_name == "bf16_pack":
+        return _codec.bf16_pack_2d(x2, interpret=_interpret()), None
+    vals, scales = _codec.fp8_encode_2d(x2, fmt=codec_name,
+                                        interpret=_interpret())
+    return vals, scales
+
+
+@functools.partial(jax.jit, static_argnames=("codec_name", "shape", "dtype"))
+def wire_decode(vals: jax.Array, scales, *, codec_name: str,
+                shape, dtype) -> jax.Array:
+    """Decode a wire payload back to ``shape``/``dtype``."""
+    n = 1
+    for d in shape:
+        n *= d
+    if codec_name == "bf16_pack":
+        out2 = vals.astype(dtype)
+    else:
+        out2 = _codec.fp8_decode_2d(vals, scales, out_dtype=dtype,
+                                    interpret=_interpret())
+    return out2.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("codec_name", "acc_dtype"))
+def wire_decode_accumulate(vals: jax.Array, scales, mine: jax.Array, *,
+                           codec_name: str, acc_dtype=jnp.float32):
+    """Fused ring-step decompress: out = dequant(vals[, scales]) + mine.
+
+    The bf16 pack feeds the existing fp32 chunk_accumulate directly (its
+    decode IS the accumulate's upcast); fp8 runs the fused
+    dequantize-accumulate kernel.  Accumulation is fp32 either way — the
+    staged-reduce contract of resolve_accumulate.
+    """
+    m2 = _pad_2d(mine)
+    if codec_name == "bf16_pack":
+        out2 = _ca.chunk_accumulate_2d(m2, vals, acc_dtype=acc_dtype,
+                                       interpret=_interpret())
+    else:
+        out2 = _codec.fp8_decode_accumulate_2d(vals, scales, m2,
+                                               acc_dtype=acc_dtype,
+                                               interpret=_interpret())
+    return out2.reshape(-1)[:mine.size].reshape(mine.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("codec_name",))
+def wire_roundtrip(x: jax.Array, *, codec_name: str) -> jax.Array:
+    """encode -> decode, same shape/dtype: the local quantization a chunk
+    suffers on the wire.  Error feedback (train/bucketer.py) subtracts this
+    from the pre-send gradient to build the next step's residual."""
+    vals, scales = wire_encode(x, codec_name=codec_name)
+    return wire_decode(vals, scales, codec_name=codec_name,
+                       shape=x.shape, dtype=x.dtype)

@@ -20,3 +20,27 @@ def extract_segment_ref(x: jax.Array, start_block: int, n_blocks: int, *,
 
 def merge_segments_ref(segments: Sequence[jax.Array]) -> jax.Array:
     return jnp.concatenate(list(segments))
+
+
+def bf16_pack_ref(x: jax.Array) -> jax.Array:
+    return x.astype(jnp.bfloat16)
+
+
+def fp8_encode_ref(x: jax.Array, *, fmt: str = "fp8_e4m3"):
+    from repro.kernels.codec import FP8_MAX, WIRE_DTYPE, _SCALE_TINY
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, _SCALE_TINY) / FP8_MAX[fmt]
+    return (xf / scale).astype(WIRE_DTYPE[fmt]), scale
+
+
+def fp8_decode_ref(vals: jax.Array, scales: jax.Array, *,
+                   out_dtype=jnp.float32) -> jax.Array:
+    return (vals.astype(jnp.float32) * scales).astype(out_dtype)
+
+
+def fp8_decode_accumulate_ref(vals: jax.Array, scales: jax.Array,
+                              b: jax.Array, *,
+                              acc_dtype=jnp.float32) -> jax.Array:
+    recv = vals.astype(acc_dtype) * scales.astype(acc_dtype)
+    return (recv + b.astype(acc_dtype)).astype(b.dtype)

@@ -63,7 +63,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             remat=True, variant: str = "",
             tuning_cache: str = "", secondary_algo: str = "ring",
             nodes: int = 1, cluster_name: str = "",
-            degrade: str = "", bucket_mb: float = 0.0) -> dict:
+            degrade: str = "", bucket_mb: float = 0.0,
+            compress: str = "") -> dict:
     """mesh_split: optional (data, model) reshape of the 256-chip pod —
     the TP-degree tuning lever of EXPERIMENTS §Perf.  remat: True | False |
     "dots" (selective checkpointing).  tuning_cache: TuningProfile JSON —
@@ -76,7 +77,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     scales one link member's effective bandwidth — the degraded tier
     profile gets a distinct name, so its tuning (which drains exactly the
     sick member) keys separate TuningProfile entries from the healthy
-    fabric's."""
+    fabric's.
+    compress: secondary-path wire-codec spec (DESIGN.md §12, e.g.
+    ``secondary=fp8``): the tuner prices wire bytes per codec and the
+    per-slot wire table below shows what each path actually ships."""
     cfg = get_config(arch)
     shape = SH.SHAPES[shape_name]
     from repro.configs.clusters import resolve_cluster, resolve_degrade
@@ -109,7 +113,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                       profile=intra_profile,
                       runtime_balancing=False, tag="dryrun",
                       tuning_cache=tuning_cache,
-                      secondary_algo=secondary_algo)
+                      secondary_algo=secondary_algo,
+                      compress=compress)
     pods, dp, tp = mesh_dims(mesh)
     t0 = time.time()
 
@@ -129,6 +134,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                                                 cluster=cluster,
                                                 bucket_mb=bucket_mb)
                 opt_sds = eval_shape_opt_state(params_sds)
+                if bucket_mb > 0 and ctx.ef_codec_name():
+                    # lossy wire codec: error-feedback residuals ride the
+                    # opt state, param-shaped (train_step.py docstring)
+                    opt_sds = (opt_sds, params_sds)
                 lowered = prog.lower(params_sds, opt_sds, batch_sds)
             elif shape.kind == "prefill":
                 prog, ctx = build_prefill_program(cfg, mesh, comm=comm,
@@ -148,6 +157,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             # warm/cold Stage-1 provenance per slot, before the program is
             # retired — and persist the shares for the next launch
             tuning_status = ctx.tuning_status()
+            comm_rep = ctx.comm_report()
             if tuning_cache:
                 ctx.save_tuning_profile(tuning_cache)
     finally:
@@ -169,6 +179,29 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                                  for m, w in weights.items())
                 print(f"  [members] {axis}/{slot_name} {link}: {cells}",
                       flush=True)
+
+    # per-slot wire table (DESIGN.md §12): logical vs wire bytes + codec
+    # id per path, and the aggregate wire scale the roofline below uses
+    # to shrink the collective term
+    wire_logical = wire_total = 0.0
+    for axis, rep in sorted(comm_rep.items()):
+        if not isinstance(rep, dict):
+            continue
+        for slot_name, desc in sorted(rep.items()):
+            if not isinstance(desc, dict) or "wire" not in desc:
+                continue
+            w = desc["wire"]
+            wire_logical += w["logical_bytes"]
+            wire_total += w["wire_bytes"]
+            if desc.get("codecs"):
+                cells = " ".join(
+                    f"{p}={row['codec']}"
+                    f"({row['logical_bytes']}->{row['wire_bytes']}B)"
+                    for p, row in sorted(w["paths"].items()))
+                print(f"  [wire] {axis}/{slot_name}: {cells} "
+                      f"saved={w['bytes_saved']}B", flush=True)
+    wire_scale = (wire_total / wire_logical
+                  if compress and wire_logical else 1.0)
 
     cost = compiled.cost_analysis() or {}
     # older JAX returns a one-element list of dicts (one per computation)
@@ -217,7 +250,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     else:
         n_buckets = 1
     bounds = step_time_bounds(t_compute, t_memory, t_collective,
-                              n_buckets=n_buckets)
+                              n_buckets=n_buckets, wire_scale=wire_scale)
     model_flops = 6.0 * cm.active_params * (
         shape.global_batch * (shape.seq_len if shape.kind == "train" else 1))
     if shape.kind != "train":
@@ -244,12 +277,18 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "params": cm.params, "active_params": cm.active_params,
         "memory_per_chip": mem,
     }
+    if compress:
+        # only on compressed runs: the default dry-run record stays
+        # byte-identical to pre-codec outputs
+        roofline["wire_scale"] = wire_scale
+        roofline["wire_bytes_saved"] = int(wire_logical - wire_total)
 
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "backend": backend, "chips": chips, "ok": True,
         "variant": variant, "remat": str(remat),
         "degrade": degrade,
+        **({"compress": compress} if compress else {}),
         "tuning": tuning_status,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory_analysis": mem_report,
@@ -306,6 +345,11 @@ def main(argv=None) -> int:
                          "size in MiB (train shapes; DESIGN.md §11).  "
                          "0 = monolithic sync, byte-identical plans to "
                          "pre-bucketing dry-runs")
+    ap.add_argument("--compress", default="",
+                    help="secondary-path wire codecs, e.g. 'secondary=fp8' "
+                         "or 'staged=bf16,ortho=fp8' (DESIGN.md §12): the "
+                         "tuner prices wire bytes per codec and the "
+                         "per-slot wire table shows what each path ships")
     ap.add_argument("--assert-warm", action="store_true",
                     help="exit nonzero unless EVERY tuned slot was "
                          "warm-started with zero Stage-1 iterations")
@@ -349,6 +393,12 @@ def main(argv=None) -> int:
             # a bucketed run lowers a different sync structure — its own
             # result-cache file
             tag += f"__bmb{args.bucket_mb:g}"
+        if args.compress:
+            # a compressed run prices (and may lower) different plans:
+            # never share a result-cache file with the uncompressed run
+            safe = (args.compress.replace(":", "_").replace("=", "-")
+                    .replace(",", "+"))
+            tag += f"__compress-{safe}"
         path = os.path.join(args.out, tag + ".json")
         if os.path.exists(path):
             print(f"[skip] {tag} (cached)")
@@ -360,7 +410,8 @@ def main(argv=None) -> int:
                           tuning_cache=args.tuning_cache,
                           secondary_algo=args.secondary_algo,
                           nodes=nodes, cluster_name=args.cluster,
-                          degrade=args.degrade, bucket_mb=args.bucket_mb)
+                          degrade=args.degrade, bucket_mb=args.bucket_mb,
+                          compress=args.compress)
         except Exception as e:
             traceback.print_exc()
             rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,

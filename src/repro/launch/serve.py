@@ -35,6 +35,9 @@ def main(argv=None) -> int:
                     help="Stage-2 TimingSource (control/timing.py)")
     ap.add_argument("--secondary-algo", choices=["ring", "tree"],
                     default="ring")
+    ap.add_argument("--compress", default="",
+                    help="secondary-path wire codecs, e.g. 'secondary=fp8' "
+                         "or 'staged=bf16,ortho=fp8' (DESIGN.md §12)")
     ap.add_argument("--degrade", default="",
                     help="fault injection name[:member]=factor "
                          "(DESIGN.md §10); with --nodes it degrades the "
@@ -65,15 +68,18 @@ def main(argv=None) -> int:
     comm = CommConfig(
         profile=profile, timing=args.timing,
         secondary_algo=args.secondary_algo,
-        tuning_cache=args.tuning_cache)
+        tuning_cache=args.tuning_cache,
+        compress=args.compress)
     ctx = ParallelCtx(comm_config=comm, cluster=cluster)
     if not ctx.comms() and (args.timing != "sim" or args.tuning_cache
                             or args.secondary_algo != "ring"
-                            or args.nodes > 1 or args.degrade):
+                            or args.nodes > 1 or args.degrade
+                            or args.compress):
         print("note: single-device launch has no communicators — "
-              "--timing/--tuning-cache/--secondary-algo/--nodes/--degrade "
-              "take effect only with parallel axes (the decode wave "
-              "itself never crosses the NIC tier; see launch/shapes.py)")
+              "--timing/--tuning-cache/--secondary-algo/--nodes/--degrade/"
+              "--compress take effect only with parallel axes (the decode "
+              "wave itself never crosses the NIC tier; see "
+              "launch/shapes.py)")
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, ctx,
                          ServeConfig(slots=args.slots, cache_len=96))

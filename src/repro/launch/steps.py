@@ -79,6 +79,11 @@ def _train_builder(cfg: ArchConfig, mesh: Mesh, *,
     shape = shape or SH.SHAPES["train_4k"]
     psp = param_specs(cfg)
     osp = opt_state_specs(psp)
+    if bucket_mb > 0 and ctx.ef_codec_name():
+        # lossy wire codec + bucketed sync: the opt state is
+        # (AdamWState, residuals) — the error-feedback residual tree is
+        # param-shaped, so it shards exactly like the params
+        osp = (osp, psp)
     bsp = _batch_specs(cfg, shape, mesh)
 
     def builder():

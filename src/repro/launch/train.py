@@ -70,6 +70,13 @@ def main(argv=None) -> int:
                          "size in MiB (DESIGN.md §11).  0 = monolithic "
                          "per-leaf sync (byte-identical plans to pre-"
                          "bucketing behavior)")
+    ap.add_argument("--compress", default="",
+                    help="secondary-path wire codecs (DESIGN.md §12), e.g. "
+                         "'secondary=fp8' or 'staged=bf16,ortho=fp8'.  The "
+                         "tuner still chooses per slot whether each codec "
+                         "pays; lossy codecs add error-feedback residuals "
+                         "to bucketed gradient sync.  Default: off — "
+                         "byte-identical plans and tuning")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -105,7 +112,8 @@ def main(argv=None) -> int:
                       profile=intra_profile,
                       timing=args.timing,
                       secondary_algo=args.secondary_algo,
-                      tuning_cache=args.tuning_cache)
+                      tuning_cache=args.tuning_cache,
+                      compress=args.compress)
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                       total_steps=args.steps)
 
@@ -119,6 +127,11 @@ def main(argv=None) -> int:
         program, ctx = build_train_program(cfg, mesh, comm=comm, opt=opt,
                                            shape=shape, cluster=cluster,
                                            bucket_mb=args.bucket_mb)
+        if args.bucket_mb > 0 and ctx.ef_codec_name():
+            # lossy wire codec: the error-feedback residuals ride the
+            # optimizer state (train_step.py docstring)
+            from repro.train.train_step import ef_init_residuals
+            opt_state = (opt_state, ef_init_residuals(params))
         batches = make_batches(cfg, seq_len=args.seq_len,
                                batch_per_shard=args.batch)
         loop = LoopConfig(total_steps=args.steps, log_every=5,

@@ -209,6 +209,13 @@ class ParallelCtx:
                                               elapsed_s=elapsed_s)
         return changed
 
+    def ef_codec_name(self) -> str:
+        """The lossy wire codec the comm config enables ("" when
+        compression is off or lossless) — the error-feedback gate for
+        bucketed gradient sync (train/bucketer.py, DESIGN.md §12)."""
+        from repro.core.codecs import lossy_codec_name
+        return lossy_codec_name(self.comm_config.compress)
+
     def timing_kind(self) -> str:
         """The active TimingSource kind: "measured" if ANY communicator
         balances on wall-clock observation, else "sim" ("none" without

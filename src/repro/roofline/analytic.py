@@ -67,7 +67,8 @@ class CostBreakdown:
 
 def step_time_bounds(t_compute: float, t_memory: float,
                      t_collective: float, *,
-                     n_buckets: int = 1) -> Dict[str, float]:
+                     n_buckets: int = 1,
+                     wire_scale: float = 1.0) -> Dict[str, float]:
     """Serial and overlap-aware analytic step-time bounds.
 
     The historical roofline summed comm + compute serially — correct for
@@ -83,14 +84,26 @@ def step_time_bounds(t_compute: float, t_memory: float,
 
     ``n_buckets = 1`` collapses overlap to serial exactly, so the two
     bounds bracket every bucketing choice; the overlap bench
-    (benchmarks/overlap_step.py) targets the gap between them."""
+    (benchmarks/overlap_step.py) targets the gap between them.
+
+    ``wire_scale`` (DESIGN.md §12) is the aggregate wire/logical byte
+    ratio of the tuned slots when secondary-path codecs are on — it
+    shrinks the collective term before the bounds are formed.  The
+    default 1.0 takes the exact historical arithmetic (no float op
+    touches t_collective), so uncompressed rooflines stay bit-identical.
+    """
     n = max(int(n_buckets), 1)
+    if wire_scale != 1.0:
+        t_collective = t_collective * wire_scale
     compute_side = max(t_compute, t_memory)
     exposed = t_collective / n
     serial = compute_side + t_collective
     overlap = max(compute_side, t_collective - exposed) + exposed
-    return {"t_step_serial": serial, "t_step_overlap": overlap,
-            "exposed_comm_s": exposed, "n_buckets": float(n)}
+    out = {"t_step_serial": serial, "t_step_overlap": overlap,
+           "exposed_comm_s": exposed, "n_buckets": float(n)}
+    if wire_scale != 1.0:
+        out["wire_scale"] = float(wire_scale)
+    return out
 
 
 def _attn_flops(cfg: ArchConfig, T: float, s_kv_avg: float, tp: int,

@@ -27,6 +27,19 @@ elements (tests/test_overlap.py holds this across dtypes × meshes ×
 expert routing).  ``bucket_mb <= 0`` bypasses this module entirely —
 ``sync_grads`` keeps the exact legacy per-leaf path, byte-identical
 plans and all.
+
+Error feedback (DESIGN.md §12): when a LOSSY wire codec is enabled for
+secondary paths (``--compress secondary=fp8``), each bucket carries a
+per-rank residual — the quantization error its last send suffered — added
+to the gradient before the reduce and refreshed from the local
+encode/decode roundtrip afterwards (EF-SGD).  The roundtrip is a
+first-order *proxy* for the wire loss: the ring quantizes in-flight
+partials, not each rank's raw contribution, so the residual compensates
+the local quantization error exactly and the accumulated-partial error to
+first order — which is what keeps the training trajectory within
+tolerance of the uncompressed run (tests/test_codecs.py holds the final
+loss).  Residuals ride in the optimizer-state pytree, zeros at init, and
+the whole machinery is dead code unless a lossy codec is configured.
 """
 
 from __future__ import annotations
@@ -36,6 +49,8 @@ from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops as kops
 
 
 def is_expert_param(path) -> bool:
@@ -141,24 +156,47 @@ class GradBucketer:
 
     # -- execution -------------------------------------------------------------
 
-    def sync(self, grads, ctx):
+    def sync(self, grads, ctx, *, residuals=None, codec: str = ""):
         """Reduce every bucket through the ctx, each inside its own
         ``ctx.issue(tag)`` scope (one RoutePlan / one Stage-2
         sub-recorder per bucket).  Returns the synced pytree; the caller
-        still owns the ``ctx.await_all`` barrier before the optimizer."""
+        still owns the ``ctx.await_all`` barrier before the optimizer.
+
+        With a lossy wire ``codec`` and a ``residuals`` pytree (same
+        structure as ``grads``), each bucket sends gradient + residual and
+        refreshes the residual from the local quantization roundtrip
+        (error feedback, see module docstring).  Returns ``(synced,
+        new_residuals)`` in that mode."""
+        ef = bool(codec) and residuals is not None
         leaves = jax.tree_util.tree_leaves(grads)
         if len(leaves) != self.n_leaves:
             raise ValueError(
                 f"grad tree has {len(leaves)} leaves but the bucket plan "
                 f"was built for {self.n_leaves}")
+        res_leaves = jax.tree_util.tree_leaves(residuals) if ef else None
+        if ef and len(res_leaves) != self.n_leaves:
+            raise ValueError(
+                f"residual tree has {len(res_leaves)} leaves but the "
+                f"bucket plan was built for {self.n_leaves}")
         # leaf index -> list of (start_row, synced slab) or whole leaf
         parts: List[List[Tuple[int, jax.Array]]] = [[] for _ in leaves]
+        res_parts: List[List[Tuple[int, jax.Array]]] = [[] for _ in leaves]
         for b in self.buckets:
             segs = [b.pieces[k].take(leaves[b.pieces[k].leaf])
                     for k in range(len(b.pieces))]
             with ctx.issue(b.tag):
                 flat = (jnp.concatenate([s.reshape(-1) for s in segs])
                         if len(segs) > 1 else segs[0].reshape(-1))
+                new_res = None
+                if ef:
+                    rsegs = [p.take(res_leaves[p.leaf]) for p in b.pieces]
+                    rflat = (jnp.concatenate([r.reshape(-1) for r in rsegs])
+                             if len(rsegs) > 1 else rsegs[0].reshape(-1))
+                    # EF-SGD: send grad + carried error, keep the fresh
+                    # local quantization error for the next step
+                    flat = flat + rflat
+                    new_res = (flat - kops.wire_roundtrip(
+                        flat, codec_name=codec)).astype(flat.dtype)
                 if b.expert:
                     red = ctx.pod_psum(ctx.node_all_reduce(flat))
                 else:
@@ -166,19 +204,29 @@ class GradBucketer:
             off = 0
             for p, seg in zip(b.pieces, segs):
                 n = seg.size
+                start = p.rows[0] if p.rows else 0
                 parts[p.leaf].append(
-                    (p.rows[0] if p.rows else 0,
-                     red[off:off + n].reshape(seg.shape)))
+                    (start, red[off:off + n].reshape(seg.shape)))
+                if ef:
+                    res_parts[p.leaf].append(
+                        (start, new_res[off:off + n].reshape(seg.shape)))
                 off += n
-        synced = []
-        for i, leaf in enumerate(leaves):
-            slabs = sorted(parts[i], key=lambda t: t[0])
-            if len(slabs) == 1:
-                synced.append(slabs[0][1])
-            else:
-                synced.append(jnp.concatenate([s for _, s in slabs],
-                                              axis=0))
-        return jax.tree_util.tree_unflatten(self.treedef, synced)
+
+        def gather(slab_lists):
+            out = []
+            for slabs in slab_lists:
+                slabs = sorted(slabs, key=lambda t: t[0])
+                if len(slabs) == 1:
+                    out.append(slabs[0][1])
+                else:
+                    out.append(jnp.concatenate([s for _, s in slabs],
+                                               axis=0))
+            return jax.tree_util.tree_unflatten(self.treedef, out)
+
+        synced = gather(parts)
+        if not ef:
+            return synced
+        return synced, gather(res_parts)
 
     def describe(self) -> List[dict]:
         return [{"tag": b.tag, "nbytes": b.nbytes, "dtype": b.dtype,

@@ -38,7 +38,7 @@ from repro.train.bucketer import GradBucketer, is_expert_param
 
 
 def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx, *,
-               bucket_mb: float = 0.0):
+               bucket_mb: float = 0.0, residuals=None, ef_codec: str = ""):
     """Reduce per the topology above — every collective goes through the
     ctx, so the RoutePlan engine is the only communication backend.
 
@@ -46,12 +46,16 @@ def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx, *,
     RoutePlan per size-targeted bucket, reverse leaf order); the caller
     owns the ``ctx.await_all`` barrier.  ``bucket_mb = 0`` is the
     monolithic per-leaf reduce, unchanged from before bucketing existed.
+
+    ``ef_codec`` + ``residuals`` enable error feedback for lossy wire
+    compression (DESIGN.md §12, bucketed path only): returns
+    ``(synced, new_residuals)`` instead of the bare tree.
     """
     ep = cfg.moe is not None and cfg.moe.impl == "ep_a2a"
 
     if bucket_mb > 0:
         return GradBucketer(grads, bucket_mb=bucket_mb, ep=ep).sync(
-            grads, ctx)
+            grads, ctx, residuals=residuals, codec=ef_codec)
 
     def sync(path, g):
         if ep and is_expert_param(path):
@@ -64,26 +68,52 @@ def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx, *,
 def make_train_step(cfg: ArchConfig, ctx: ParallelCtx, opt: AdamWConfig,
                     *, remat: bool = True, bucket_mb: float = 0.0):
     """Returns step(params, opt_state, batch) -> (params, opt_state,
-    metrics).  Call under shard_map with param_specs shardings."""
+    metrics).  Call under shard_map with param_specs shardings.
+
+    With a lossy wire codec configured (``ctx.ef_codec_name()``) AND
+    bucketed sync, the opt_state is the tuple ``(AdamWState, residuals)``
+    — the error-feedback residual tree rides the optimizer state so the
+    loop and checkpoints thread it without knowing it exists.  Otherwise
+    the opt_state is the bare AdamWState, exactly as before.
+    """
     denom = (max(ctx.dp_size, 1) * max(ctx.node_size, 1)
              * max(ctx.pod_size, 1))
+    ef_codec = ctx.ef_codec_name() if bucket_mb > 0 else ""
 
     def loss_fn(params, batch):
         return lm_loss(params, batch, cfg, ctx, remat=remat) / denom
 
-    def step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]):
+    def step(params, opt_state, batch: Dict[str, jax.Array]):
+        residuals = None
+        if ef_codec:
+            opt_state, residuals = opt_state
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        grads = sync_grads(grads, cfg, ctx, bucket_mb=bucket_mb)
-        if bucket_mb > 0:
-            # barrier every in-flight bucket before the optimizer reads
-            # the grads (and close the contention window)
-            grads = ctx.await_all(grads)
+        if ef_codec:
+            grads, residuals = sync_grads(grads, cfg, ctx,
+                                          bucket_mb=bucket_mb,
+                                          residuals=residuals,
+                                          ef_codec=ef_codec)
+            grads, residuals = ctx.await_all((grads, residuals))
+        else:
+            grads = sync_grads(grads, cfg, ctx, bucket_mb=bucket_mb)
+            if bucket_mb > 0:
+                # barrier every in-flight bucket before the optimizer
+                # reads the grads (and close the contention window)
+                grads = ctx.await_all(grads)
         params, opt_state, om = apply_updates(params, grads, opt_state, opt)
         # ONE stacked small-payload reduce for all step metrics: the loss
         # (pre-scaled per shard -> global sum IS the mean) plus the
         # optimizer metrics, which are replicated over the grad axes
         # after sync (mean = value).
         metrics = ctx.metrics_reduce({"loss": loss}, om)
+        if ef_codec:
+            return params, (opt_state, residuals), metrics
         return params, opt_state, metrics
 
     return step
+
+
+def ef_init_residuals(params):
+    """Zero error-feedback residuals matching a parameter tree — what the
+    launchers pair with the fresh AdamW state when a lossy codec is on."""
+    return jax.tree.map(jnp.zeros_like, params)

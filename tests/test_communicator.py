@@ -129,7 +129,9 @@ def test_report_contains_prediction():
     rollup = rep.pop("rollup")
     assert rollup == {"intra": {"slots": 1, "warm": 0, "converged": 1,
                                 "stage2_adjustments": 0, "probes": 0,
-                                "member_moves": 0, "drained_members": 0}}
+                                "member_moves": 0, "drained_members": 0,
+                                "compressed_slots": 0,
+                                "offloaded_bytes_saved": 0}}
     (key, entry), = rep.items()
     assert entry["predicted_algbw_GBps"] >= entry["nccl_algbw_GBps"] * 0.98
     assert entry["converged"]

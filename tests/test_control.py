@@ -457,7 +457,8 @@ def test_slot_rollup_groups_by_tier_and_describe_names_it():
     assert set(roll) == {"intra", "inter"}
     assert roll["intra"] == {"slots": 1, "warm": 1, "converged": 1,
                              "stage2_adjustments": 0, "probes": 0,
-                             "member_moves": 0, "drained_members": 0}
+                             "member_moves": 0, "drained_members": 0,
+                             "compressed_slots": 0}
     assert roll["inter"]["slots"] == 2
     assert roll["inter"]["stage2_adjustments"] == 4   # 2 each, counted twice
     assert roll["inter"]["probes"] == 2
