@@ -102,10 +102,12 @@ class TuningProfile:
     def lookup_codecs(self, profile: str, algo: str, op: Collective,
                       n_ranks: int, bucket: int, grid: int
                       ) -> Optional[Dict[str, str]]:
-        """Saved per-link wire-codec choice for one slot (None when the
-        entry predates codecs or carries none) — restored alongside the
-        shares so a warm start executes the same compressed plan the cold
-        run tuned (DESIGN.md §12)."""
+        """Saved per-link wire-codec choice for one slot — restored
+        alongside the shares so a warm start executes the same compressed
+        plan the cold run tuned (DESIGN.md §12).  ``{}`` means the cold
+        run's refinement explicitly chose NO codecs (and the warm start
+        must not re-decide); ``None`` means the entry predates codecs, so
+        the caller falls back to a fresh choice."""
         e = self._entries.get(_key(profile, algo, op, n_ranks, bucket, grid))
         codecs = (e or {}).get("codecs")
         if not isinstance(codecs, dict):
@@ -131,7 +133,11 @@ class TuningProfile:
             self._entries[key]["members"] = {
                 str(link): {str(m): int(w) for m, w in ws.items()}
                 for link, ws in members.items()}
-        if codecs:
+        if codecs is not None:
+            # {} is a real verdict ("refinement dropped every codec") and
+            # must round-trip as such; only None omits the field, keeping
+            # uncompressed cache files byte-compatible with pre-codec
+            # readers
             self._entries[key]["codecs"] = {
                 str(link): str(name) for link, name in codecs.items()}
 

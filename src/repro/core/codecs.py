@@ -66,6 +66,23 @@ class PayloadCodec:
     setup_s: float
     lossless: bool
 
+    def lossless_for(self, payload_dtype) -> bool:
+        """Bit-exact for payloads of ``payload_dtype``?
+
+        The static ``lossless`` flag says the codec CAN be exact (bf16_pack
+        is, for bf16 data); whether it IS depends on the payload: packing
+        fp32 gradients to bf16 truncates 16 mantissa bits.  This per-dtype
+        form is what gates error feedback (``lossy_codec_name``,
+        train/bucketer.py) — the static flag alone would skip residual
+        compensation exactly where the truncation happens.
+        """
+        if not self.lossless:
+            return False
+        exact = _EXACT_DTYPES.get(self.name)
+        if exact is None:
+            return True
+        return str(payload_dtype) in exact
+
     def wire_bytes(self, logical_bytes: float) -> float:
         return logical_bytes * self.wire_ratio
 
@@ -79,6 +96,12 @@ class PayloadCodec:
 #: fp8 wire bytes per fp32 logical element: 1 value byte + 4/SCALE_CHUNK
 #: scale bytes, over the 4 logical bytes.
 _FP8_RATIO = (1.0 + 4.0 / SCALE_CHUNK) / 4.0
+
+#: payload dtypes a LOSSLESS codec is actually bit-exact for; any other
+#: dtype gets truncated on the wire and must be treated as lossy by the
+#: error-feedback gate.  Codecs absent here (``off``) are exact for every
+#: dtype.
+_EXACT_DTYPES = {"bf16_pack": ("bfloat16",)}
 
 _REGISTRY: Dict[str, PayloadCodec] = {}
 
@@ -156,12 +179,19 @@ def canonical_spec(spec: str) -> str:
     return ",".join(f"{k}={v}" for k, v in sorted(resolved.items()))
 
 
-def lossy_codec_name(spec: str) -> str:
-    """The lossy codec a spec enables, or "" — the error-feedback gate for
-    gradient-sync slots (train/bucketer.py).  Lossless packs need no
-    residuals."""
+def lossy_codec_name(spec: str, payload_dtype: str = "float32") -> str:
+    """The configured codec that actually LOSES bits for ``payload_dtype``
+    payloads, or "" — the error-feedback gate for gradient-sync slots
+    (train/bucketer.py).  Truly exact wire encodings need no residuals,
+    but exactness is per dtype: bf16_pack is lossless for bf16 data and a
+    16-bit mantissa truncation for fp32 gradients, so the gate consults
+    :meth:`PayloadCodec.lossless_for` rather than the static flag.  The
+    fp32 default matches the dtype the pricing layer quotes (module
+    docstring) and the common gradient-sync payload; callers whose whole
+    tree is genuinely bf16 can pass ``payload_dtype="bfloat16"`` to skip
+    the residual state."""
     for name in parse_compress(spec).values():
-        if not get_codec(name).lossless:
+        if not get_codec(name).lossless_for(payload_dtype):
             return name
     return ""
 

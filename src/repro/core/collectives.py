@@ -270,11 +270,13 @@ def _codec_ring_gather_fwd(flat, axis_name, codec_name):
 
 
 def _codec_ring_gather_bwd(axis_name, codec_name, _res, g):
-    # all-gather transpose: rank r's contribution shows up in every rank's
-    # row r, so its cotangent is the cross-rank sum of that row
-    # (straight-through past the codec).
-    mine = jnp.take(g, lax.axis_index(axis_name), axis=0)
-    return (lax.psum(mine, axis_name),)
+    # all-gather transpose (the psum_scatter): rank r's contribution shows
+    # up in every rank's row r, so its cotangent is the CROSS-RANK sum of
+    # row r — psum the full cotangent, then select our own row
+    # (straight-through past the codec).  Selecting before the psum would
+    # hand every rank sum_k g_k[k] instead of sum_k g_k[r].
+    summed = lax.psum(g, axis_name)
+    return (jnp.take(summed, lax.axis_index(axis_name), axis=0),)
 
 
 _codec_ring_gather.defvjp(_codec_ring_gather_fwd, _codec_ring_gather_bwd)

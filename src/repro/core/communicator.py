@@ -651,7 +651,13 @@ class FlexCommunicator:
                 iterations=sc.tuned.iterations,
                 converged=sc.tuned.converged,
                 members=sc.member_weights() or None,
-                codecs=sc.codecs or None)
+                # with compression configured, an EMPTY choice is a tuned
+                # verdict (refinement dropped every codec) and must be
+                # recorded as {} so the warm start restores it instead of
+                # re-running the full-payload choose_codecs; without
+                # --compress the field is omitted entirely (byte-compatible
+                # cache files)
+                codecs=(dict(sc.codecs) if self.config.compress else None))
             n += 1
         target = path or self.config.tuning_cache
         if target and n:

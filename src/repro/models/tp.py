@@ -209,12 +209,49 @@ class ParallelCtx:
                                               elapsed_s=elapsed_s)
         return changed
 
-    def ef_codec_name(self) -> str:
-        """The lossy wire codec the comm config enables ("" when
-        compression is off or lossless) — the error-feedback gate for
-        bucketed gradient sync (train/bucketer.py, DESIGN.md §12)."""
+    def ef_codec_name(self, payload_dtype: str = "float32") -> str:
+        """The wire codec the comm config enables that loses bits for
+        ``payload_dtype`` gradient payloads ("" when compression is off or
+        bit-exact for that dtype) — the tree-level error-feedback gate for
+        bucketed gradient sync (train/bucketer.py, DESIGN.md §12).  This
+        decides whether the residual STATE exists; whether each bucket's
+        roundtrip actually runs is gated per slot by
+        :meth:`ef_active_for`."""
         from repro.core.codecs import lossy_codec_name
-        return lossy_codec_name(self.comm_config.compress)
+        return lossy_codec_name(self.comm_config.compress, payload_dtype)
+
+    def ef_active_for(self, nbytes: int, dtype, expert: bool = False) -> bool:
+        """Does the reduce of one gradient bucket actually traverse a wire
+        codec that loses bits for ``dtype``?  Queries the codec choice of
+        every slot the bucket's reduce crosses — the per-bucket error-
+        feedback gate (train/bucketer.py): a slot whose tuner declined
+        compression ships exact bytes, and perturbing it with a residual
+        for a quantization that never happens would be pure noise."""
+        from repro.core.codecs import get_codec
+        from repro.core.communicator import bucket_for
+        from repro.core.topology import Collective
+
+        legs = []   # (communicator, collective, payload bytes) traversed
+        if expert:
+            if self._node_comm is not None:
+                legs.append((self._node_comm, Collective.ALL_REDUCE, nbytes))
+        elif self._cluster_comm is not None:
+            cc = self._cluster_comm
+            if cc.hierarchical:
+                shard = max(nbytes // cc.intra.n_ranks, 1)
+                legs = [(cc.intra, Collective.REDUCE_SCATTER, nbytes),
+                        (cc.inter, Collective.ALL_REDUCE, shard),
+                        (cc.intra, Collective.ALL_GATHER, shard)]
+            else:
+                legs = [(c, Collective.ALL_REDUCE, nbytes)
+                        for c in cc.comms()]
+        elif self._dp_comm is not None:
+            legs.append((self._dp_comm, Collective.ALL_REDUCE, nbytes))
+        for comm, op, n in legs:
+            for codec in comm.slot(op, bucket_for(n)).codecs.values():
+                if not get_codec(codec).lossless_for(dtype):
+                    return True
+        return False
 
     def timing_kind(self) -> str:
         """The active TimingSource kind: "measured" if ANY communicator

@@ -32,7 +32,12 @@ Error feedback (DESIGN.md §12): when a LOSSY wire codec is enabled for
 secondary paths (``--compress secondary=fp8``), each bucket carries a
 per-rank residual — the quantization error its last send suffered — added
 to the gradient before the reduce and refreshed from the local
-encode/decode roundtrip afterwards (EF-SGD).  The roundtrip is a
+encode/decode roundtrip afterwards (EF-SGD).  The roundtrip is gated PER
+BUCKET on the slot codec choice the reduce will actually execute
+(``ctx.ef_active_for``): a bucket whose tuner declined compression (tiny
+payloads, primary-dominated plans) transfers exact bytes, so it skips the
+roundtrip and its residual stays zero — compensating a quantization that
+never happens on the wire would perturb an exact transfer.  The roundtrip is a
 first-order *proxy* for the wire loss: the ring quantizes in-flight
 partials, not each rank's raw contribution, so the residual compensates
 the local quantization error exactly and the accumulated-partial error to
@@ -156,6 +161,23 @@ class GradBucketer:
 
     # -- execution -------------------------------------------------------------
 
+    @staticmethod
+    def _ef_applies(ctx, b: GradBucket, codec: str) -> bool:
+        """Does bucket ``b``'s reduce actually lose bits on the wire?
+
+        Pure host-side trace-time arithmetic: the codec must be lossy for
+        the bucket's dtype AND some slot along the reduce must have CHOSEN
+        a lossy codec (``ctx.ef_active_for``).  A ctx without the query
+        surface (bare test doubles) falls back to the codec-level verdict
+        — the conservative pre-gating behavior."""
+        from repro.core.codecs import get_codec
+        if get_codec(codec).lossless_for(b.dtype):
+            return False
+        probe = getattr(ctx, "ef_active_for", None)
+        if probe is None:
+            return True
+        return bool(probe(b.nbytes, b.dtype, expert=b.expert))
+
     def sync(self, grads, ctx, *, residuals=None, codec: str = ""):
         """Reduce every bucket through the ctx, each inside its own
         ``ctx.issue(tag)`` scope (one RoutePlan / one Stage-2
@@ -166,7 +188,9 @@ class GradBucketer:
         structure as ``grads``), each bucket sends gradient + residual and
         refreshes the residual from the local quantization roundtrip
         (error feedback, see module docstring).  Returns ``(synced,
-        new_residuals)`` in that mode."""
+        new_residuals)`` in that mode.  Buckets whose slots decline the
+        codec — or whose dtype the codec packs bit-exactly — skip the
+        roundtrip entirely and keep a zero residual."""
         ef = bool(codec) and residuals is not None
         leaves = jax.tree_util.tree_leaves(grads)
         if len(leaves) != self.n_leaves:
@@ -184,11 +208,12 @@ class GradBucketer:
         for b in self.buckets:
             segs = [b.pieces[k].take(leaves[b.pieces[k].leaf])
                     for k in range(len(b.pieces))]
+            ef_b = ef and self._ef_applies(ctx, b, codec)
             with ctx.issue(b.tag):
                 flat = (jnp.concatenate([s.reshape(-1) for s in segs])
                         if len(segs) > 1 else segs[0].reshape(-1))
                 new_res = None
-                if ef:
+                if ef_b:
                     rsegs = [p.take(res_leaves[p.leaf]) for p in b.pieces]
                     rflat = (jnp.concatenate([r.reshape(-1) for r in rsegs])
                              if len(rsegs) > 1 else rsegs[0].reshape(-1))
@@ -197,6 +222,12 @@ class GradBucketer:
                     flat = flat + rflat
                     new_res = (flat - kops.wire_roundtrip(
                         flat, codec_name=codec)).astype(flat.dtype)
+                elif ef:
+                    # the slot ships exact bytes (codec declined, or the
+                    # pack is bit-exact for this dtype): no wire error to
+                    # compensate, and the carried residual — stale by
+                    # definition — must not perturb the exact transfer
+                    new_res = jnp.zeros_like(flat)
                 if b.expert:
                     red = ctx.pod_psum(ctx.node_all_reduce(flat))
                 else:

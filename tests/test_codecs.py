@@ -55,6 +55,12 @@ def test_registry_and_aliases():
     assert get_codec("fp8") is FP8_E4M3
     assert get_codec("bf16_pack").lossless
     assert not get_codec("fp8_e5m2").lossless
+    # losslessness is per payload dtype: the pack is bit-exact for bf16
+    # data but truncates fp32 mantissas (the EF gate must see that)
+    assert get_codec("bf16_pack").lossless_for("bfloat16")
+    assert not get_codec("bf16_pack").lossless_for("float32")
+    assert get_codec("off").lossless_for("float32")
+    assert not get_codec("fp8").lossless_for("float32")
     # wire math: bf16 halves; fp8 ships 1B values + 4B/128-lane-row scales
     assert get_codec("bf16").wire_bytes(1024) == 512
     assert get_codec("fp8").wire_ratio == pytest.approx((1 + 4 / 128) / 4)
@@ -75,7 +81,11 @@ def test_parse_compress_and_canonical():
     assert (canonical_spec("ortho=fp8,staged=bf16")
             == canonical_spec("staged=bf16_pack,ortho=fp8_e4m3"))
     assert lossy_codec_name("secondary=fp8") == "fp8_e4m3"
-    assert lossy_codec_name("secondary=bf16") == ""
+    # the EF gate quotes fp32 payloads by default (the pricing dtype):
+    # packing fp32 gradients to bf16 LOSES bits, so it needs residuals —
+    # only genuinely-bf16 trees may skip the EF state
+    assert lossy_codec_name("secondary=bf16") == "bf16_pack"
+    assert lossy_codec_name("secondary=bf16", payload_dtype="bfloat16") == ""
     assert lossy_codec_name("") == ""
     with pytest.raises(ValueError):
         parse_compress("primary=fp8")        # primary never compresses
@@ -161,6 +171,54 @@ def test_wire_roundtrip_padding_safe():
         x = _payload(4, shape=shape)
         out = ops.wire_roundtrip(x, codec_name="fp8_e4m3")
         assert out.shape == x.shape and out.dtype == x.dtype
+
+
+# ---------------------------------------------------------------------------
+# codec collective gradients: straight-through VJPs match the raw ring
+# ---------------------------------------------------------------------------
+
+def _mesh1d():
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:8]), ("x",))
+
+
+def _grad_of(collective, codec, x):
+    """d/dx of a per-rank-weighted quadratic over the collective's output.
+
+    The per-rank weight makes the output cotangent DIFFER across ranks,
+    which is what exposes a wrong all-gather transpose: selecting the own
+    row BEFORE the cross-rank psum hands every rank ``sum_k g_k[k]``
+    instead of ``sum_k g_k[r]``.  Payloads are small-integer fp32 (bf16-
+    exact), so the compressed forward is bit-identical and only the VJP
+    is under test.
+    """
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core import collectives as mp
+
+    def shard(xs):
+        out = getattr(mp, collective)(xs, "x", codec=codec)
+        w = lax.axis_index("x").astype(jnp.float32) + 1.0
+        return jnp.sum(out * out * w)[None]
+
+    f = shard_map(shard, mesh=_mesh1d(), in_specs=(P("x"),),
+                  out_specs=P("x"), check_vma=False)
+    return jax.grad(lambda xs: jnp.sum(jax.jit(f)(xs)))(x)
+
+
+@needs8
+@pytest.mark.parametrize("collective", ["ring_all_gather",
+                                        "ring_all_reduce"])
+def test_codec_collective_grads_match_uncompressed(collective):
+    # integer-valued fp32 < 17 keeps every in-flight partial sum (< 8*17)
+    # bf16-exact across the wire
+    x = (jnp.arange(8 * 6, dtype=jnp.float32) % 17).reshape(8 * 6)
+    g_plain = _grad_of(collective, "", x)
+    g_codec = _grad_of(collective, "bf16_pack", x)
+    assert bool(jnp.any(g_plain != 0.0))
+    np.testing.assert_allclose(np.asarray(g_codec), np.asarray(g_plain),
+                               rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -327,6 +385,51 @@ def test_compressed_cold_warm_restore_roundtrip():
         assert warm.plan_signature() == cold_sig
 
 
+def test_profile_store_distinguishes_empty_codecs_from_legacy():
+    # {} is a real verdict ("refinement dropped every codec") and must
+    # round-trip as {}, never collapse to the legacy "entry predates
+    # codecs" None that triggers a fresh full-payload choice
+    from repro.control.profile import TuningProfile
+    prof = TuningProfile()
+    prof.record("p", "ring+staged=fp8_e4m3", AR, 8, 1024, 100,
+                {"nvlink": 100}, codecs={})
+    assert prof.lookup_codecs("p", "ring+staged=fp8_e4m3", AR,
+                              8, 1024, 100) == {}
+    prof.record("p", "ring", AR, 8, 1024, 100, {"nvlink": 100})
+    assert prof.lookup_codecs("p", "ring", AR, 8, 1024, 100) is None
+
+
+@needs8
+def test_warm_start_restores_refined_empty_codec_choice():
+    # a cold tune whose refinement dropped EVERY codec must warm-start
+    # uncompressed: the saved {} pre-seeds the codec choice, so the warm
+    # path never re-runs choose_codecs (which, priced on the full
+    # payload, could re-attach what the fixpoint rejected)
+    with tempfile.TemporaryDirectory() as d:
+        cache = os.path.join(d, "tune.json")
+        cfg = CommConfig(profile="h800", compress="secondary=fp8",
+                         tuning_cache=cache)
+        cold = comm_init_rank("e", 8, cfg)
+        bucket = 64 * 1024
+        assert cold.slot(AR, bucket).codecs == {}
+        cold.save_tuning()
+        with open(cache) as f:
+            entries = json.load(f)["entries"]
+        assert any(e["codecs"] == {} for e in entries), entries
+
+        comm_destroy_all()
+        warm = comm_init_rank("e", 8, cfg)
+
+        def boom(*a, **k):
+            raise AssertionError(
+                "warm start re-ran choose_codecs instead of restoring "
+                "the saved (empty) choice")
+        warm.model.choose_codecs = boom
+        scw = warm.slot(AR, bucket)
+        assert scw.warm and scw.codecs == {}
+        assert warm.slot_codecs(AR, bucket) == {}
+
+
 @needs8
 def test_uncompressed_cache_files_unchanged_by_codec_fields():
     # a default (no --compress) save must not grow a "codecs" key — the
@@ -376,7 +479,18 @@ def test_step_time_bounds_wire_scale():
 # fp8 + error feedback: train-smoke loss equivalence
 # ---------------------------------------------------------------------------
 
-def _run_train(compress: str, steps: int = 10):
+def _degraded_h800(factor: float = 0.05) -> str:
+    """An h800 with the primary degraded to ``factor`` of nominal: the
+    Stage-1 optimum routes real share onto the secondary paths, which is
+    where the codec chooser actually attaches codecs at train-smoke
+    bucket sizes."""
+    from repro.core.links import PROFILES, degrade_profile
+    return degrade_profile(PROFILES["h800"], f"nvlink={factor}").name
+
+
+def _run_train(compress: str, steps: int = 10, *, profile: str = "h800",
+               bucket_mb: float = 0.25):
+    """Returns (per-step losses, max |residual| or None without EF)."""
     from repro.configs import get_config
     from repro.launch import shapes as SH
     from repro.launch.mesh import make_mesh
@@ -390,12 +504,12 @@ def _run_train(compress: str, steps: int = 10):
     cfg = get_config("glm4-9b").reduced()
     mesh = make_mesh((2, 4), ("data", "model"))
     shape = SH.InputShape("t", "train", 32, 4)
-    comm = CommConfig(profile="h800", compress=compress,
+    comm = CommConfig(profile=profile, compress=compress,
                       tag=f"ef-{compress or 'off'}")
     step, ctx = build_train_step(
         cfg, mesh, comm=comm, shape=shape,
         opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps),
-        bucket_mb=0.25)
+        bucket_mb=bucket_mb)
     params = init_params(jax.random.PRNGKey(0), cfg)
     opt_state = init_state(params)
     ef = bool(ctx.ef_codec_name())
@@ -409,19 +523,23 @@ def _run_train(compress: str, steps: int = 10):
                                         {k: jnp.asarray(v)
                                          for k, v in next(batches).items()})
             losses.append(float(m["loss"]))
+    rmax = None
     if ef:
-        # the residual tree must actually carry error between steps
         _, residuals = opt_state
         rmax = max(float(jnp.abs(r).max())
                    for r in jax.tree_util.tree_leaves(residuals))
-        assert rmax > 0.0, "EF residuals never updated"
-    return losses
+    return losses, rmax
 
 
 @needs8
 def test_fp8_ef_train_matches_uncompressed_final_loss():
-    base = _run_train("")
-    fp8 = _run_train("secondary=fp8")
+    # degraded primary + big buckets: the tuner routes real share onto
+    # the secondaries and the chooser attaches fp8, so EF compensates an
+    # actual wire quantization
+    deg = _degraded_h800()
+    base, _ = _run_train("", profile=deg, bucket_mb=8.0)
+    fp8, rmax = _run_train("secondary=fp8", profile=deg, bucket_mb=8.0)
+    assert rmax is not None and rmax > 0.0, "EF residuals never updated"
     assert all(np.isfinite(base)) and all(np.isfinite(fp8))
     assert base[-1] < base[0] and fp8[-1] < fp8[0]   # both learn
     # error feedback keeps the lossy run's trajectory within tolerance of
@@ -431,12 +549,31 @@ def test_fp8_ef_train_matches_uncompressed_final_loss():
 
 
 @needs8
-def test_bf16_lossless_compress_needs_no_ef_state():
-    # a LOSSLESS codec must not trigger the EF opt-state pairing
+def test_ef_skipped_when_every_slot_declines_the_codec():
+    # healthy primary + tiny buckets: every gradient-sync slot declines
+    # fp8, so the wire ships exact bytes — the per-bucket EF gate must
+    # skip the roundtrip (residuals stay zero) and the trajectory must
+    # match the uncompressed run, not carry a phantom-quantization
+    # perturbation
+    base, _ = _run_train("", steps=4)
+    fp8, rmax = _run_train("secondary=fp8", steps=4)
+    assert rmax == 0.0, f"EF perturbed an uncompressed transfer: {rmax}"
+    np.testing.assert_allclose(fp8, base, rtol=1e-6)
+
+
+@needs8
+def test_bf16_on_fp32_gradients_counts_as_lossy_for_ef():
+    # bf16_pack truncates fp32 mantissas: with fp32 params the EF gate
+    # must pair the residual state (only genuinely-bf16 trees skip it)
     comm_destroy_all()
     from repro.models.tp import ParallelCtx
     ctx = ParallelCtx(comm_config=CommConfig(profile="h800",
                                              compress="secondary=bf16"))
-    assert ctx.ef_codec_name() == ""
-    losses = _run_train("secondary=bf16", steps=4)
+    assert ctx.ef_codec_name() == "bf16_pack"
+    assert ctx.ef_codec_name("bfloat16") == ""
+    # bf16's 2:1 wire saving needs a harder-degraded primary than fp8's
+    # ~3.9:1 before the chooser attaches it at the smoke's bucket size
+    losses, rmax = _run_train("secondary=bf16", steps=4,
+                              profile=_degraded_h800(0.02), bucket_mb=8.0)
+    assert rmax is not None and rmax > 0.0
     assert all(np.isfinite(losses))
