@@ -8,8 +8,9 @@ import time
 
 from benchmarks import (compressed_path, degraded_rail, fig2_improvement,
                         fig5_runtime, future_tree_allreduce,
-                        hierarchy_crossover, overlap_step, table1_idle_bw,
-                        table2_bandwidth, roofline_report, perf_hillclimb)
+                        hierarchy_crossover, overlap_step, serving_load,
+                        table1_idle_bw, table2_bandwidth, roofline_report,
+                        perf_hillclimb)
 
 
 def main() -> None:
@@ -25,6 +26,7 @@ def main() -> None:
         ("degraded_rail", degraded_rail.run),
         ("overlap_step", overlap_step.run),
         ("compressed_path", compressed_path.run),
+        ("serving_load", serving_load.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: flash-decoding attention over a PAGED KV cache.
+
+One grid row per packed token, one grid step per logical KV block: the
+block table (a scalar-prefetch operand) drives the BlockSpec index map, so
+each step DMAs exactly the physical pool block that holds the row's next
+``block_size`` KV positions — the block-gather never materializes a dense
+[T, S, H, hd] K/V copy the way the pure-JAX reference does.  Online
+softmax (running max / denominator / accumulator in VMEM scratch, carried
+across the innermost grid dimension) merges the per-block partials, the
+flash-decoding recurrence.
+
+Each packed row is ONE query token (the serving engine's packed layout:
+generation rows and context-phase chunk rows alike), so causality is
+entirely the ``kv_valid`` bound — position p's row attends positions
+``< kv_valid = p+1``, including K/V scattered earlier in the same fused
+step.  Rows with ``kv_valid == 0`` (bucket padding) keep an all-masked
+accumulator and emit exact zeros.  Stale data in reused pool blocks and
+unallocated table entries (pointing at block 0) sit beyond ``kv_valid``
+and are masked to exact-zero contributions — the allocator's
+defragmentation-free-reuse invariant (serving/paged_kv.py).
+
+TARGET: TPU (PrefetchScalarGridSpec + VMEM scratch).  VALIDATED:
+interpret=True on CPU against ``ref.paged_flash_decode_ref``
+(tests/test_serving.py, fp32/bf16 x GQA head configs).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fd_kernel(bt_ref, kv_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, block_size: int,
+               window: Optional[int], scale: float):
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    nb_grid = pl.num_programs(1)
+
+    @pl.when(b == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, -jnp.inf, m_ref.dtype)
+        l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [Hq, hd]
+    k = k_ref[0].astype(jnp.float32)                  # [bs, Hkv, hd]
+    v = v_ref[0].astype(jnp.float32)
+    hq, hd = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(hkv, group, hd)
+
+    s = jnp.einsum("kgd,bkd->kgb", qg, k,
+                   preferred_element_type=jnp.float32)  # [Hkv, g, bs]
+    kvv = kv_ref[t]
+    k_pos = b * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_size), 2)
+    keep = k_pos < kvv
+    if window is not None:
+        # the row's query position is kvv - 1 (kv_valid = pos + 1)
+        keep = keep & ((kvv - 1 - k_pos) < window)
+    s = jnp.where(keep, s, -jnp.inf)
+
+    m_run = m_ref[...]
+    m_new = jnp.maximum(m_run, s.max(axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(jnp.isfinite(s),
+                  jnp.exp(s - m_safe[..., None]), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "kgb,bkd->kgd", p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(b == nb_grid - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        out = acc_ref[...] / denom[..., None]         # [Hkv, g, hd]
+        o_ref[0] = out.reshape(hq, hd).astype(o_ref.dtype)
+
+
+def paged_flash_decode_pool(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            kv_valid: jax.Array, *,
+                            window: Optional[int] = None,
+                            interpret: bool = True) -> jax.Array:
+    """Attention for T packed single-token rows over a paged pool.
+
+    q            : [T, Hq, hd]
+    k/v_pool     : [n_blocks, block_size, Hkv, hd]  (one layer's pool)
+    block_tables : [T, max_blocks] int32 — logical block j of row t lives
+                   in pool block ``block_tables[t, j]``
+    kv_valid     : [T] int32 — row t attends positions < kv_valid[t]
+    returns        [T, Hq, hd] in q.dtype
+    """
+    t_rows, hq, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    maxb = block_tables.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(t_rows, maxb),
+        in_specs=[
+            pl.BlockSpec((1, hq, hd), lambda t, b, bt, kv: (t, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, hd),
+                         lambda t, b, bt, kv: (bt[t, b], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, hd),
+                         lambda t, b, bt, kv: (bt[t, b], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, hd), lambda t, b, bt, kv: (t, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, group), jnp.float32),       # running max
+            pltpu.VMEM((hkv, group), jnp.float32),       # running denom
+            pltpu.VMEM((hkv, group, hd), jnp.float32),   # accumulator
+        ],
+    )
+    kernel = functools.partial(_fd_kernel, block_size=bs, window=window,
+                               scale=1.0 / math.sqrt(hd))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t_rows, hq, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), kv_valid.astype(jnp.int32),
+      q, k_pool, v_pool)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import chunk_accumulate as _ca
 from repro.kernels import codec as _codec
+from repro.kernels import flash_decode as _fd
 from repro.kernels import payload_partition as _pp
 
 
@@ -142,6 +143,20 @@ def wire_decode_accumulate(vals: jax.Array, scales, mine: jax.Array, *,
                                                acc_dtype=acc_dtype,
                                                interpret=_interpret())
     return out2.reshape(-1)[:mine.size].reshape(mine.shape)
+
+
+# --- paged flash-decoding attention (DESIGN.md §13) -------------------------
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_flash_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       block_tables: jax.Array, kv_valid: jax.Array, *,
+                       window=None) -> jax.Array:
+    """Flash-decoding over a paged KV pool (one layer): q [T, Hq, hd],
+    pools [n_blocks, block_size, Hkv, hd], block_tables [T, maxb],
+    kv_valid [T] -> [T, Hq, hd].  Compiled on TPU, interpret elsewhere."""
+    return _fd.paged_flash_decode_pool(q, k_pool, v_pool, block_tables,
+                                       kv_valid, window=window,
+                                       interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("codec_name",))

@@ -44,3 +44,38 @@ def fp8_decode_accumulate_ref(vals: jax.Array, scales: jax.Array,
                               acc_dtype=jnp.float32) -> jax.Array:
     recv = vals.astype(acc_dtype) * scales.astype(acc_dtype)
     return (recv + b.astype(acc_dtype)).astype(b.dtype)
+
+
+def paged_flash_decode_ref(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           kv_valid: jax.Array, *,
+                           window=None) -> jax.Array:
+    """Dense-gather oracle for kernels/flash_decode.py: materialize every
+    row's [S, Hkv, hd] K/V via its block table, one fp32 softmax over the
+    ``kv_valid`` prefix.  Same masked-lane semantics as the kernel: masked
+    scores are -inf, masked probabilities exact zeros, all-masked rows
+    (kv_valid == 0, bucket padding) return exact zeros."""
+    import math
+    t_rows, hq, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    maxb = block_tables.shape[1]
+    s_len = maxb * bs
+    flat = (block_tables[:, :, None] * bs +
+            jnp.arange(bs)[None, None, :]).reshape(t_rows, s_len)
+    k = k_pool.reshape(nb * bs, hkv, hd)[flat].astype(jnp.float32)
+    v = v_pool.reshape(nb * bs, hkv, hd)[flat].astype(jnp.float32)
+    group = hq // hkv
+    qg = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(
+        t_rows, hkv, group, hd)
+    s = jnp.einsum("tkgd,tskd->tkgs", qg, k)
+    k_pos = jnp.arange(s_len)[None, :]
+    keep = k_pos < kv_valid[:, None]
+    if window is not None:
+        keep = keep & ((kv_valid[:, None] - 1 - k_pos) < window)
+    s = jnp.where(keep[:, None, None, :], s, -jnp.inf)
+    m = s.max(axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+    out = jnp.einsum("tkgs,tskd->tkgd", p, v) / \
+        jnp.maximum(p.sum(axis=-1), 1e-30)[..., None]
+    return out.reshape(t_rows, hq, hd).astype(q.dtype)

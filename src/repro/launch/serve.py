@@ -1,12 +1,16 @@
-"""Serving launcher: batched request serving with the wave engine.
+"""Serving launcher: batched request serving — wave engine or the
+continuous-batching paged engine (DESIGN.md §13).
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \
-      --requests 8 --max-new 12
+      --requests 8 --max-new 12 --paged on --kv-block 16 \
+      --max-tokens-in-flight 32
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -17,7 +21,25 @@ from repro.configs import ALIASES, get_config
 from repro.core.communicator import CommConfig
 from repro.models.tp import ParallelCtx
 from repro.models.transformer import init_params
-from repro.serving.engine import ServeConfig, ServeEngine
+from repro.serving.engine import (PagedServeConfig, PagedServeEngine,
+                                  ServeConfig, ServeEngine)
+
+
+def build_workload(rng, n_requests: int, vocab: int, max_new: int,
+                   mixed: bool):
+    """(prompt, max_new) pairs.  --mixed interleaves short chat-style and
+    long document-style requests — the population where wave scheduling
+    collapses (a long request holds the whole wave)."""
+    work = []
+    for i in range(n_requests):
+        if mixed and i % 2 == 1:
+            plen = int(rng.integers(16, 33))
+            mnew = max(max_new, 16)
+        else:
+            plen = int(rng.integers(3, 9))
+            mnew = max(4, max_new // 2) if mixed else max_new
+        work.append((rng.integers(1, vocab, size=plen).tolist(), mnew))
+    return work
 
 
 def main(argv=None) -> int:
@@ -28,6 +50,31 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", choices=["on", "off"], default="off",
+                    help="'on': continuous batching over the paged KV "
+                         "cache; 'off': the legacy wave engine (the "
+                         "parity baseline)")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="tokens per paged KV block")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="pool blocks per layer (0 = auto-size, no "
+                         "preemption pressure)")
+    ap.add_argument("--max-tokens-in-flight", type=int, default=32,
+                    help="packed-row budget per tick (top batch-shape "
+                         "bucket)")
+    ap.add_argument("--max-requests", type=int, default=8,
+                    help="concurrent admitted requests (paged engine)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed short/long prompt+output lengths")
+    ap.add_argument("--assert-warm", action="store_true",
+                    help="exit 2 unless (a) the engine re-jitted at most "
+                         "one executable per batch-shape bucket per plan "
+                         "(admission-driven shape changes must be "
+                         "exec-cache hits) and (b) every tuned Stage-1 "
+                         "slot warm-started, when communicators exist")
+    ap.add_argument("--out", default="",
+                    help="write the serve record (serving block + cache "
+                         "stats) to this JSON path")
     ap.add_argument("--tuning-cache", default="",
                     help="TuningProfile JSON: warm-start Stage-1 shares "
                          "and persist them back when draining finishes")
@@ -81,20 +128,26 @@ def main(argv=None) -> int:
               "wave itself never crosses the NIC tier; see "
               "launch/shapes.py)")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, ctx,
-                         ServeConfig(slots=args.slots, cache_len=96))
+    if args.paged == "on":
+        engine = PagedServeEngine(params, cfg, ctx, PagedServeConfig(
+            max_requests=args.max_requests, cache_len=96,
+            kv_block=args.kv_block, n_blocks=args.kv_blocks,
+            max_tokens_in_flight=args.max_tokens_in_flight))
+    else:
+        engine = ServeEngine(params, cfg, ctx,
+                             ServeConfig(slots=args.slots, cache_len=96))
     rng = np.random.default_rng(0)
     t0 = time.time()
-    for i in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab, size=rng.integers(3, 9)).tolist()
-        engine.submit(prompt, max_new=args.max_new,
-                      temperature=args.temperature)
+    for prompt, mnew in build_workload(rng, args.requests, cfg.vocab,
+                                       args.max_new, args.mixed):
+        engine.submit(prompt, max_new=mnew, temperature=args.temperature)
     engine.run_until_drained()
     dt = time.time() - t0
     fin = engine.finished()
     total_toks = sum(len(v) for v in fin.values())
     print(f"served {len(fin)} requests, {total_toks} tokens "
-          f"in {dt:.1f}s ({total_toks / dt:.1f} tok/s)")
+          f"in {dt:.1f}s ({total_toks / dt:.1f} tok/s, "
+          f"engine={args.paged == 'on' and 'paged' or 'wave'})")
     rep = engine.comm_report()
     ec = rep["executable_cache"]
     print(f"decode executable cache: {ec['rebuilds']} rebuilds, "
@@ -106,12 +159,60 @@ def main(argv=None) -> int:
     print(f"decode issue/await: {pr['issued']} issued, "
           f"{pr['awaits']} awaited, {pr['in_flight']} in flight")
     assert pr["in_flight"] == 0
+    srv = rep["serving"]
+    if srv["engine"] == "paged":
+        tif = srv["tokens_in_flight"]
+        bc = srv["batch_bucket_cache"]
+        kv = srv["kv_blocks"]
+        print(f"serving: {srv['steps']} packed steps, tokens in flight "
+              f"peak {tif['peak']}/{tif['budget']}, buckets "
+              f"{srv['buckets']}, bucket-cache hit rate {bc['hit_rate']} "
+              f"({bc['hits']} hits / {bc['rebuilds']} rebuilds)")
+        print(f"serving: {srv['scheduler']['preemptions']} preemptions, "
+              f"kv blocks peak {kv['peak_in_use']}/{kv['total']}")
     if args.tuning_cache:
         n = engine.save_tuning(args.tuning_cache)
         print(f"tuning profile: {n} slots -> {args.tuning_cache}")
+    if args.out:
+        d = os.path.dirname(args.out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"arch": args.arch, "engine": srv["engine"],
+                       "requests": len(fin), "tokens": total_toks,
+                       "wall_s": round(dt, 3), "serving": srv,
+                       "executable_cache": ec, "program": pr},
+                      f, indent=2, default=str)
+        print(f"serve record -> {args.out}")
     for rid in sorted(fin)[:4]:
         print(f"  req {rid}: {fin[rid][:10]}")
     assert len(fin) == args.requests
+
+    if args.assert_warm:
+        failures = []
+        # (a) zero admission-driven re-jits: at most one rebuild per
+        # batch-shape bucket (single-device ctx = one plan signature)
+        buckets = max(len(pr.get("shape_buckets", [])), 1)
+        if ec["rebuilds"] > buckets:
+            failures.append(
+                f"{ec['rebuilds']} rebuilds > {buckets} bucket(s): "
+                "admission-driven shape changes re-jitted")
+        if srv["engine"] == "paged" and ec["hits"] == 0:
+            failures.append("no exec-cache hits — vacuous bucket check")
+        # (b) Stage-1 warm start, when there are tuned slots
+        slots = [s for ax in ctx.tuning_status().values()
+                 for s in ax.values()]
+        cold = [s for s in slots if not s.get("warm")]
+        if cold:
+            failures.append(f"{len(cold)} tuned slot(s) ran Stage-1 cold")
+        if failures:
+            for msg in failures:
+                print(f"[FAIL] --assert-warm: {msg}")
+            engine.close()
+            return 2
+        print(f"[OK] --assert-warm: {ec['rebuilds']} rebuilds across "
+              f"{buckets} bucket(s), {len(slots)} tuned slots warm")
+    engine.close()
     return 0
 
 

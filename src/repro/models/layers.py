@@ -435,6 +435,100 @@ def _seq_sharded_decode(q, k_new, v_new, kv_cache, cache_pos, cfg, ctx,
 
 
 # ---------------------------------------------------------------------------
+# paged attention (continuous-batching serving, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def paged_attention_block(p, x: jax.Array, cfg: ArchConfig,
+                          ctx: ParallelCtx, *, positions: jax.Array,
+                          kv_valid: jax.Array, pools, block_tables,
+                          window_override="cfg",
+                          impl: str = "reference"):
+    """One attention sublayer over a PAGED KV pool (packed serving layout).
+
+    x            : [T, 1, D] — T packed single-token rows (prefill-chunk
+                   rows and decode rows alike; the engine packs them)
+    positions    : [T] int32 per-row positions (0 for padding rows)
+    kv_valid     : [T] int32 — row t attends cache positions < kv_valid[t];
+                   0 marks a bucket-padding row (zero attention mass, no
+                   cache write)
+    pools        : (k_pool, v_pool) [n_blocks, block_size, kv_w, hd] — ONE
+                   layer's physical block pool
+    block_tables : [T, max_blocks] int32 — per-ROW tables (the engine
+                   gathers its per-request tables out to packed rows)
+    impl         : "reference" (dense block-gather + chunked_attention — the
+                   oracle, bit-identical to the wave engine's dense-cache
+                   path) or "kernel" (kernels/flash_decode.py)
+
+    The new K/V are scattered into the pool BEFORE attention, so later
+    rows of the same request in the same step see earlier rows' K/V —
+    intra-step causality is then exactly the kv_valid bound.  Padding rows
+    scatter to a dropped out-of-bounds index (zero pool writes) and read
+    an all-masked accumulator (exact-zero output).
+
+    Returns (out [T, 1, D], (new_k_pool, new_v_pool)).
+    """
+    b, s, d = x.shape
+    assert s == 1, "paged attention packs single-token rows"
+    hd = cfg.head_dim_
+    hq_l, kv_w, _ = head_layout(cfg, ctx)
+    window = cfg.sliding_window if window_override == "cfg" \
+        else window_override
+
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, s, hq_l, hd)
+    wk, bk = _kv_slice(p, cfg, ctx, "k")
+    wv, bv = _kv_slice(p, cfg, ctx, "v")
+    k = jnp.einsum("bsd,df->bsf", x, wk)
+    v = jnp.einsum("bsd,df->bsf", x, wv)
+    if bk is not None:
+        k, v = k + bk, v + bv
+    k = k.reshape(b, s, kv_w, hd)
+    v = v.reshape(b, s, kv_w, hd)
+    if cfg.rope_theta:
+        pos2 = positions[:, None]                 # [T, 1] per-row
+        q = apply_rope(q, pos2, cfg.rope_theta)
+        k = apply_rope(k, pos2, cfg.rope_theta)
+
+    kp, vp = pools
+    nb, bs_blk = kp.shape[0], kp.shape[1]
+    blk = positions // bs_blk
+    off = positions % bs_blk
+    phys = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    # padding rows write nowhere: OOB destination + mode="drop"
+    dest = jnp.where(kv_valid > 0, phys * bs_blk + off, nb * bs_blk)
+    kp_flat = kp.reshape(nb * bs_blk, kv_w, hd)
+    vp_flat = vp.reshape(nb * bs_blk, kv_w, hd)
+    kp_flat = kp_flat.at[dest].set(k[:, 0].astype(kp.dtype), mode="drop")
+    vp_flat = vp_flat.at[dest].set(v[:, 0].astype(vp.dtype), mode="drop")
+    new_pools = (kp_flat.reshape(kp.shape), vp_flat.reshape(vp.shape))
+
+    if impl == "kernel":
+        from repro.kernels import ops as K
+        out = K.paged_flash_decode(q[:, 0], new_pools[0], new_pools[1],
+                                   block_tables, kv_valid,
+                                   window=window)[:, None]
+    else:
+        # dense block-gather reference: index i of the gathered view IS
+        # position i, so this call matches the wave engine's dense-cache
+        # chunked_attention bit for bit (same chunking, same masks; stale
+        # lanes beyond kv_valid contribute exact zeros either way).
+        maxb = block_tables.shape[1]
+        s_len = maxb * bs_blk
+        src = (block_tables[:, :, None] * bs_blk +
+               jnp.arange(bs_blk)[None, None, :]).reshape(b, s_len)
+        kg = kp_flat[src]                         # [T, S, kv_w, hd]
+        vg = vp_flat[src]
+        out = chunked_attention(q, kg, vg, causal=True, window=window,
+                                q_offset=positions, kv_valid=kv_valid)
+
+    o = jnp.einsum("bsf,fd->bsd", out.reshape(b, s, hq_l * hd), p["wo"])
+    o = ctx.tp_all_reduce(o)       # row-parallel combine — FlexLink path
+    return o, new_pools
+
+
+# ---------------------------------------------------------------------------
 # MLP (SwiGLU, TP col/row parallel)
 # ---------------------------------------------------------------------------
 

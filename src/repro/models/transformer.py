@@ -492,6 +492,114 @@ def _ssm_cache(cfg, ctx, batch_local, dtype):
     }
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    """Static paged-serving shape parameters (DESIGN.md §13).
+
+    block_size         : tokens per physical KV block
+    n_blocks           : physical blocks in the pool (per layer)
+    max_blocks_per_req : logical blocks per request row
+                         (= ceil(request length cap / block_size))
+    attn_impl          : "reference" (dense block-gather, bit-identical to
+                         the wave path) | "kernel" (flash_decode Pallas)
+    window_override    : "cfg" or an int/None, as DecodeConfig
+    """
+    block_size: int = 16
+    n_blocks: int = 64
+    max_blocks_per_req: int = 8
+    attn_impl: str = "reference"
+    window_override: Any = "cfg"
+
+
+PAGED_FAMILIES = ("dense", "vlm", "moe")
+
+
+def init_paged_pool(cfg: ArchConfig, ctx: ParallelCtx, pcfg: PagedConfig,
+                    dtype=None):
+    """Zero paged KV pool: ``[L, n_blocks, block_size, kv_w, hd]`` per K
+    and V.  Block contents are never zeroed again — reuse relies on
+    kv_valid masking (serving/paged_kv.py)."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged serving supports {PAGED_FAMILIES}, got {cfg.family} "
+            f"(ssm/hybrid/encdec stay on the wave engine)")
+    dtype = dtype or cfg.dtype
+    kv_w = L.head_layout(cfg, ctx)[1]
+    shape = (cfg.n_layers, pcfg.n_blocks, pcfg.block_size, kv_w,
+             cfg.head_dim_)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_decode_step(p, pool, tokens: jax.Array, positions: jax.Array,
+                      row_req: jax.Array, block_tables: jax.Array,
+                      sample_rows: jax.Array, cfg: ArchConfig,
+                      ctx: ParallelCtx, pcfg: PagedConfig):
+    """One packed continuous-batching step (context + generation phases).
+
+    tokens/positions/row_req : [T] int32 — packed rows; ``row_req`` maps a
+        row to its request row (block-table row), -1 for bucket padding
+    block_tables             : [R, max_blocks_per_req] int32
+    sample_rows              : [R] int32 — packed index of each request
+        row's sequence-frontier row (engine ignores logits of rows that
+        sampled nothing this tick)
+
+    Returns (logits [R, V_local], new pool).  Padding rows cost zero
+    attention mass and zero pool writes (layers.paged_attention_block).
+    """
+    fam = cfg.family
+    if fam not in PAGED_FAMILIES:
+        raise ValueError(fam)
+    valid = row_req >= 0
+    n_req = block_tables.shape[0]
+    btab = block_tables[jnp.clip(row_req, 0, n_req - 1)]     # [T, maxb]
+    kv_valid = jnp.where(valid, positions + 1, 0)
+    x = embed_tokens(p, tokens[:, None], cfg, ctx)           # [T, 1, D]
+
+    def attn(lp, x, kp, vp):
+        h, new_pools = L.paged_attention_block(
+            lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, ctx,
+            positions=positions, kv_valid=kv_valid, pools=(kp, vp),
+            block_tables=btab, window_override=pcfg.window_override,
+            impl=pcfg.attn_impl)
+        return x + h, new_pools
+
+    def step(x, inp):
+        lp, kp, vp = inp
+        x, (nkp, nvp) = attn(lp, x, kp, vp)
+        if "mlp" in lp:
+            x = x + L.mlp_block(
+                lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        else:
+            y, _ = M.moe_block(
+                lp["moe"], L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                cfg, ctx)
+            x = x + y
+        return x, (nkp, nvp)
+
+    pool_k, pool_v = pool["k"], pool["v"]
+    if fam == "moe" and "prefix" in p:
+        npre = cfg.moe.n_dense_prefix
+        for i in range(npre):
+            lp = jax.tree.map(lambda a: a[i], p["prefix"])
+            x, (nkp, nvp) = attn(lp, x, pool_k[i], pool_v[i])
+            pool_k = pool_k.at[i].set(nkp)
+            pool_v = pool_v.at[i].set(nvp)
+            x = x + L.mlp_block(
+                lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        x, (nkp, nvp) = lax.scan(step, x, (p["layers"], pool_k[npre:],
+                                           pool_v[npre:]))
+        pool_k = pool_k.at[npre:].set(nkp)
+        pool_v = pool_v.at[npre:].set(nvp)
+    else:
+        x, (pool_k, pool_v) = lax.scan(step, x, (p["layers"], pool_k,
+                                                 pool_v))
+
+    x = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    xs = x[jnp.clip(sample_rows, 0, x.shape[0] - 1)]         # [R, 1, D]
+    logits_l = lm_logits_local(p, xs, cfg, ctx)[:, 0]        # [R, V_l]
+    return logits_l, {"k": pool_k, "v": pool_v}
+
+
 def decode_step(p, cache, token: jax.Array, pos: jax.Array,
                 cfg: ArchConfig, ctx: ParallelCtx, dcfg: DecodeConfig,
                 enc_out=None):

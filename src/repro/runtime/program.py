@@ -95,20 +95,33 @@ class StepProgram:
         self._pending: list = []        # issued, un-awaited StepHandles
         self._issued = 0                # lifetime issue() count
         self._awaits = 0                # lifetime non-empty await_all()s
+        self._shape_keys: set = set()   # distinct batch-shape buckets seen
         ctx.register_program(self.name)
 
     # -- lifecycle -------------------------------------------------------------
 
-    def signature(self) -> Tuple:
+    def signature(self, *, shape_key=None) -> Tuple:
         """The executable-cache key: the current quantized plans of every
         slot THIS program's traces touch (its recorder footprint) — a
         sibling program tuning or oscillating a slot this step never
         closes over must not re-key it.  Refreshing the signature resolves
         each slot through the plan cache, so Stage-2 moves register there
-        as hit/retrace even when the executable itself is a cache hit."""
-        return self.ctx.plan_signature(self.name)
+        as hit/retrace even when the executable itself is a cache hit.
 
-    def __call__(self, *args, **kwargs):
+        ``shape_key`` extends the key with a batch-shape bucket (the
+        continuous-batching serving engine's padded packed-token count):
+        jax.jit would silently retrace a cached wrapper on a new shape,
+        escaping both the cache accounting and the warm-start contract, so
+        each bucket keys its OWN executable — admission-driven shape
+        changes inside the bucket ladder are exec-cache hits, never
+        re-jits (DESIGN.md §13)."""
+        sig = self.ctx.plan_signature(self.name)
+        if shape_key is None:
+            return sig
+        self._shape_keys.add(shape_key)
+        return (shape_key, sig)
+
+    def __call__(self, *args, shape_key=None, **kwargs):
         """Run one step through the plan-keyed executable cache.
 
         On a signature hit the cached callable runs with no trace; on a
@@ -118,14 +131,14 @@ class StepProgram:
         post-trace signature names the plans the executable actually
         closed over.
         """
-        fn = self.cache.get(self.signature())
+        fn = self.cache.get(self.signature(shape_key=shape_key))
         if fn is not None:
             with self.ctx.recording(self.name):
                 return self._timed(fn, args, kwargs)
         fn = self._builder()
         with self.ctx.recording(self.name):
             out = self._timed(fn, args, kwargs)
-        self.cache.put(self.signature(), fn)
+        self.cache.put(self.signature(shape_key=shape_key), fn)
         return out
 
     def _timed(self, fn, args, kwargs):
@@ -142,17 +155,18 @@ class StepProgram:
 
     # -- issue/await lifecycle (DESIGN.md §11) ---------------------------------
 
-    def issue(self, *args, **kwargs) -> StepHandle:
+    def issue(self, *args, shape_key=None, **kwargs) -> StepHandle:
         """Launch one step WITHOUT waiting on it.
 
-        Same executable-cache protocol as ``__call__``, but the call is
-        never blocked-until-ready: JAX's async dispatch keeps it in
-        flight, so the host can issue further work (another program, the
-        next decode tick) that overlaps it.  The result — and measured
-        timing + Stage-2 observation — lands at :meth:`await_all`.
+        Same executable-cache protocol as ``__call__`` (including the
+        ``shape_key`` batch-shape bucket), but the call is never
+        blocked-until-ready: JAX's async dispatch keeps it in flight, so
+        the host can issue further work (another program, the next decode
+        tick) that overlaps it.  The result — and measured timing +
+        Stage-2 observation — lands at :meth:`await_all`.
         """
         t0 = self._clock() if self._measured else None
-        fn = self.cache.get(self.signature())
+        fn = self.cache.get(self.signature(shape_key=shape_key))
         if fn is not None:
             with self.ctx.recording(self.name):
                 out = fn(*args, **kwargs)
@@ -160,7 +174,7 @@ class StepProgram:
             fn = self._builder()
             with self.ctx.recording(self.name):
                 out = fn(*args, **kwargs)
-            self.cache.put(self.signature(), fn)
+            self.cache.put(self.signature(shape_key=shape_key), fn)
         handle = StepHandle(out, t0)
         self._pending.append(handle)
         self._issued += 1
@@ -232,7 +246,8 @@ class StepProgram:
         return {"program": self.name,
                 "executable_cache": self.cache.report(),
                 "issued": self._issued, "awaits": self._awaits,
-                "in_flight": len(self._pending)}
+                "in_flight": len(self._pending),
+                "shape_buckets": sorted(self._shape_keys)}
 
 
 @contextlib.contextmanager

@@ -1,0 +1,315 @@
+"""Continuous batching + paged KV serving (DESIGN.md §13).
+
+Covers the PR's correctness contract end to end: host-side block
+accounting (allocator round-trip, table disjointness under out-of-order
+retirement), the flash-decode kernel against its dense-gather oracle
+({fp32,bf16} x GQA configs, fixed anchors + hypothesis), pad-row
+zero-mass / zero-block invariants, preemption-by-eviction resume, and the
+headline bit-identical greedy parity between the paged engine and the
+wave engine — plus the batch-shape-bucket executable-cache warmth that
+makes admission-driven shape changes re-jit-free.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.configs import get_config
+from repro.core.communicator import comm_destroy_all
+from repro.kernels import ops, ref
+from repro.models import init_params, single_device_ctx
+from repro.runtime.program import StepProgram
+from repro.serving.engine import (PagedServeConfig, PagedServeEngine,
+                                  ServeConfig, ServeEngine)
+from repro.serving.paged_kv import BlockAllocator, NoFreeBlocks, PagedKVCache
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh():
+    comm_destroy_all()
+    yield
+    comm_destroy_all()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("glm4-9b").reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+# ---------------------------------------------------------------------------
+# host-side block accounting
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_roundtrip_and_lifo_reuse():
+    a = BlockAllocator(4)
+    got = [a.alloc() for _ in range(4)]
+    assert sorted(got) == [0, 1, 2, 3]
+    with pytest.raises(NoFreeBlocks):
+        a.alloc()
+    a.free(got[2])
+    assert a.alloc() == got[2]          # most recently freed reused next
+    rep = a.report()
+    assert rep["allocs"] == 5 and rep["frees"] == 1
+    assert rep["peak_in_use"] == 4 and rep["in_use"] == 4
+
+
+def test_block_allocator_rejects_double_free():
+    a = BlockAllocator(2)
+    b = a.alloc()
+    a.free(b)
+    with pytest.raises(AssertionError):
+        a.free(b)
+
+
+def test_block_tables_disjoint_under_out_of_order_retirement():
+    kv = PagedKVCache(8, 4, 4, 4)       # 8 blocks of 4 tokens, 4 rows
+
+    def assert_disjoint():
+        owned = [kv.blocks_of(r) for r in range(4)]
+        flat = [b for blks in owned for b in blks]
+        assert len(flat) == len(set(flat)), f"shared blocks: {owned}"
+        assert all(0 <= b < 8 for b in flat)
+
+    kv.ensure(0, 7)                     # 2 blocks
+    kv.ensure(1, 5)                     # 2 blocks
+    kv.ensure(2, 9)                     # 3 blocks
+    assert_disjoint()
+    assert kv.tokens_capacity(2) == 12 and kv.free_tokens == 4
+    freed = kv.release(1)               # retire the MIDDLE row first
+    assert freed == 2 and kv.n_blocks_of(1) == 0
+    kv.ensure(3, 8)                     # reuses row 1's freed blocks
+    assert_disjoint()
+    # growing an existing row keeps its prefix blocks attached
+    before = kv.blocks_of(0)
+    kv.ensure(0, 8)
+    assert kv.blocks_of(0)[: len(before)] == before
+    with pytest.raises(NoFreeBlocks):
+        kv.ensure(0, 16)                # pool dry -> scheduler's signal
+    with pytest.raises(ValueError):
+        kv.ensure(2, 17)                # over the per-request cap
+
+
+# ---------------------------------------------------------------------------
+# flash-decode kernel vs dense block-gather oracle
+# ---------------------------------------------------------------------------
+
+def _paged_case(seed, t_rows, hq, hkv, hd, nb, bs, maxb, dtype,
+                n_pads=1):
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(k1, (t_rows, hq, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(k2, (nb, bs, hkv, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(k3, (nb, bs, hkv, hd), jnp.float32).astype(dtype)
+    tables = jax.random.randint(k4, (t_rows, maxb), 0, nb, jnp.int32)
+    kv_valid = jax.random.randint(k5, (t_rows,), 1, maxb * bs + 1,
+                                  jnp.int32)
+    if n_pads:                          # bucket-padding rows: no KV at all
+        kv_valid = kv_valid.at[-n_pads:].set(0)
+    return q, kp, vp, tables, kv_valid
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5),
+                                        (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (4, 4), (4, 1)])
+def test_paged_flash_decode_matches_ref(dtype, atol, hq, hkv):
+    q, kp, vp, tables, kv_valid = _paged_case(
+        0, 6, hq, hkv, 64, nb=10, bs=8, maxb=3, dtype=dtype)
+    got = ops.paged_flash_decode(q, kp, vp, tables, kv_valid)
+    want = ref.paged_flash_decode_ref(q, kp, vp, tables, kv_valid)
+    assert got.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), atol=atol)
+
+
+def test_paged_flash_decode_sliding_window_matches_ref():
+    q, kp, vp, tables, kv_valid = _paged_case(
+        1, 5, 4, 2, 64, nb=12, bs=8, maxb=4, dtype=jnp.float32)
+    got = ops.paged_flash_decode(q, kp, vp, tables, kv_valid, window=8)
+    want = ref.paged_flash_decode_ref(q, kp, vp, tables, kv_valid,
+                                      window=8)
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), atol=3e-5)
+    # the window actually bites: full-context answer differs
+    full = ref.paged_flash_decode_ref(q, kp, vp, tables, kv_valid)
+    assert not np.allclose(np.asarray(want), np.asarray(full))
+
+
+def test_pad_rows_contribute_exactly_zero():
+    """Bucket-padding rows (kv_valid == 0) must emit EXACT zeros — the
+    packed layout's 'pads cost zero attention mass' invariant, in both the
+    kernel and the oracle."""
+    q, kp, vp, tables, kv_valid = _paged_case(
+        2, 6, 4, 2, 64, nb=10, bs=8, maxb=3, dtype=jnp.float32, n_pads=3)
+    for fn in (ops.paged_flash_decode, ref.paged_flash_decode_ref):
+        out = np.asarray(fn(q, kp, vp, tables, kv_valid))
+        assert np.all(out[-3:] == 0.0), fn
+        assert np.all(np.isfinite(out))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), t_rows=st.integers(1, 7),
+       hkv=st.sampled_from([1, 2, 4]), bs=st.sampled_from([4, 8]),
+       maxb=st.integers(1, 4),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_property_paged_flash_decode(seed, t_rows, hkv, bs, maxb, dtype):
+    q, kp, vp, tables, kv_valid = _paged_case(
+        seed, t_rows, 4, hkv, 64, nb=max(6, maxb + 2), bs=bs, maxb=maxb,
+        dtype=dtype, n_pads=seed % t_rows if t_rows > 1 else 0)
+    got = ops.paged_flash_decode(q, kp, vp, tables, kv_valid)
+    want = ref.paged_flash_decode_ref(q, kp, vp, tables, kv_valid)
+    atol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# engine parity — THE correctness contract
+# ---------------------------------------------------------------------------
+
+def _prompts(sizes, vocab=500, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=s).tolist() for s in sizes]
+
+
+def test_paged_matches_wave_greedy_bit_identical(setup):
+    """Same admitted set -> bit-identical greedy streams: the paged
+    engine's packed prefill + block-gather attention reproduces the wave
+    engine token for token, while its bucket ladder keeps every
+    admission-driven shape change an exec-cache hit (one rebuild per
+    bucket, never a re-jit)."""
+    cfg, params = setup
+    prompts = _prompts([5, 3, 9, 2, 7, 12])
+    wave = ServeEngine(params, cfg, single_device_ctx(),
+                       ServeConfig(slots=4, cache_len=96))
+    for p in prompts:
+        wave.submit(p, max_new=6)
+    wave.run_until_drained()
+    fw = wave.finished()
+    wave.close()
+
+    paged = PagedServeEngine(params, cfg, single_device_ctx(),
+                             PagedServeConfig(max_requests=4, cache_len=96,
+                                              kv_block=16,
+                                              max_tokens_in_flight=16,
+                                              min_bucket=4))
+    for p in prompts:
+        paged.submit(p, max_new=6)
+    paged.run_until_drained()
+    fp = paged.finished()
+    rep = paged.serving_report()
+    paged.close()
+
+    assert fw == fp
+    assert all(len(v) == 6 for v in fp.values())
+    # batch-bucket exec-cache warmth: one rebuild per distinct bucket
+    bc = rep["batch_bucket_cache"]
+    assert bc["rebuilds"] == len(rep["buckets"])
+    assert bc["hits"] > 0
+    # packed prefill spends no KV on padding and balances its books
+    kv = rep["kv_blocks"]
+    assert kv["allocs"] == kv["frees"] and kv["in_use"] == 0
+
+
+def test_preemption_resume_streams_unchanged(setup):
+    """A block-starved pool forces preempt-by-eviction; teacher-forced
+    re-prefill of prompt+out must resume every victim bit-identically, so
+    the starved run's streams equal the uncontended run's."""
+    cfg, params = setup
+    prompts = _prompts([20, 18, 16, 22], seed=4)
+
+    def run(n_blocks):
+        eng = PagedServeEngine(params, cfg, single_device_ctx(),
+                               PagedServeConfig(max_requests=4,
+                                                cache_len=48, kv_block=8,
+                                                n_blocks=n_blocks,
+                                                max_tokens_in_flight=16,
+                                                min_bucket=4))
+        for p in prompts:
+            eng.submit(p, max_new=12)
+        eng.run_until_drained()
+        fin, rep = eng.finished(), eng.serving_report()
+        eng.close()
+        return fin, rep
+
+    fin_starved, rep_starved = run(n_blocks=9)   # < 4 requests' worth
+    fin_ample, rep_ample = run(n_blocks=0)       # auto: no pressure
+    assert rep_starved["scheduler"]["preemptions"] > 0
+    assert rep_ample["scheduler"]["preemptions"] == 0
+    assert fin_starved == fin_ample
+
+
+def test_wave_coadmission_keeps_short_stream_unchanged(setup):
+    """Wave right-alignment regression: a longer prompt co-admitted into
+    the wave pads the short one's prefill, and those pad positions must
+    carry zero attention mass — the short request's greedy stream cannot
+    move."""
+    cfg, params = setup
+    short = _prompts([4], seed=5)[0]
+    long = _prompts([11], seed=6)[0]
+
+    def run(prompts):
+        eng = ServeEngine(params, cfg, single_device_ctx(),
+                          ServeConfig(slots=2, cache_len=48))
+        rids = [eng.submit(p, max_new=6) for p in prompts]
+        eng.run_until_drained()
+        fin = eng.finished()
+        eng.close()
+        return [fin[r] for r in rids]
+
+    alone = run([short])[0]
+    together = run([short, long])[0]
+    assert alone == together
+
+
+def test_unallocated_pool_blocks_stay_zero(setup):
+    """Pad rows and unadmitted capacity write NOTHING: pool blocks the
+    allocator never handed out (it hands out ascending ids, so everything
+    above peak_in_use is virgin) must still be exactly zero after a full
+    serve."""
+    cfg, params = setup
+    eng = PagedServeEngine(params, cfg, single_device_ctx(),
+                           PagedServeConfig(max_requests=2, cache_len=64,
+                                            kv_block=8,
+                                            max_tokens_in_flight=8,
+                                            min_bucket=4))
+    for p in _prompts([6, 9], seed=7):
+        eng.submit(p, max_new=4)
+    eng.run_until_drained()
+    peak = eng.kv.report()["peak_in_use"]
+    pool = eng.pool
+    eng.close()
+    assert 0 < peak < eng.pcfg.n_blocks
+    for leaf in (pool["k"], pool["v"]):
+        assert np.all(np.asarray(leaf[:, peak:]) == 0.0)
+        assert np.any(np.asarray(leaf[:, :peak]) != 0.0)
+
+
+# ---------------------------------------------------------------------------
+# StepProgram batch-shape buckets
+# ---------------------------------------------------------------------------
+
+def test_step_program_shape_key_buckets():
+    """Each shape_key keys its OWN executable: a revisited bucket is a
+    cache hit, a new bucket a rebuild — and the report lists the buckets
+    seen (the serve launcher's --assert-warm denominator)."""
+    ctx = single_device_ctx()
+    builds = []
+
+    def builder():
+        builds.append(1)
+        return jax.jit(lambda x: x + 1.0)
+
+    prog = StepProgram(builder, ctx)
+    prog(jnp.zeros(4), shape_key=4)
+    prog(jnp.zeros(8), shape_key=8)
+    prog(jnp.zeros(4), shape_key=4)     # revisit: hit, no rebuild
+    rep = prog.report()
+    prog.close()
+    assert len(builds) == 2
+    assert rep["shape_buckets"] == [4, 8]
+    assert rep["executable_cache"]["rebuilds"] == 2
+    assert rep["executable_cache"]["hits"] == 1
