@@ -6,11 +6,11 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (compressed_path, degraded_rail, fig2_improvement,
-                        fig5_runtime, future_tree_allreduce,
-                        hierarchy_crossover, overlap_step, serving_load,
-                        table1_idle_bw, table2_bandwidth, roofline_report,
-                        perf_hillclimb)
+from benchmarks import (compressed_path, degraded_rail, fault_recovery,
+                        fig2_improvement, fig5_runtime,
+                        future_tree_allreduce, hierarchy_crossover,
+                        overlap_step, serving_load, table1_idle_bw,
+                        table2_bandwidth, roofline_report, perf_hillclimb)
 
 
 def main() -> None:
@@ -24,6 +24,7 @@ def main() -> None:
         ("future_tree_allreduce", future_tree_allreduce.run),
         ("hierarchy_crossover", hierarchy_crossover.run),
         ("degraded_rail", degraded_rail.run),
+        ("fault_recovery", fault_recovery.run),
         ("overlap_step", overlap_step.run),
         ("compressed_path", compressed_path.run),
         ("serving_load", serving_load.run),

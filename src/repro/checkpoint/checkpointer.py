@@ -124,3 +124,16 @@ class Checkpointer:
         if opt_template is not None:
             opt = _unflatten_into(opt_template, flat, "opt" + _SEP)
         return params, opt, meta
+
+    def restore_latest(self, params_template, opt_template=None
+                       ) -> Tuple[Any, Any, Dict, int]:
+        """Restore the newest snapshot — the elastic-resume entry point
+        (repro.faults): same as :meth:`restore` with ``step=None``, but
+        also returns the restored step so callers rewind their counter
+        without a second directory scan."""
+        step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        params, opt, meta = self.restore(params_template, opt_template,
+                                         step)
+        return params, opt, meta, int(meta.get("step", step))

@@ -229,6 +229,27 @@ def degrade_cluster(cluster: ClusterTopology, spec: str) -> ClusterTopology:
                                node=node)
 
 
+def drop_node(cluster: ClusterTopology, node_index: int) -> ClusterTopology:
+    """The post-loss topology after an elastic ``node<i>@step=down`` event
+    (repro.faults, DESIGN.md §14): the same homogeneous fabric with one
+    fewer node.  The tier PROFILES are untouched — ``nic_tier_name`` is a
+    pure function of the node type and NIC parameters, not the node count
+    — so TuningProfile entries and communicator memo keys of the
+    surviving fabric line up with a fresh launch at N-1 nodes, which is
+    exactly the bit-identity contract elastic resume is tested against.
+    Only the topology NAME records the loss."""
+    if not 0 <= node_index < cluster.n_nodes:
+        raise ValueError(
+            f"node index {node_index} out of range for "
+            f"{cluster.name!r} (n_nodes={cluster.n_nodes})")
+    if cluster.n_nodes < 2:
+        raise ValueError(
+            f"cannot drop a node from single-node cluster {cluster.name!r}")
+    return dataclasses.replace(cluster,
+                               name=f"{cluster.name}-drop{node_index}",
+                               n_nodes=cluster.n_nodes - 1)
+
+
 def cluster_for(profile: str, n_nodes: int) -> ClusterTopology:
     """Default cluster for one intra-node profile — what the launchers
     synthesize for ``--nodes N`` when no named cluster is given.  GPU

@@ -73,26 +73,84 @@ def resolve_cluster(cluster_name: str, nodes: int):
 
 
 def resolve_degrade(cluster, nodes: int, profile: str, spec: str):
-    """Shared launcher logic for ``--degrade``: apply one
-    ``name[:member]=factor`` fault and return ``(cluster, profile)``.
+    """``--degrade`` resolution: sugar for a step-0 fault schedule, routed
+    through the one shared parser (:func:`resolve_faults`) so train,
+    serve and dryrun agree on what a fault spec means.  Returns
+    ``(cluster, profile)``."""
+    cluster, profile, timeline = resolve_faults(cluster, nodes, profile,
+                                                degrade=spec)
+    assert timeline is None     # step-0 degrades always fold statically
+    return cluster, profile
 
-    With a cluster in play (given, or implied by a multi-node run — in
-    which case the one ``ParallelCtx`` would synthesize is materialized
-    first, so the fault lands on the actual NIC tier of the run) the
-    fault resolves against its tiers via ``degrade_cluster``; otherwise
-    it degrades the flat node profile.  Either way the degraded fabric
-    carries a deterministic ``!``-suffixed name, so communicator memo
-    keys and TuningProfile entries never collide with the healthy ones
-    (DESIGN.md §10).  One definition for every launcher: train, serve
-    and dryrun must agree on what a fault spec means.
+
+def resolve_faults(cluster, nodes: int, profile: str, *,
+                   degrade: str = "", fault: str = ""):
+    """Shared launcher logic for ``--degrade``/``--fault``: returns
+    ``(cluster, profile, timeline)`` where ``timeline`` is the
+    :class:`~repro.faults.HealthTimeline` of the DYNAMIC events (None
+    when the schedule has none).
+
+    * ``--degrade x=f`` parses through the same DSL as ``--fault`` — it
+      IS ``--fault x@step0=f`` — but may only contain step-0 degrade
+      events (it froze health at launch; anything time-varying belongs
+      on ``--fault``).
+    * Step-0 degrade events fold STATICALLY, exactly as ``--degrade``
+      always did: with a cluster in play (given, or implied by a
+      multi-node run — the one ``ParallelCtx`` would synthesize is
+      materialized first so the fault lands on the run's actual NIC
+      tier) they resolve via ``degrade_cluster``, else they degrade the
+      flat node profile, either way yielding a deterministic
+      ``!``-suffixed fabric name (DESIGN.md §10).  This keeps degraded
+      *launches* — Stage-1 tuned against the faulted fabric from step 0
+      — byte-identical to the pre-timeline behavior.
+    * Step>0 events (and node losses) become the timeline; every target
+      is resolved against the run's tiers HERE, at parse time, so a
+      schedule cannot fail hundreds of steps into a run.  Dynamic
+      factors are set-points relative to the LAUNCH fabric, so a target
+      may not appear both statically and dynamically (restoring "to
+      1.0" would be ambiguous — reject rather than guess).
     """
-    if not spec:
-        return cluster, profile
+    from repro.faults.schedule import (HealthTimeline, parse_fault_schedule,
+                                       validate_schedule)
+    events = []
+    for ev in parse_fault_schedule(degrade):
+        if ev.kind == "node" or ev.step > 0:
+            raise ValueError(
+                f"--degrade is launch-time only: {ev.spec!r} is a "
+                f"dynamic event — schedule it with --fault")
+        events.append(ev)
+    events.extend(parse_fault_schedule(fault))
+    if not events:
+        return cluster, profile, None
     from repro.cluster.topology import cluster_for, degrade_cluster
     from repro.core.links import PROFILES, degrade_profile
     if cluster is None and nodes > 1:
         cluster = cluster_for(profile, nodes)
-    if cluster is not None:
-        cluster = degrade_cluster(cluster, spec)
-        return cluster, cluster.node.name
-    return None, degrade_profile(PROFILES[profile], spec).name
+    tiers = ([cluster.nic_tier, cluster.node] if cluster is not None
+             else [PROFILES[profile]])
+    n_nodes = cluster.n_nodes if cluster is not None else max(nodes, 1)
+    canonical = validate_schedule(events, profiles=tiers, n_nodes=n_nodes)
+    static = [ev for ev, can in zip(events, canonical)
+              if can.kind == "degrade" and can.step == 0]
+    dynamic = [can for can in canonical
+               if can.kind == "node" or can.step > 0]
+    static_targets = {(c.target, c.member) for c in canonical
+                      if c.kind == "degrade" and c.step == 0}
+    clash = [d for d in dynamic if d.kind == "degrade"
+             and (d.target, d.member) in static_targets]
+    if clash:
+        raise ValueError(
+            f"fault target(s) {sorted(c.spec for c in clash)} also "
+            f"degraded at launch: dynamic factors are set-points "
+            f"relative to the launch fabric, so restoring such a target "
+            f"is ambiguous — start its schedule at step >= 1 instead")
+    # static fold — applied with the ORIGINAL spelling so degraded-launch
+    # fabric names stay exactly historical
+    for ev in static:
+        if cluster is not None:
+            cluster = degrade_cluster(cluster, ev.degrade_spec)
+            profile = cluster.node.name
+        else:
+            profile = degrade_profile(PROFILES[profile],
+                                      ev.degrade_spec).name
+    return cluster, profile, (HealthTimeline(dynamic) if dynamic else None)

@@ -23,16 +23,21 @@ own layer:
 
 from repro.control.profile import TuningProfile
 from repro.control.slots import MEMBER_BASE, PROBE_PERIOD, SlotController
-from repro.control.timing import (DegradedTimingSource, MeasuredTimingSource,
-                                  SimTimingSource, TimingSource)
+from repro.control.timing import (DegradedTimingSource, EventRecorder,
+                                  MeasuredTimingSource, SimEventRecorder,
+                                  SimTimingSource, TimingSource,
+                                  attach_event_recorder)
 
 __all__ = [
     "DegradedTimingSource",
+    "EventRecorder",
     "MEMBER_BASE",
     "MeasuredTimingSource",
     "PROBE_PERIOD",
+    "SimEventRecorder",
     "SimTimingSource",
     "SlotController",
     "TimingSource",
     "TuningProfile",
+    "attach_event_recorder",
 ]

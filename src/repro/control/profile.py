@@ -37,6 +37,26 @@ def _key(profile: str, algo: str, op: Collective | str, n_ranks: int,
             int(grid))
 
 
+def _split_degraded_name(name: str) -> Tuple[str, Optional[Dict[str, float]]]:
+    """Parse a (possibly chained) degraded fabric name —
+    ``base!t1=f1!t2=f2`` per ``links.degraded_profile_name`` — into
+    ``(base, {target: factor})``.  A healthy name yields ``(name, {})``;
+    a ``!``-segment that does not parse as ``target=float`` yields
+    ``(base-so-far, None)`` so :meth:`TuningProfile.nearest` never
+    matches on a name it cannot interpret."""
+    parts = name.split("!")
+    factors: Dict[str, float] = {}
+    for seg in parts[1:]:
+        target, sep, factor = seg.partition("=")
+        if not sep or not target:
+            return parts[0], None
+        try:
+            factors[target] = float(factor)
+        except ValueError:
+            return parts[0], None
+    return parts[0], factors
+
+
 class TuningProfile:
     """In-memory view of one warm-start cache file."""
 
@@ -116,6 +136,49 @@ class TuningProfile:
             return {str(link): str(name) for link, name in codecs.items()}
         except (AttributeError, TypeError, ValueError):
             return None
+
+    def nearest(self, profile: str, algo: str, op: Collective, n_ranks: int,
+                bucket: int, grid: int) -> Optional[str]:
+        """The profile NAME of the best warm-start entry for one slot on
+        ``profile`` — the fault engine's re-convergence anchor (DESIGN.md
+        §14).  Preference order:
+
+        1. an exact entry for ``profile`` itself (a previously-seen
+           degraded fabric: zero-iteration warm start, the §10 contract);
+        2. an entry for the same base fabric degraded on the SAME target
+           set, minimizing total |factor| distance — e.g. a transition to
+           ``h800:nic4x400!rail3=0.25`` adopts a saved
+           ``...!rail3=0.5`` entry over the healthy one, because its
+           drain structure already matches;
+        3. the healthy base entry — better than cold, worse than (2);
+        4. None: nothing saved for this slot at all (the caller carries
+           the live shares forward instead).
+
+        Returns the name to pass to lookup/lookup_members/lookup_codecs,
+        NOT the shares — callers need the member/codec companions too.
+        """
+        if self.lookup(profile, algo, op, n_ranks, bucket, grid) is not None:
+            return profile
+        base, want = _split_degraded_name(profile)
+        best: Optional[Tuple[float, str]] = None
+        for key in self._entries:
+            if key[1:] != _key(profile, algo, op, n_ranks, bucket,
+                               grid)[1:]:
+                continue
+            cand_base, cand = _split_degraded_name(key[0])
+            if cand_base != base or cand is None or want is None:
+                continue
+            if set(cand) != set(want):
+                continue
+            dist = sum(abs(cand[t] - want[t]) for t in want)
+            if best is None or dist < best[0]:
+                best = (dist, key[0])
+        if best is not None:
+            return best[1]
+        if base != profile and self.lookup(base, algo, op, n_ranks, bucket,
+                                           grid) is not None:
+            return base
+        return None
 
     def record(self, profile: str, algo: str, op: Collective, n_ranks: int,
                bucket: int, grid: int, shares: Mapping[str, int], *,

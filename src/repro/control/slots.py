@@ -117,6 +117,12 @@ class SlotController:
     #: by a TuningProfile warm start: the codec choice is part of the slot's
     #: tuned identity, exactly like the shares it was tuned against.
     codecs: Dict[str, str] = dataclasses.field(default_factory=dict)
+    #: where this slot's shares came from when a fault transition rebuilt
+    #: it (repro.faults, DESIGN.md §14): ``"transition:exact"`` (saved
+    #: entry for the new fabric), ``"transition:<profile>"`` (nearest
+    #: degraded neighbor), ``"transition:carry"`` (live shares carried
+    #: forward).  Empty for slots born at launch.
+    origin: str = ""
     #: per-link intra-class balancers over member weights — the machinery
     #: that drains ONE degraded instance while its siblings (and the
     #: class-level share vector) hold (DESIGN.md §10).
@@ -416,6 +422,8 @@ class SlotController:
         out: Dict[str, object] = {
             "warm": self.warm, "stage1_iters": self.tuned.iterations,
             "converged": self.tuned.converged}
+        if self.origin:
+            out["origin"] = self.origin
         if self.codecs:
             out["codecs"] = dict(self.codecs)
         if self.member_balancers:

@@ -151,11 +151,18 @@ class MeasuredTimingSource(TimingSource):
 
     kind = "measured"
 
-    def __init__(self, model: PathTimingModel, ewma: float = RATE_EWMA):
+    def __init__(self, model: PathTimingModel, ewma: float = RATE_EWMA,
+                 event_recorder: Optional["EventRecorder"] = None):
         super().__init__(model)
         self.ewma = ewma
         self._slots: Dict[Tuple[Collective, int], _SlotRates] = {}
         self.steps_ingested = 0
+        #: injected per-path event recorder (CUDA-event / TPU-trace shaped;
+        #: see :class:`EventRecorder`).  When present, per-call per-path
+        #: completion times come from hardware events and the scalar
+        #: finite-difference rule below is bypassed entirely.
+        self.events = event_recorder
+        self.event_updates = 0
 
     # -- rate bookkeeping ----------------------------------------------------
 
@@ -202,7 +209,11 @@ class MeasuredTimingSource(TimingSource):
 
     def ingest_step(self, calls: Sequence[StepCall],
                     elapsed_s: Optional[float]) -> None:
-        if elapsed_s is None or elapsed_s <= 0.0 or not calls:
+        if not calls:
+            return
+        if self.events is not None and self._ingest_events(calls):
+            return
+        if elapsed_s is None or elapsed_s <= 0.0:
             return
         self.steps_ingested += 1
         # estimated per-call completion times → apportionment weights
@@ -230,6 +241,36 @@ class MeasuredTimingSource(TimingSource):
                 self._finite_difference(st, fr_now, t_now)
             st.last_fractions, st.last_call_s = fr_now, t_now
 
+    def _ingest_events(self, calls: Sequence[StepCall]) -> bool:
+        """Fold one step's per-path event timings (ROADMAP's per-path
+        event timing item).  Each recorded row gives a path's OWN
+        completion time directly, so rates update exactly —
+        ``r_p = t_p / f_p`` — with no apportionment, no simulator
+        bootstrap for event-covered paths, and no drained-path
+        attribution guess.  Returns False (fall back to the scalar rule)
+        when the recorder produced nothing usable for this step —
+        hardware event buffers can drop under load."""
+        rows = self.events.record_step(calls)
+        if rows is None or len(rows) != len(calls):
+            return False
+        self.steps_ingested += 1
+        for (op, _n, bucket, _b, fractions), row in zip(calls, rows):
+            st = self._slot(op, bucket)
+            t_max = 0.0
+            for path, f in fractions.items():
+                if f <= 0.0 or path not in row:
+                    continue
+                r_obs = max(float(row[path]), 0.0) / f
+                prev = st.rates.get(path)
+                st.rates[path] = (r_obs if prev is None else
+                                  (1.0 - self.ewma) * prev
+                                  + self.ewma * r_obs)
+                st.updates += 1
+                self.event_updates += 1
+                t_max = max(t_max, float(row[path]))
+            st.last_fractions, st.last_call_s = dict(fractions), t_max
+        return True
+
     def _finite_difference(self, st: _SlotRates, fr_now: Dict[str, float],
                            t_now: float) -> None:
         """Attribute the step-time delta to the drained path (see module
@@ -249,6 +290,8 @@ class MeasuredTimingSource(TimingSource):
         return {
             "kind": self.kind,
             "steps_ingested": self.steps_ingested,
+            "event_recorder": self.events is not None,
+            "event_updates": self.event_updates,
             "slots": {
                 f"{op.value}@{bucket}": {
                     "rates_s_per_share": {p: float(r)
@@ -320,3 +363,59 @@ class DegradedTimingSource(TimingSource):
     def report(self) -> Dict[str, object]:
         return {"kind": self.kind, "degraded_overlay": True,
                 "wraps": self.inner.report()}
+
+
+class EventRecorder:
+    """Per-path event timing interface (ROADMAP: per-path event timing).
+
+    On hardware this is a ring of CUDA events (or a TPU trace window)
+    bracketing each path's chunk stream, drained once per step.  The
+    contract is deliberately minimal so either backend fits behind it:
+    ``record_step`` takes the step's replay multiset and returns one
+    mapping per call — ``path -> seconds``, that path's OWN completion
+    time — or None when the step produced no usable events (dropped
+    buffer, disabled tracing), in which case MeasuredTimingSource falls
+    back to its scalar finite-difference rule for that step.
+    """
+
+    def record_step(self, calls: Sequence[StepCall]) \
+            -> Optional[List[Mapping[str, float]]]:
+        raise NotImplementedError
+
+
+class SimEventRecorder(EventRecorder):
+    """Event recorder backed by the analytic simulator — the test double
+    the fault suite injects.  Rows come from ``PathTimingModel.measure``
+    at each call's true payload and fractions, i.e. exactly the per-path
+    times a hardware event ring would report on the modeled fabric."""
+
+    def __init__(self, model: PathTimingModel):
+        self.model = model
+        self.steps_recorded = 0
+
+    def record_step(self, calls: Sequence[StepCall]) \
+            -> Optional[List[Mapping[str, float]]]:
+        rows: List[Mapping[str, float]] = []
+        for op, n_ranks, _bucket, nbytes, fractions in calls:
+            t = self.model.measure(op, n_ranks, nbytes, fractions)
+            rows.append({p: t[p] for p, f in fractions.items()
+                         if f > 0.0 and p in t})
+        self.steps_recorded += 1
+        return rows
+
+
+def attach_event_recorder(timing: TimingSource,
+                          recorder: EventRecorder) -> bool:
+    """Attach ``recorder`` to the MeasuredTimingSource inside ``timing``
+    (unwrapping any DegradedTimingSource overlay).  Returns False when
+    the chain bottoms out on a source that cannot consume events (the
+    simulator source IS its own oracle) — callers treat that as
+    "recorder ignored", not an error, so launchers can request event
+    timing unconditionally."""
+    src = timing
+    while isinstance(src, DegradedTimingSource):
+        src = src.inner
+    if isinstance(src, MeasuredTimingSource):
+        src.events = recorder
+        return True
+    return False

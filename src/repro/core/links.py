@@ -502,11 +502,17 @@ def parse_degrade(spec: str) -> Tuple[str, Optional[str], float]:
         raise ValueError(
             f"degrade spec {spec!r} must be name[:member]=factor")
     lhs, _, rhs = spec.partition("=")
-    try:
-        factor = float(rhs)
-    except ValueError:
-        raise ValueError(
-            f"degrade spec {spec!r}: factor {rhs!r} is not a number")
+    if rhs.strip() == "down":
+        # full-link (or full-member) loss: health 0 — the factor spelling
+        # the fault-schedule DSL shares with --degrade (repro.faults)
+        factor = 0.0
+    else:
+        try:
+            factor = float(rhs)
+        except ValueError:
+            raise ValueError(
+                f"degrade spec {spec!r}: factor {rhs!r} is neither a "
+                f"number nor 'down'")
     if factor < 0.0:
         raise ValueError(f"degrade spec {spec!r}: factor must be >= 0")
     lhs = lhs.strip()
@@ -518,6 +524,36 @@ def parse_degrade(spec: str) -> Tuple[str, Optional[str], float]:
             raise ValueError(f"degrade spec {spec!r}: bad link:member")
         return link, member, factor
     return lhs, None, factor
+
+
+def resolve_degrade_target(profile: NodeProfile, target: str,
+                           member: Optional[str]
+                           ) -> Optional[Tuple[str, Optional[str]]]:
+    """Resolve a parsed degrade/fault target against ONE profile.
+
+    Returns the canonical ``(link, member)`` pair — the same resolution
+    order :func:`degrade_profile` applies (link name first, then unique
+    member name) — or None when this profile does not own the target, so
+    multi-tier callers (a cluster's NIC tier + node profile) can try the
+    next tier.  An ambiguous bare member name still raises ValueError via
+    ``link_of_member``: silence there would pick a tier arbitrarily.
+    """
+    link_names = {l.name for l in profile.links}
+    if member is not None:
+        if target not in link_names:
+            return None
+        try:
+            profile.link(target).member(member)
+        except KeyError:
+            return None
+        return target, member
+    if target in link_names:
+        return target, None
+    try:
+        owner = profile.link_of_member(target)
+    except KeyError:
+        return None
+    return owner.name, target
 
 
 def degraded_profile_name(base: str, link: str, member: Optional[str],

@@ -1,0 +1,29 @@
+"""repro.faults — live fabric dynamics (DESIGN.md §14).
+
+Link/member health as a *time-varying* input to the whole stack: a
+fault-schedule DSL (schedule.py), a hysteresis-gated clock that applies
+committed transitions to the live communicators (clock.py), and the
+elastic node-loss resume protocol (elastic.py).  Fault-free runs never
+construct any of this — the parity contract of every PR since the
+member fabric (§10) holds: no ``--fault`` ⇒ byte-identical plans,
+Stage-1 trajectories and tuning caches.
+"""
+
+from repro.faults.clock import FabricClock, HYSTERESIS_K
+from repro.faults.elastic import make_train_resume, restore_templates
+from repro.faults.schedule import (FabricState, FaultEvent, HealthTimeline,
+                                   parse_fault_item, parse_fault_schedule,
+                                   validate_schedule)
+
+__all__ = [
+    "FabricClock",
+    "FabricState",
+    "FaultEvent",
+    "HYSTERESIS_K",
+    "HealthTimeline",
+    "make_train_resume",
+    "parse_fault_item",
+    "parse_fault_schedule",
+    "restore_templates",
+    "validate_schedule",
+]

@@ -1,0 +1,96 @@
+"""Elastic node loss — rebuild the cluster minus a node, resume from the
+latest checkpoint (DESIGN.md §14).
+
+A ``node<i>@stepN=down`` event commits through the FabricClock like any
+other transition, but its application is the training loop's job, not a
+communicator profile swap: the world the program was jitted for no
+longer exists.  The handler built here
+
+1. drops the node from the :class:`ClusterTopology` (same node profile,
+   same NIC-tier profile name — ``nic_tier_name`` depends only on the
+   node type and NIC parameters, so TuningProfile keys for the surviving
+   fabric line up and the rebuilt plans warm-start);
+2. rebuilds the mesh and StepProgram at the post-drop shape (a 2→1 drop
+   collapses to a flat single-node mesh with no cluster tier);
+3. restores params/optimizer state from the latest Checkpointer
+   snapshot and restarts the data stream from its origin — exactly what
+   a fresh launch at the post-drop topology would do, which is the
+   bit-identity contract the elastic test pins down.
+
+The handler returns ``(program, ctx, params, opt_state, batches,
+resume_step)`` — the tuple ``run_loop`` swaps in mid-flight.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.cluster.topology import ClusterTopology, drop_node
+
+
+def restore_templates(cfg, opt_state_wrap: Optional[Callable] = None):
+    """Fresh (params, opt_state) trees with the launch-time structure —
+    the shape/dtype templates Checkpointer.restore fills in.
+    ``opt_state_wrap`` re-applies any launcher-side wrapping (the
+    error-feedback residual tuple of DESIGN.md §12)."""
+    from repro.models.transformer import init_params
+    from repro.optim.adamw import init_state
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = init_state(params)
+    if opt_state_wrap is not None:
+        opt_state = opt_state_wrap(params, opt_state)
+    return params, opt_state
+
+
+def make_train_resume(cfg, *, opt, shape, comm_config,
+                      cluster: ClusterTopology, dp: int, tp: int,
+                      ckpt_dir: str, batches_fn: Callable,
+                      bucket_mb: float = 0.0, remat: bool = True,
+                      name: str = "train", log: Callable = print):
+    """Build the ``run_loop`` ``on_node_loss`` handler for one training
+    launch.  ``batches_fn`` returns a FRESH batch iterator (stream
+    position 0 — the fresh-launch contract); ``dp``/``tp`` are the
+    per-node mesh dims that survive the drop."""
+    if not ckpt_dir:
+        raise ValueError(
+            "elastic node loss needs --ckpt-dir: resume is only defined "
+            "from a Checkpointer snapshot")
+
+    def handler(transition: Dict, step: int) -> Tuple:
+        from repro.launch.mesh import make_cluster_mesh, make_mesh
+        from repro.launch.steps import build_train_program
+        node = int(transition["node"])
+        survivors = drop_node(cluster, node)
+        ckpt = Checkpointer(ckpt_dir)
+        resume_step = ckpt.latest_step()
+        if resume_step is None:
+            raise RuntimeError(
+                f"node{node} lost at step {step} but {ckpt_dir!r} holds "
+                f"no snapshot — set --ckpt-every below the fault horizon")
+        if survivors.n_nodes > 1:
+            mesh = make_cluster_mesh(survivors.n_nodes, dp, tp)
+            new_cluster: Optional[ClusterTopology] = survivors
+        else:
+            # the cluster tier degenerates: one node is a flat mesh
+            mesh = make_mesh((dp, tp), ("data", "model"))
+            new_cluster = None
+        program, ctx = build_train_program(
+            cfg, mesh, comm=comm_config, opt=opt, shape=shape,
+            remat=remat, name=f"{name}-drop{node}", cluster=new_cluster,
+            bucket_mb=bucket_mb)
+        wrap = None
+        if bucket_mb > 0 and ctx.ef_codec_name():
+            from repro.train.train_step import ef_init_residuals
+            wrap = lambda p, o: (o, ef_init_residuals(p))  # noqa: E731
+        p_tmpl, o_tmpl = restore_templates(cfg, wrap)
+        params, opt_state, meta = ckpt.restore(p_tmpl, o_tmpl, resume_step)
+        log(f"elastic: node{node} down at step {step} -> resume "
+            f"{survivors.name} ({survivors.n_nodes} node(s)) from "
+            f"checkpoint step {resume_step}")
+        return (program, ctx, params, opt_state, batches_fn(),
+                int(meta.get("step", resume_step)))
+
+    return handler

@@ -64,7 +64,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             tuning_cache: str = "", secondary_algo: str = "ring",
             nodes: int = 1, cluster_name: str = "",
             degrade: str = "", bucket_mb: float = 0.0,
-            compress: str = "") -> dict:
+            compress: str = "", fault: str = "") -> dict:
     """mesh_split: optional (data, model) reshape of the 256-chip pod —
     the TP-degree tuning lever of EXPERIMENTS §Perf.  remat: True | False |
     "dots" (selective checkpointing).  tuning_cache: TuningProfile JSON —
@@ -83,10 +83,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     per-slot wire table below shows what each path actually ships."""
     cfg = get_config(arch)
     shape = SH.SHAPES[shape_name]
-    from repro.configs.clusters import resolve_cluster, resolve_degrade
+    from repro.configs.clusters import resolve_cluster, resolve_faults
     cluster, nodes = resolve_cluster(cluster_name, nodes)
-    cluster, intra_profile = resolve_degrade(
-        cluster, nodes, cluster.node.name if cluster else "tpu_v5e", degrade)
+    cluster, intra_profile, timeline = resolve_faults(
+        cluster, nodes, cluster.node.name if cluster else "tpu_v5e",
+        degrade=degrade, fault=fault)
     if nodes > 1:
         if multi_pod:
             raise ValueError("--nodes does not combine with the multi-pod "
@@ -114,7 +115,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                       runtime_balancing=False, tag="dryrun",
                       tuning_cache=tuning_cache,
                       secondary_algo=secondary_algo,
-                      compress=compress)
+                      compress=compress,
+                      fault=timeline.spec() if timeline else "")
     pods, dp, tp = mesh_dims(mesh)
     t0 = time.time()
 
@@ -166,6 +168,19 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         # main() catches per-pair exceptions
         if prog is not None:
             prog.close()
+
+    # fault-transition table (repro.faults, DESIGN.md §14): a dry-run
+    # never advances fabric time, so this is the STATIC projection —
+    # when each scheduled event fires and when it would commit under the
+    # FabricClock's hysteresis
+    fault_proj = []
+    if timeline is not None:
+        from repro.faults import FabricClock
+        fault_proj = FabricClock(timeline).projection()
+        for row in fault_proj:
+            print(f"  [fault] step {row['step']:>5d} {row['kind']:<7s} "
+                  f"{row['event']} (commits at step {row['commit_step']})",
+                  flush=True)
 
     # per-member share table (the observability satellite of DESIGN.md
     # §10): one row per multi-member link per tuned slot — on a degraded
@@ -288,6 +303,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "backend": backend, "chips": chips, "ok": True,
         "variant": variant, "remat": str(remat),
         "degrade": degrade,
+        **({"fault": fault, "faults": fault_proj} if fault else {}),
         **({"compress": compress} if compress else {}),
         "tuning": tuning_status,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
@@ -335,6 +351,13 @@ def main(argv=None) -> int:
                          "health; pcie=0.5 throttles the whole host "
                          "path).  The degraded fabric keys its own "
                          "TuningProfile entries")
+    ap.add_argument("--fault", default="",
+                    help="fault-timeline schedule (repro.faults, DESIGN.md "
+                         "§14), e.g. 'rail3@step200=0.25,node1@step400="
+                         "down'.  The dry-run validates the schedule "
+                         "against the run's fabric and prints the static "
+                         "fault-transition table (fire + hysteresis-"
+                         "commit steps); it never advances fabric time")
     ap.add_argument("--tuning-cache", default="",
                     help="TuningProfile JSON: warm-start Stage-1 and save "
                          "the converged shares back after lowering")
@@ -389,6 +412,12 @@ def main(argv=None) -> int:
             # result-cache file with the healthy run of the same layout
             safe = args.degrade.replace(":", "_").replace("=", "-")
             tag += f"__degrade-{safe}"
+        if args.fault:
+            # a fault schedule changes the record (transition table) and
+            # the comm memo key — its own result-cache file
+            safe = (args.fault.replace(":", "_").replace("=", "-")
+                    .replace("@", "~").replace(",", "+"))
+            tag += f"__fault-{safe}"
         if args.bucket_mb > 0:
             # a bucketed run lowers a different sync structure — its own
             # result-cache file
@@ -411,7 +440,7 @@ def main(argv=None) -> int:
                           secondary_algo=args.secondary_algo,
                           nodes=nodes, cluster_name=args.cluster,
                           degrade=args.degrade, bucket_mb=args.bucket_mb,
-                          compress=args.compress)
+                          compress=args.compress, fault=args.fault)
         except Exception as e:
             traceback.print_exc()
             rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,

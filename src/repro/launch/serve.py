@@ -89,6 +89,13 @@ def main(argv=None) -> int:
                     help="fault injection name[:member]=factor "
                          "(DESIGN.md §10); with --nodes it degrades the "
                          "cluster's NIC tier, else the node profile")
+    ap.add_argument("--fault", default="",
+                    help="fault-timeline schedule over serve TICKS "
+                         "(repro.faults, DESIGN.md §14), e.g. "
+                         "'rail3@step50=0.25': committed transitions swap "
+                         "the communicators' fabric mid-drain with warm "
+                         "Stage-2 re-convergence.  Node events are not "
+                         "supported here (serving has no elastic resume)")
     ap.add_argument("--nodes", type=int, default=1,
                     help="cluster node count: registers the NIC-tier "
                          "profile (so --tuning-cache keys line up with "
@@ -104,28 +111,39 @@ def main(argv=None) -> int:
 
     # single-device ctx, but with the comm config plumbed so a multi-axis
     # deployment of this launcher inherits the control-plane flags
-    from repro.configs.clusters import resolve_degrade
+    from repro.configs.clusters import resolve_faults
     profile = "tpu_v5e"
     cluster = None
     if args.nodes > 1:
         from repro.cluster.topology import cluster_for
         cluster = cluster_for(profile, args.nodes)
-    cluster, profile = resolve_degrade(cluster, args.nodes, profile,
-                                       args.degrade)
+    cluster, profile, timeline = resolve_faults(
+        cluster, args.nodes, profile,
+        degrade=args.degrade, fault=args.fault)
+    if timeline is not None and any(e.kind == "node"
+                                    for e in timeline.events):
+        raise SystemExit("--fault node events need the training loop's "
+                         "elastic resume; serving supports link/member "
+                         "schedules only")
     comm = CommConfig(
         profile=profile, timing=args.timing,
         secondary_algo=args.secondary_algo,
         tuning_cache=args.tuning_cache,
-        compress=args.compress)
+        compress=args.compress,
+        fault=timeline.spec() if timeline else "")
     ctx = ParallelCtx(comm_config=comm, cluster=cluster)
+    clock = None
+    if timeline is not None:
+        from repro.faults import FabricClock
+        clock = FabricClock(timeline).attach(ctx)
     if not ctx.comms() and (args.timing != "sim" or args.tuning_cache
                             or args.secondary_algo != "ring"
                             or args.nodes > 1 or args.degrade
-                            or args.compress):
+                            or args.compress or args.fault):
         print("note: single-device launch has no communicators — "
               "--timing/--tuning-cache/--secondary-algo/--nodes/--degrade/"
-              "--compress take effect only with parallel axes (the decode "
-              "wave itself never crosses the NIC tier; see "
+              "--fault/--compress take effect only with parallel axes (the "
+              "decode wave itself never crosses the NIC tier; see "
               "launch/shapes.py)")
     params = init_params(jax.random.PRNGKey(0), cfg)
     if args.paged == "on":
@@ -170,6 +188,11 @@ def main(argv=None) -> int:
               f"({bc['hits']} hits / {bc['rebuilds']} rebuilds)")
         print(f"serving: {srv['scheduler']['preemptions']} preemptions, "
               f"kv blocks peak {kv['peak_in_use']}/{kv['total']}")
+    if clock is not None:
+        fr = clock.report()
+        print(f"faults: {len(fr['transitions'])} transition(s), "
+              f"{fr['rekeys']} re-key(s), {fr['suppressed_flaps']} "
+              f"suppressed flap(s)")
     if args.tuning_cache:
         n = engine.save_tuning(args.tuning_cache)
         print(f"tuning profile: {n} slots -> {args.tuning_cache}")
@@ -181,7 +204,8 @@ def main(argv=None) -> int:
             json.dump({"arch": args.arch, "engine": srv["engine"],
                        "requests": len(fin), "tokens": total_toks,
                        "wall_s": round(dt, 3), "serving": srv,
-                       "executable_cache": ec, "program": pr},
+                       "executable_cache": ec, "program": pr,
+                       **({"faults": clock.report()} if clock else {})},
                       f, indent=2, default=str)
         print(f"serve record -> {args.out}")
     for rid in sorted(fin)[:4]:

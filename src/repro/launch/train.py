@@ -49,13 +49,32 @@ def main(argv=None) -> int:
                     help="named cluster topology from configs/clusters.py "
                          "(default: synthesized from the comm profile)")
     ap.add_argument("--degrade", default="",
-                    help="fault injection name[:member]=factor (e.g. "
-                         "rail3=0.25): scale one link member's effective "
-                         "bandwidth; Stage 2 drains exactly that member "
-                         "(DESIGN.md §10)")
+                    help="launch-time fault injection name[:member]=factor "
+                         "(e.g. rail3=0.25): scale one link member's "
+                         "effective bandwidth; Stage 2 drains exactly that "
+                         "member (DESIGN.md §10).  Sugar for a step-0 "
+                         "--fault event — both run through one parser")
+    ap.add_argument("--fault", default="",
+                    help="fault-timeline schedule (repro.faults, DESIGN.md "
+                         "§14), e.g. 'rail3@step200=0.25,rail3@step600=1.0,"
+                         "node1@step400=down': per-member degradation, "
+                         "full-link loss (=down) and elastic whole-node "
+                         "loss at step boundaries.  Transitions commit "
+                         "through the FabricClock's hysteresis and warm-"
+                         "start Stage 2 from the nearest TuningProfile "
+                         "entry; node loss resumes from the latest "
+                         "checkpoint at the surviving topology")
     ap.add_argument("--backend", choices=["flexlink", "nccl"],
                     default="flexlink")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint period in steps (0 = final only); an "
+                         "elastic node-loss schedule needs one below the "
+                         "fault horizon")
+    ap.add_argument("--out", default="",
+                    help="write a JSON run report (loss, program stats, "
+                         "tuning provenance, fault transitions) — what the "
+                         "fault-smoke CI asserts on")
     ap.add_argument("--tuning-cache", default="",
                     help="TuningProfile JSON: warm-start Stage-1 shares "
                          "from it and persist them back at the end")
@@ -84,11 +103,11 @@ def main(argv=None) -> int:
         cfg = cfg.reduced()
     shape = SH.InputShape("cli", "train", args.seq_len, args.batch)
 
-    from repro.configs.clusters import resolve_cluster, resolve_degrade
+    from repro.configs.clusters import resolve_cluster, resolve_faults
     cluster, n_nodes = resolve_cluster(args.cluster, args.nodes)
-    cluster, intra_profile = resolve_degrade(
+    cluster, intra_profile, timeline = resolve_faults(
         cluster, n_nodes, cluster.node.name if cluster else "tpu_v5e",
-        args.degrade)
+        degrade=args.degrade, fault=args.fault)
 
     if args.mesh_shape:
         dims = tuple(int(x) for x in args.mesh_shape.split(","))
@@ -113,7 +132,10 @@ def main(argv=None) -> int:
                       timing=args.timing,
                       secondary_algo=args.secondary_algo,
                       tuning_cache=args.tuning_cache,
-                      compress=args.compress)
+                      compress=args.compress,
+                      # canonical schedule spec: a faulted run must never
+                      # share a memoized communicator with a fault-free one
+                      fault=timeline.spec() if timeline else "")
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                       total_steps=args.steps)
 
@@ -132,17 +154,41 @@ def main(argv=None) -> int:
             # optimizer state (train_step.py docstring)
             from repro.train.train_step import ef_init_residuals
             opt_state = (opt_state, ef_init_residuals(params))
-        batches = make_batches(cfg, seq_len=args.seq_len,
-                               batch_per_shard=args.batch)
+        batches_fn = lambda: make_batches(  # noqa: E731
+            cfg, seq_len=args.seq_len, batch_per_shard=args.batch)
+        clock = handler = None
+        if timeline is not None:
+            from repro.faults import FabricClock, make_train_resume
+            clock = FabricClock(timeline).attach(ctx)
+            if any(e.kind == "node" for e in timeline.events):
+                handler = make_train_resume(
+                    cfg, opt=opt, shape=shape, comm_config=comm,
+                    cluster=cluster, dp=dp, tp=tp,
+                    ckpt_dir=args.ckpt_dir, batches_fn=batches_fn,
+                    bucket_mb=args.bucket_mb)
         loop = LoopConfig(total_steps=args.steps, log_every=5,
+                          ckpt_every=args.ckpt_every,
                           ckpt_dir=args.ckpt_dir or None,
-                          tuning_cache=args.tuning_cache or None)
+                          tuning_cache=args.tuning_cache or None,
+                          faults=clock, on_node_loss=handler)
         try:
             params, opt_state, hist = run_loop(program, params, opt_state,
-                                               batches, ctx, loop)
+                                               batches_fn(), ctx, loop)
         finally:
             program.close()     # retire the recorder on the memoized comms
     print(f"final loss: {hist[-1]:.4f} (from {hist[0]:.4f})")
+    if args.out:
+        import json
+        import os
+        rep = {"final_loss": hist[-1], "steps": args.steps,
+               **(loop.report or {})}
+        if clock is not None:
+            rep["faults"] = clock.report()
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                    exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=2, default=str)
+        print(f"run report -> {args.out}")
     return 0
 
 

@@ -64,6 +64,10 @@ class ParallelCtx:
     pod_size: int = 1
     comm_config: CommConfig = dataclasses.field(default_factory=CommConfig)
     cluster: Optional[object] = None      # ClusterTopology
+    #: the FabricClock driving live health transitions (repro.faults,
+    #: DESIGN.md §14) — set by ``FabricClock.attach``; None on the
+    #: fault-free (byte-identical) path.
+    fault_clock: Optional[object] = None
     _tp_comm: Optional[FlexCommunicator] = None
     _dp_comm: Optional[FlexCommunicator] = None
     _node_comm: Optional[FlexCommunicator] = None
@@ -305,6 +309,19 @@ class ParallelCtx:
                                   for c in self.comms()}
         if self._cluster_comm is not None:
             out["cluster"] = self._cluster_comm.summary()
+        if self.fault_clock is not None:
+            out["faults"] = self.fault_clock.report()
+        return out
+
+    def apply_health_state(self, degrades) -> Dict[str, object]:
+        """Broadcast one committed fabric state to every live
+        communicator (FabricClock's commit hook); returns the per-axis
+        transition records of the ones that actually changed."""
+        out: Dict[str, object] = {}
+        for comm in self.comms():
+            info = comm.apply_health_state(degrades)
+            if info:
+                out[comm.axis_name] = info
         return out
 
     # -- tensor-parallel collectives (FlexLink-backed) -----------------------

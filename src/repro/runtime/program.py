@@ -96,6 +96,13 @@ class StepProgram:
         self._issued = 0                # lifetime issue() count
         self._awaits = 0                # lifetime non-empty await_all()s
         self._shape_keys: set = set()   # distinct batch-shape buckets seen
+        #: plan re-key counter (DESIGN.md §14): how many times the PLAN
+        #: half of the executable key changed between successive calls —
+        #: Stage-2 moves, drain settlements and fault transitions all
+        #: land here; shape-bucket changes and the first post-trace
+        #: signature (Stage-1 tuning is not a re-key) do not.
+        self._prev_plan_sig: Optional[Tuple] = None
+        self._plan_rekeys = 0
         ctx.register_program(self.name)
 
     # -- lifecycle -------------------------------------------------------------
@@ -131,15 +138,27 @@ class StepProgram:
         post-trace signature names the plans the executable actually
         closed over.
         """
-        fn = self.cache.get(self.signature(shape_key=shape_key))
+        key = self.signature(shape_key=shape_key)
+        self._note_plan(key if shape_key is None else key[1])
+        fn = self.cache.get(key)
         if fn is not None:
             with self.ctx.recording(self.name):
                 return self._timed(fn, args, kwargs)
         fn = self._builder()
         with self.ctx.recording(self.name):
             out = self._timed(fn, args, kwargs)
-        self.cache.put(self.signature(shape_key=shape_key), fn)
+        post = self.signature(shape_key=shape_key)
+        self.cache.put(post, fn)
+        # the first trace tunes Stage-1 buckets, moving the signature —
+        # adopt the post-trace plans without counting a re-key
+        self._prev_plan_sig = post if shape_key is None else post[1]
         return out
+
+    def _note_plan(self, plan_sig: Tuple) -> None:
+        if (self._prev_plan_sig is not None
+                and plan_sig != self._prev_plan_sig):
+            self._plan_rekeys += 1
+        self._prev_plan_sig = plan_sig
 
     def _timed(self, fn, args, kwargs):
         """Run the step; in measured mode, wall-clock it block-until-ready
@@ -166,7 +185,9 @@ class StepProgram:
         Stage-2 observation — lands at :meth:`await_all`.
         """
         t0 = self._clock() if self._measured else None
-        fn = self.cache.get(self.signature(shape_key=shape_key))
+        key = self.signature(shape_key=shape_key)
+        self._note_plan(key if shape_key is None else key[1])
+        fn = self.cache.get(key)
         if fn is not None:
             with self.ctx.recording(self.name):
                 out = fn(*args, **kwargs)
@@ -174,7 +195,9 @@ class StepProgram:
             fn = self._builder()
             with self.ctx.recording(self.name):
                 out = fn(*args, **kwargs)
-            self.cache.put(self.signature(shape_key=shape_key), fn)
+            post = self.signature(shape_key=shape_key)
+            self.cache.put(post, fn)
+            self._prev_plan_sig = post if shape_key is None else post[1]
         handle = StepHandle(out, t0)
         self._pending.append(handle)
         self._issued += 1
@@ -242,11 +265,17 @@ class StepProgram:
 
     # -- reporting -------------------------------------------------------------
 
+    @property
+    def plan_rekeys(self) -> int:
+        """Lifetime count of plan-signature changes between calls."""
+        return self._plan_rekeys
+
     def report(self) -> Dict[str, Any]:
         return {"program": self.name,
                 "executable_cache": self.cache.report(),
                 "issued": self._issued, "awaits": self._awaits,
                 "in_flight": len(self._pending),
+                "plan_rekeys": self._plan_rekeys,
                 "shape_buckets": sorted(self._shape_keys)}
 
 

@@ -78,6 +78,7 @@ class ServeEngine:
         self._next_rid = 0
         self._finished: Dict[int, List[int]] = {}
         self._program = StepProgram(self._decode_builder, ctx)
+        self._ticks = 0
 
     def _decode_builder(self):
         """A FRESH jit wrapper per build — jax.jit memoizes per function
@@ -96,6 +97,7 @@ class ServeEngine:
         rep["program"] = self._program.report()
         rep["serving"] = {
             "engine": "wave",
+            "ticks": self._ticks,
             "slots": self.scfg.slots,
             "active": sum(1 for r in self.active if r is not None),
             "queued": len(self.queue),
@@ -187,6 +189,11 @@ class ServeEngine:
 
     def tick(self) -> int:
         """Admit + one fused decode step for all active slots."""
+        if self.ctx.fault_clock is not None:
+            # serving's fabric time is the tick counter: flapping rails
+            # ride the same hysteresis rule as training steps
+            self.ctx.fault_clock.advance(self._ticks)
+        self._ticks += 1
         if any(s is None for s in self.active) and self.queue:
             self._admit_wave()
         act = [s for s in range(self.scfg.slots) if self.active[s]]
@@ -363,6 +370,8 @@ class PagedServeEngine:
         """Plan (admit / pack / maybe preempt), run ONE fused packed step,
         sample sequence-frontier rows, retire finished requests.  Returns
         the number of real (non-padding) rows processed."""
+        if self.ctx.fault_clock is not None:
+            self.ctx.fault_clock.advance(self._ticks)
         self._ticks += 1
         plan = self.sched.plan_tick()
         if not plan.rows:

@@ -4,7 +4,16 @@ The Stage-2 trace→execute→observe→rebuild lifecycle lives in the
 StepProgram runtime (runtime/program.py, DESIGN.md §7): each tick executes
 through the plan-keyed executable cache and feeds the executed step's
 collectives back to the balancers; a share move re-keys the next tick onto
-a cached executable (oscillation back to a known plan) or a fresh trace."""
+a cached executable (oscillation back to a known plan) or a fresh trace.
+
+With a fault schedule (repro.faults, DESIGN.md §14) the loop additionally
+advances the FabricClock at the top of every step.  Degrade transitions
+apply inside the communicators (the clock already swapped the profiles by
+the time ``advance`` returns); a committed NODE loss hands control to the
+``on_node_loss`` handler, which rebuilds program/ctx/state at the
+surviving topology and rewinds the step counter to the restored
+checkpoint — which is why the loop is a ``while`` and not a ``for``.
+"""
 
 from __future__ import annotations
 
@@ -29,6 +38,17 @@ class LoopConfig:
     #: converged Stage-1 shares at the end so the next launch warm-starts
     #: with zero Algorithm-1 iterations (control/profile.py).
     tuning_cache: Optional[str] = None
+    #: FabricClock (repro.faults) — None on the fault-free path, where
+    #: the loop body is exactly the historical per-step arithmetic.
+    faults: Optional[object] = None
+    #: elastic node-loss handler (``repro.faults.make_train_resume``):
+    #: (transition, step) -> (program, ctx, params, opt_state, batches,
+    #: resume_step).  Required when the schedule contains node events.
+    on_node_loss: Optional[Callable] = None
+    #: filled by run_loop on completion: the FINAL program/ctx status —
+    #: after an elastic swap the caller's program/ctx references are the
+    #: retired pre-drop objects, so launchers report from here.
+    report: Optional[Dict] = None
 
 
 def run_loop(step: Union[StepProgram, Callable[[], Callable]],
@@ -49,8 +69,23 @@ def run_loop(step: Union[StepProgram, Callable[[], Callable]],
     ckpt = Checkpointer(loop.ckpt_dir) if loop.ckpt_dir else None
     history = []
     t0 = time.time()
+    i = 0
     try:
-        for i in range(loop.total_steps):
+        while i < loop.total_steps:
+            if loop.faults is not None:
+                swap = _advance_faults(loop, program, ctx, i, log)
+                if swap is not None:
+                    # elastic resume: retire the old program (its mesh no
+                    # longer exists) and rewind to the restored snapshot.
+                    # close() is idempotent, so a caller's finally on the
+                    # old program reference stays harmless.
+                    program.close()
+                    (program, ctx, params, opt_state, batches, i) = swap
+                    owned = True
+                    loop.faults.attach(ctx)
+                    ckpt = (Checkpointer(loop.ckpt_dir)
+                            if loop.ckpt_dir else None)
+                    continue
             batch = next(batches)
             # execute (plan-keyed executable cache) + Stage-2 feedback; a
             # share move re-keys the next tick — no manual rebuild
@@ -66,6 +101,7 @@ def run_loop(step: Union[StepProgram, Callable[[], Callable]],
                     f"lr {float(metrics['lr']):.2e}  {dt:.1f}s")
             if ckpt and loop.ckpt_every and (i + 1) % loop.ckpt_every == 0:
                 ckpt.save(i + 1, params, opt_state)
+            i += 1
         if ckpt:
             ckpt.save(loop.total_steps, params, opt_state)
         ec = program.cache.report()
@@ -84,7 +120,28 @@ def run_loop(step: Union[StepProgram, Callable[[], Callable]],
             n = ctx.save_tuning_profile(loop.tuning_cache)
             if loop.log_every:
                 log(f"tuning profile: {n} slots -> {loop.tuning_cache}")
+        loop.report = {"program": program.report(),
+                       "tuning": ctx.tuning_status()}
     finally:
         if owned:
             program.close()
     return params, opt_state, history
+
+
+def _advance_faults(loop: LoopConfig, program: StepProgram,
+                    ctx: ParallelCtx, i: int, log):
+    """One FabricClock tick.  Returns the elastic-resume tuple when a
+    node loss committed (at most one per step — a schedule dropping two
+    nodes at once resumes once at the first and re-commits the second on
+    a later tick, since fabric time is monotone), else None."""
+    for tr in loop.faults.advance(i):
+        if tr["kind"] == "node":
+            if loop.on_node_loss is None:
+                raise RuntimeError(
+                    f"fault schedule lost node{tr['node']} at step "
+                    f"{tr['step']} but no on_node_loss handler is "
+                    f"configured (launch built without --ckpt-dir?)")
+            return loop.on_node_loss(tr, i)
+        log(f"fault: fabric -> {tr['state'] or ['healthy']} at step "
+            f"{tr['step']} (re-keyed: {sorted(tr['rekeyed'])})")
+    return None

@@ -1,0 +1,410 @@
+"""Live fabric dynamics (repro.faults, DESIGN.md §14).
+
+The contracts that make a fault TIMELINE safe to wire through the whole
+stack:
+
+* DSL — one parser for ``--degrade`` and ``--fault`` (a degrade is sugar
+  for a step-0 fault event), unknown targets rejected at parse time;
+* HYSTERESIS — a flapping rail never commits: ZERO plan re-keys, the
+  flap count is reported instead;
+* WARM RE-KEY — a persistent fault re-keys the affected slots exactly
+  once, warm-starting from the matching TuningProfile entry with zero
+  Algorithm-1 iterations;
+* ELASTIC — a node-loss resume is bit-identical to a fresh run launched
+  at the post-drop topology from the same checkpoint;
+* EVENTS — measured mode ingests per-path event rows (the CUDA-event /
+  TPU-trace shaped recorder) instead of the scalar finite difference.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster.topology import degrade_cluster, make_cluster
+from repro.configs.clusters import resolve_faults
+from repro.control import SimEventRecorder
+from repro.core.communicator import (CommConfig, FlexCommunicator,
+                                     bucket_for, comm_destroy_all)
+from repro.core.simulator import MiB
+from repro.core.topology import Collective
+from repro.faults import (FabricClock, FaultEvent, HealthTimeline,
+                          HYSTERESIS_K, parse_fault_item,
+                          parse_fault_schedule, validate_schedule)
+
+AR = Collective.ALL_REDUCE
+PAYLOAD = int(16 * MiB)
+
+
+def _cluster(name):
+    return make_cluster("h800", 2, nics_per_node=4, nic_gbit=400.0,
+                        name=name)
+
+
+def _timeline(schedule, tier, n_nodes=2):
+    return HealthTimeline(validate_schedule(
+        parse_fault_schedule(schedule), profiles=[tier], n_nodes=n_nodes))
+
+
+# ---------------------------------------------------------------------------
+# DSL: one grammar for --degrade and --fault
+# ---------------------------------------------------------------------------
+
+def test_parse_fault_item_grammar():
+    e = parse_fault_item("rail3@step200=0.25")
+    assert (e.target, e.member, e.step, e.factor) == ("rail3", None, 200,
+                                                      0.25)
+    e = parse_fault_item("rail:rail3@step10=down")
+    assert (e.target, e.member, e.factor) == ("rail", "rail3", 0.0)
+    e = parse_fault_item("node1@step400=down")
+    assert e.kind == "node" and e.node_index == 1 and e.step == 400
+
+
+def test_parse_fault_item_bare_form_is_step0():
+    """``rail3=0.25`` (no @step) parses as a step-0 event — the one
+    grammar behind --degrade."""
+    e = parse_fault_item("rail3=0.25")
+    assert e.step == 0 and e.factor == 0.25
+
+
+@pytest.mark.parametrize("bad", [
+    "rail3@step200",            # no factor
+    "rail3@step-5=0.25",        # negative step
+    "rail3@twenty=0.25",        # malformed time qualifier
+    "node1@step400=0.5",        # nodes are all-or-nothing
+    "node1@step0=down",         # a node down at launch is not a fault
+    "rail3@step10=2.0",         # factor out of range
+])
+def test_parse_fault_item_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_fault_item(bad)
+
+
+def test_validate_schedule_rejects_unknown_target():
+    tier = _cluster("flt_unknown").nic_tier
+    events = parse_fault_schedule("rail9@step10=0.5")
+    with pytest.raises(ValueError, match="rail9"):
+        validate_schedule(events, profiles=[tier], n_nodes=2)
+    events = parse_fault_schedule("node7@step10=down")
+    with pytest.raises(ValueError, match="node7"):
+        validate_schedule(events, profiles=[tier], n_nodes=2)
+
+
+def test_degrade_is_step0_fault_sugar():
+    """--degrade x=f and --fault x@step0=f through resolve_faults produce
+    the SAME degraded cluster/profile and no timeline (a step-0 event is
+    static — it folds into the construction profile)."""
+    ca = _cluster("flt_sugar_a")
+    cb = _cluster("flt_sugar_b")
+    a_cl, a_prof, a_tl = resolve_faults(ca, 2, ca.node.name,
+                                        degrade="rail3=0.25")
+    b_cl, b_prof, b_tl = resolve_faults(cb, 2, cb.node.name,
+                                        fault="rail3@step0=0.25")
+    assert a_tl is None and b_tl is None
+    assert a_prof == b_prof
+    assert a_cl.nic_tier.name.split("!", 1)[1] == \
+        b_cl.nic_tier.name.split("!", 1)[1]
+
+
+def test_resolve_faults_rejects_static_dynamic_clash():
+    c = _cluster("flt_clash")
+    with pytest.raises(ValueError):
+        resolve_faults(c, 2, c.node.name, degrade="rail3=0.25",
+                       fault="rail3@step50=0.5")
+
+
+def test_timeline_state_latest_event_wins():
+    tier = _cluster("flt_state").nic_tier
+    tl = _timeline("rail3@step10=0.25,rail3@step30=1.0,node1@step20=down",
+                   tier)
+    assert tl.state_at(5).degrades == ()
+    assert tl.state_at(15).degrades == ("rail:rail3=0.25",)
+    assert tl.state_at(25).down_nodes == (1,)
+    assert tl.state_at(35).degrades == ()     # restored
+    assert isinstance(tl.events[0], FaultEvent)
+
+
+# ---------------------------------------------------------------------------
+# hysteresis: flapping never re-keys
+# ---------------------------------------------------------------------------
+
+def test_flapping_rail_zero_rekeys():
+    tier = _cluster("flt_flap").nic_tier
+    flap = ",".join(f"rail3@step{i}={0.25 if i % 2 else 1.0}"
+                    for i in range(1, 61))     # ends on a restore
+    tl = _timeline(flap, tier)
+    comm = FlexCommunicator("node", 2, CommConfig(
+        profile=tier.name, fault=tl.spec()))
+    comm.record_call(AR, PAYLOAD)
+    sig = comm.plan_signature()
+    clock = FabricClock(tl, comms=lambda: [comm])
+    for step in range(70):
+        assert clock.advance(step) == []
+        comm.record_call(AR, PAYLOAD)
+    assert clock.rekeys == 0
+    assert clock.suppressed_flaps > 0
+    assert clock.transitions == []
+    # the plan the fabric executes never moved off the healthy tune
+    assert comm.plan_signature() == sig
+    assert comm._effective_profile == tier.name
+
+
+def test_projection_rows_commit_at_step_plus_k():
+    """The dryrun fault table: static per-event view with the commit
+    horizon the hysteresis rule implies."""
+    tier = _cluster("flt_proj").nic_tier
+    tl = _timeline("rail3@step10=0.25,node1@step20=down", tier)
+    rows = FabricClock(tl).projection()
+    assert [r["kind"] for r in rows] == ["degrade", "node"]
+    assert all(r["commit_step"] == r["step"] + HYSTERESIS_K - 1
+               for r in rows)
+
+
+def test_burst_shorter_than_hysteresis_suppressed():
+    """A fault that heals within K-1 steps is a flap, not a transition."""
+    tier = _cluster("flt_burst").nic_tier
+    k = HYSTERESIS_K
+    tl = _timeline(f"rail3@step10=0.25,rail3@step{10 + k - 1}=1.0", tier)
+    comm = FlexCommunicator("node", 2, CommConfig(
+        profile=tier.name, fault=tl.spec()))
+    comm.record_call(AR, PAYLOAD)
+    clock = FabricClock(tl, comms=lambda: [comm])
+    for step in range(30):
+        assert clock.advance(step) == []
+    assert clock.rekeys == 0 and clock.suppressed_flaps == 1
+
+
+# ---------------------------------------------------------------------------
+# persistent fault: exactly one re-key, warm, zero Stage-1 iterations
+# ---------------------------------------------------------------------------
+
+def test_persistent_fault_rekeys_once_warm(tmp_path):
+    cluster = _cluster("flt_warm")
+    tier = cluster.nic_tier
+    degraded = degrade_cluster(cluster, "rail:rail3=0.25")
+    cache = str(tmp_path / "tuning.json")
+
+    # seed the cache: one cold tune per fabric state (what CI persists)
+    for prof in (degraded.nic_tier.name, tier.name):
+        c = FlexCommunicator("node", 2, CommConfig(
+            profile=prof, tuning_cache=cache))
+        for _ in range(12):
+            c.record_call(AR, PAYLOAD)
+        c.save_tuning(cache)
+
+    tl = _timeline("rail3@step10=0.25", tier)
+    comm = FlexCommunicator("node", 2, CommConfig(
+        profile=tier.name, tuning_cache=cache, fault=tl.spec()))
+    clock = FabricClock(tl, comms=lambda: [comm])
+    committed = []
+    for step in range(40):
+        committed += clock.advance(step)
+        comm.record_call(AR, PAYLOAD)
+    assert clock.rekeys == 1 and len(committed) == 1
+    tr = committed[0]
+    assert tr["kind"] == "degrade"
+    assert tr["step"] == 10 + HYSTERESIS_K - 1
+    assert comm._effective_profile == degraded.nic_tier.name
+    sc = comm.slot(AR, bucket_for(PAYLOAD))
+    assert sc.warm and sc.tuned.iterations == 0
+    assert sc.origin == "transition:exact"
+    info = tr["rekeyed"]["node"]["slots"][f"all_reduce@{bucket_for(PAYLOAD)}"]
+    assert info["warm"] and info["stage1_iters"] == 0
+    rep = clock.report()
+    assert rep["rekeys"] == 1 and rep["suppressed_flaps"] == 0
+    assert rep["state"]["degrades"] == ["rail:rail3=0.25"]
+
+
+def test_transition_without_cache_carries_live_shares():
+    """No saved entry for the faulted fabric: the slot keeps its
+    converged class split and the member weights re-seed from the new
+    healths (the sick member starts pre-drained)."""
+    tier = _cluster("flt_carry").nic_tier
+    tl = _timeline("rail3@step5=0.25", tier)
+    comm = FlexCommunicator("node", 2, CommConfig(
+        profile=tier.name, fault=tl.spec()))
+    clock = FabricClock(tl, comms=lambda: [comm])
+    for _ in range(4):
+        comm.record_call(AR, PAYLOAD)
+    before = dict(comm.slot(AR, bucket_for(PAYLOAD)).shares)
+    for step in range(20):
+        clock.advance(step)
+        comm.record_call(AR, PAYLOAD)
+    sc = comm.slot(AR, bucket_for(PAYLOAD))
+    assert sc.origin == "transition:carry"
+    assert sc.shares == before              # class split carried forward
+    w = sc.member_weights()["rail"]
+    assert w["rail3"] < min(w["rail0"], w["rail1"], w["rail2"])
+
+
+def test_restore_transition_returns_to_base_profile():
+    tier = _cluster("flt_restore").nic_tier
+    tl = _timeline("rail3@step5=0.25,rail3@step20=1.0", tier)
+    comm = FlexCommunicator("node", 2, CommConfig(
+        profile=tier.name, fault=tl.spec()))
+    clock = FabricClock(tl, comms=lambda: [comm])
+    for step in range(40):
+        clock.advance(step)
+        comm.record_call(AR, PAYLOAD)
+    assert clock.rekeys == 2
+    assert comm._effective_profile == tier.name
+    w = comm.slot(AR, bucket_for(PAYLOAD)).member_weights()["rail"]
+    assert len(set(w.values())) == 1        # healed: uniform again
+
+
+# ---------------------------------------------------------------------------
+# per-path event attribution (measured mode)
+# ---------------------------------------------------------------------------
+
+def test_event_recorder_feeds_measured_rates():
+    import jax.numpy as jnp
+
+    tier = _cluster("flt_events").nic_tier
+    comm = FlexCommunicator("node", 2, CommConfig(
+        profile=tier.name, timing="measured", tag="flt_events"))
+    rec = SimEventRecorder(comm.model)
+    assert comm.attach_recorder_events(rec)
+    x = jnp.zeros((1024, 1024), jnp.float32)
+    comm.plan_for(AR, x)
+    assert comm.issued_calls()
+    for _ in range(8):
+        comm.observe_executed_step(elapsed_s=0.01)
+    ts = comm.timing
+    while hasattr(ts, "inner"):
+        ts = ts.inner
+    assert ts.event_updates > 0
+    assert rec.steps_recorded > 0
+    assert ts.report()["event_recorder"]
+    # event rows survive a fault transition: the recorder re-attaches to
+    # the swapped timing source and follows the new fabric's model
+    assert comm.apply_health_state(("rail:rail3=0.25",)) is not None
+    before = rec.steps_recorded
+    comm.plan_for(AR, x)
+    comm.observe_executed_step(elapsed_s=0.01)
+    assert rec.steps_recorded > before
+    assert rec.model is comm.model
+
+
+# ---------------------------------------------------------------------------
+# elastic node loss: bit-identical resume
+# ---------------------------------------------------------------------------
+
+def test_elastic_node_drop_resumes_bit_identical(tmp_path):
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.pipeline import make_batches
+    from repro.faults import make_train_resume, restore_templates
+    from repro.launch import shapes as SH
+    from repro.launch.mesh import make_cluster_mesh, make_mesh
+    from repro.launch.steps import build_train_program
+    from repro.models.transformer import init_params
+    from repro.optim.adamw import AdamWConfig, init_state
+    from repro.train.loop import LoopConfig, run_loop
+
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 host devices")
+    cfg = get_config("glm4-9b").reduced()
+    # 11 steps with ckpt_every=3: snapshots at 3, 6, 9, 11 — the resume
+    # source (6) survives the keep=3 retention through the end of run A
+    steps, seq_len, batch = 11, 16, 8
+    shape = SH.InputShape("cli", "train", seq_len, batch)
+    cluster = _cluster("flt_elastic")
+    tl = _timeline("node1@step5=down", cluster.nic_tier)
+    comm = CommConfig(profile=cluster.node.name, fault=tl.spec(),
+                      tag="flt_elastic")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    ckpt_dir = str(tmp_path / "ckpt")
+    batches_fn = lambda: make_batches(cfg, seq_len=seq_len,  # noqa: E731
+                                      batch_per_shard=batch)
+
+    # run A: 2-node launch, node1 dies at step 5 (commits at 5+K-1),
+    # elastic resume from the latest snapshot at the 1-node topology
+    mesh = make_cluster_mesh(2, 2, 2)
+    with mesh:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = init_state(params)
+        program, ctx = build_train_program(cfg, mesh, comm=comm, opt=opt,
+                                           shape=shape, cluster=cluster)
+        clock = FabricClock(tl).attach(ctx)
+        handler = make_train_resume(
+            cfg, opt=opt, shape=shape, comm_config=comm, cluster=cluster,
+            dp=2, tp=2, ckpt_dir=ckpt_dir, batches_fn=batches_fn,
+            log=lambda *_: None)
+        loop = LoopConfig(total_steps=steps, log_every=0, ckpt_every=3,
+                          ckpt_dir=ckpt_dir, faults=clock,
+                          on_node_loss=handler)
+        params_a, _, hist_a = run_loop(program, params, opt_state,
+                                       batches_fn(), ctx, loop,
+                                       log=lambda *_: None)
+    commit_step = 5 + HYSTERESIS_K - 1      # = 8; latest snapshot is 6
+    node_trs = [t for t in clock.transitions if t["kind"] == "node"]
+    assert len(node_trs) == 1 and node_trs[0]["step"] == commit_step
+    assert len(hist_a) > steps              # replayed steps re-recorded
+    assert clock.ctx is not ctx             # re-attached post-swap
+
+    # run B: a FRESH launch at the post-drop topology restoring the same
+    # snapshot, stepped over the same remaining schedule
+    comm_destroy_all()
+    from repro.checkpoint.checkpointer import Checkpointer
+    mesh_b = make_mesh((2, 2), ("data", "model"))
+    with mesh_b:
+        program_b, ctx_b = build_train_program(
+            cfg, mesh_b, comm=comm, opt=opt, shape=shape,
+            name="train-fresh", cluster=None)
+        p_tmpl, o_tmpl = restore_templates(cfg)
+        ck = Checkpointer(ckpt_dir)
+        resume = 6          # the snapshot the elastic resume restored:
+        # last ckpt_every=3 save before the commit at step 8 (run A kept
+        # checkpointing afterwards, so latest_step() has moved on)
+        params_b, opt_b, _ = ck.restore(p_tmpl, o_tmpl, resume)
+        batches = batches_fn()
+        try:
+            for _ in range(resume, steps):
+                batch = next(batches)
+                params_b, opt_b, _ = program_b.step(params_b, opt_b, batch)
+        finally:
+            program_b.close()
+
+    la, lb = jax.tree_util.tree_leaves(params_a), \
+        jax.tree_util.tree_leaves(params_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# launcher integration: --fault end to end through run_loop + --out
+# ---------------------------------------------------------------------------
+
+def test_train_launcher_fault_schedule_report(tmp_path):
+    from repro.launch.train import main
+
+    out = str(tmp_path / "run.json")
+    rc = main(["--smoke", "--steps", "12", "--seq-len", "16",
+               "--mesh-shape", "2,2", "--nodes", "2",
+               "--cluster", "2xh800_rail4",
+               "--fault", "rail3@step3=0.25", "--out", out])
+    assert rc == 0
+    with open(out) as f:
+        rep = json.load(f)
+    fr = rep["faults"]
+    assert fr["hysteresis_k"] == HYSTERESIS_K
+    assert len(fr["transitions"]) == 1
+    assert fr["transitions"][0]["step"] == 3 + HYSTERESIS_K - 1
+    assert fr["rekeys"] >= 1
+    assert fr["state"]["degrades"] == ["rail:rail3=0.25"]
+    assert rep["program"]["plan_rekeys"] >= 1
+    # the faults block also rides the ctx-level comm report path
+    assert "schedule" in fr and fr["schedule"]
+
+
+def test_fault_free_loop_reports_no_faults(tmp_path):
+    from repro.launch.train import main
+
+    out = str(tmp_path / "run.json")
+    rc = main(["--smoke", "--steps", "4", "--seq-len", "16", "--out", out])
+    assert rc == 0
+    with open(out) as f:
+        rep = json.load(f)
+    assert "faults" not in rep
