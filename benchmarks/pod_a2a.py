@@ -1,0 +1,104 @@
+"""Rail-local vs flat vs naive-3-tier MoE all_to_all across buffer sizes.
+
+The pod tier's acceptance benchmark (DESIGN.md §15): on the
+``4pod4xh800_ep`` fabric — the kimi_k2_1t_a32b expert-parallel scenario,
+4 pods × 4 H800 nodes with 4×400Gb rails and an 8×400Gb spine at 4:1
+oversubscription — price the three ways to run expert dispatch:
+
+  rail_local : the ep_all_to_all decomposition of
+               cluster/communicator.py — intra NVLink shuffle, then the
+               node leg on rail-aligned NIC subgroups (each tier's
+               rail-vs-spine split from Algorithm 1 against its own
+               pool), then only the truly cross-pod bytes over the
+               spine;
+  flat       : one all_to_all ring over every rank — its pod-cut edges
+               ride ONE oversubscribed spine uplink, which paces every
+               lockstep step;
+  naive      : the same 3-level decomposition WITHOUT rail alignment —
+               cross-node traffic takes the cross-rail spine path and
+               cross-pod traffic the cross-spine path, full payload.
+
+The flat ring wins only the latency-bound small-buffer regime (no tier
+barriers); at bandwidth-bound sizes rail-local must win strictly — the
+in-bench assertion, mirroring the bit-exactness contract proved in
+tests/test_pod.py (faster AND exact, the paper's framing).
+
+Run:  PYTHONPATH=src python -m benchmarks.pod_a2a --out BENCH_pod_a2a.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.cluster import ClusterTimingModel
+from repro.configs.clusters import get_cluster
+from repro.core.simulator import MiB
+
+CLUSTER = "4pod4xh800_ep"
+RANKS_PER_NODE = 8
+SIZES_MIB = (0.25, 1, 4, 16, 64, 256)
+#: sizes where the dispatch is bandwidth-bound (the assertion set)
+BANDWIDTH_BOUND_MIB = (16, 64, 256)
+SCHEDULES = ("rail_local", "flat", "naive")
+
+
+def run(csv_print=print, out: str = ""):
+    topo = get_cluster(CLUSTER)
+    model = ClusterTimingModel(topo, RANKS_PER_NODE)
+    rows = []
+    csv_print("MiB,rail_local_GBps,flat_GBps,naive_GBps,winner")
+    for mib in SIZES_MIB:
+        payload = mib * MiB
+        times = {s: model.a2a_time(payload, schedule=s) for s in SCHEDULES}
+        bws = {s: (payload / t) / 1e9 if t > 0 else float("inf")
+               for s, t in times.items()}
+        winner = min(times, key=times.get)
+        rows.append({"MiB": mib,
+                     **{f"{s}_GBps": round(bws[s], 2) for s in SCHEDULES},
+                     **{f"{s}_s": times[s] for s in SCHEDULES},
+                     "winner": winner})
+        csv_print(f"{mib},{bws['rail_local']:.1f},{bws['flat']:.1f},"
+                  f"{bws['naive']:.1f},{winner}")
+    crossover = model.a2a_crossover_bytes()
+    csv_print(f"# crossover: rail-local wins from {crossover / MiB:.2f} MiB"
+              if crossover is not None else
+              "# crossover: flat all_to_all never beaten in range")
+    # the acceptance gate: at every bandwidth-bound size the rail-local
+    # decomposition must STRICTLY beat both the flat ring and the naive
+    # (non-rail-aligned) hierarchy
+    for r in rows:
+        if r["MiB"] in BANDWIDTH_BOUND_MIB:
+            assert r["rail_local_s"] < r["flat_s"], \
+                (f"rail-local must strictly beat the flat all_to_all at "
+                 f"{r['MiB']} MiB: {r['rail_local_s']:.3e} !< "
+                 f"{r['flat_s']:.3e}")
+            assert r["rail_local_s"] < r["naive_s"], \
+                (f"rail-local must strictly beat the naive hierarchy at "
+                 f"{r['MiB']} MiB: {r['rail_local_s']:.3e} !< "
+                 f"{r['naive_s']:.3e}")
+    if out:
+        rec = {"cluster": CLUSTER, "ranks_per_node": RANKS_PER_NODE,
+               "pods": topo.n_pods, "nodes_per_pod": topo.n_nodes,
+               "bandwidth_bound_MiB": list(BANDWIDTH_BOUND_MIB),
+               "rows": rows, "crossover_bytes": crossover}
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_pod_a2a.json")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+    rows = run(out=args.out)
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print(f"pod_a2a,{us:.0f},rows={len(rows)}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

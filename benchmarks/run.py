@@ -9,8 +9,9 @@ import time
 from benchmarks import (compressed_path, degraded_rail, fault_recovery,
                         fig2_improvement, fig5_runtime,
                         future_tree_allreduce, hierarchy_crossover,
-                        overlap_step, serving_load, table1_idle_bw,
-                        table2_bandwidth, roofline_report, perf_hillclimb)
+                        overlap_step, pod_a2a, serving_load,
+                        table1_idle_bw, table2_bandwidth, roofline_report,
+                        perf_hillclimb)
 
 
 def main() -> None:
@@ -23,6 +24,7 @@ def main() -> None:
         ("perf_hillclimb", perf_hillclimb.run),
         ("future_tree_allreduce", future_tree_allreduce.run),
         ("hierarchy_crossover", hierarchy_crossover.run),
+        ("pod_a2a", pod_a2a.run),
         ("degraded_rail", degraded_rail.run),
         ("fault_recovery", fault_recovery.run),
         ("overlap_step", overlap_step.run),

@@ -1,5 +1,5 @@
-"""repro.cluster — multi-node fabric model + two-tier hierarchical
-collectives (DESIGN.md §9).
+"""repro.cluster — multi-node fabric model + tiered hierarchical
+collectives (DESIGN.md §9; pod/DCN third tier: §15).
 
 The node count as a first-class axis: a :class:`ClusterTopology` is N×
 one intra-node :class:`~repro.core.links.NodeProfile` plus an inter-node
@@ -19,7 +19,8 @@ importable as leaf modules.
 from repro.cluster.simulator import ClusterTimingModel, PHASE_SYNC_US
 from repro.cluster.topology import (ClusterTopology, cluster_for,
                                     degrade_cluster, make_cluster,
-                                    make_nic_tier, nic_tier_name)
+                                    make_nic_tier, make_pod_tier,
+                                    nic_tier_name, pod_tier_name)
 
 _LAZY = ("ClusterCommunicator",)
 
@@ -40,5 +41,7 @@ __all__ = [
     "degrade_cluster",
     "make_cluster",
     "make_nic_tier",
+    "make_pod_tier",
     "nic_tier_name",
+    "pod_tier_name",
 ]

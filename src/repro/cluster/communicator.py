@@ -1,34 +1,49 @@
-"""ClusterCommunicator — two-tier hierarchical collectives (DESIGN.md §9).
+"""ClusterCommunicator — hierarchical collectives over up to three tiers
+(DESIGN.md §9, §15).
 
 One :class:`~repro.core.communicator.FlexCommunicator` per fabric tier:
-the *intra* tier on the in-node mesh axis (the paper's FlexLink pool) and
+the *intra* tier on the in-node mesh axis (the paper's FlexLink pool),
 the *inter* tier on the node axis (the NIC pool of
-``cluster/topology.py``).  A cluster collective is a composition of
-ordinary flex collectives, one RoutePlan per tier, emitted through the
-same ``routing.execute`` engine — so the PlanCache / ``plan_signature()``
-/ ExecutableCache machinery of PRs 1–2 applies unchanged per tier, and
-each tier's SlotControllers run Stage-1/Stage-2 independently against
-their own link pool.
+``cluster/topology.py``), and optionally the *pod* tier on the pod axis
+(the oversubscribed DCN spine pool).  A cluster collective is a
+composition of ordinary flex collectives, one RoutePlan per tier,
+emitted through the same ``routing.execute`` engine — so the PlanCache /
+``plan_signature()`` / ExecutableCache machinery of PRs 1–2 applies
+unchanged per tier, and each tier's SlotControllers run Stage-1/Stage-2
+independently against their own link pool.  Codecs (PR 7), member
+drains (PR 5) and fault timelines (PR 9) therefore apply to the pod
+tier for free: it is just another profile-keyed communicator.
 
-Compositions (the Meta 100k-GPU / NCCL hierarchical forms):
+Compositions (the Meta 100k-GPU / NCCL hierarchical forms, written for
+the general tier chain ``[intra, inter, pod]`` with m ranks/node,
+n nodes/pod, p pods):
 
-  all_reduce     : intra reduce_scatter → inter all_reduce on the 1/m
-                   shard → intra all_gather.  NIC bytes shrink from
-                   ~2B(N-1)/N to ~2B(n-1)/n of the per-rank payload —
-                   the whole point of the hierarchy.
-  all_gather     : intra all_gather (node block) → inter all_gather of
-                   the blocks; output is node-major, identical to the
-                   flat gather over (node, intra).
-  reduce_scatter : intra reduce_scatter → inter reduce_scatter; rank
-                   (node, i) ends with global segment ``i * n + node``
-                   (intra-major interleaved — the bandwidth-optimal
-                   order; the intra tier runs first so only 1/m of the
-                   payload ever crosses the NIC tier).
+  all_reduce     : reduce_scatter DOWN the chain (intra, then inter) →
+                   all_reduce on the TOP tier's 1/(m·n) shard →
+                   all_gather back UP.  Cross-pod bytes shrink to
+                   ~2B(p-1)/(p·m·n) of the per-rank payload — the
+                   hierarchy's point, one level up.
+  all_gather     : per-tier all_gather inward-out; output is
+                   outermost-major (pod, then node, then intra),
+                   identical to the flat gather over (pod, node, intra).
+  reduce_scatter : chained per-tier reduce_scatter; rank (pod, node, i)
+                   ends with global segment ``(i * n + node) * p + pod``
+                   (innermost-major interleaved — each tier runs before
+                   the slower one so only a shrinking shard ever crosses
+                   it).
+  ep_all_to_all  : the rail-local MoE dispatch decomposition — an intra
+                   shuffle plus one all_to_all per outer tier, each an
+                   ordinary per-tier RoutePlan (the node leg's traffic is
+                   rail-aligned NIC transfers, tuned rail-vs-spine per
+                   size bucket).  Bit-exact vs the flat all_to_all over
+                   the combined (pod, node, data) axes.
 
-Degenerate cases collapse structurally: with no inter tier (N=1) every
-call IS the intra communicator's call — same plans, same signatures
-(the parity test in tests/test_cluster.py); with no intra tier
-(1 rank/node) every call is a flat flex collective on the NIC tier.
+Degenerate cases collapse structurally: with a single live tier every
+call IS that communicator's call — same plans, same signatures (the
+parity tests in tests/test_cluster.py and tests/test_pod.py); a
+pods=1 cluster never constructs a pod communicator, so the 2-tier
+compositions execute byte-for-byte what they executed before the pod
+tier existed.
 """
 
 from __future__ import annotations
@@ -41,73 +56,88 @@ import jax.numpy as jnp
 from repro.cluster.topology import ClusterTopology
 from repro.control.slots import SlotController
 from repro.core.communicator import FlexCommunicator
+from repro.core.topology import Collective
 
 
 class ClusterCommunicator:
-    """Hierarchical collectives over (intra_axis × node_axis).
+    """Hierarchical collectives over (intra_axis × node_axis [× pod_axis]).
 
     Not itself a FlexCommunicator: it owns one per tier and composes
-    them.  ``comms()`` exposes the live tier communicators so ctx-level
-    plumbing (program recorders, tuning profiles, reports) treats the
-    cluster as two ordinary communicators.
+    them.  ``comms()`` exposes the live tier communicators innermost
+    first so ctx-level plumbing (program recorders, tuning profiles,
+    reports) treats the cluster as ordinary communicators.
     """
 
     def __init__(self, topology: ClusterTopology,
                  intra: Optional[FlexCommunicator],
-                 inter: Optional[FlexCommunicator]):
-        if intra is None and inter is None:
+                 inter: Optional[FlexCommunicator],
+                 pod: Optional[FlexCommunicator] = None):
+        if intra is None and inter is None and pod is None:
             raise ValueError("cluster needs at least one live tier")
         if inter is not None and inter.n_ranks != topology.n_nodes:
             raise ValueError(
                 f"inter tier spans {inter.n_ranks} ranks but topology has "
                 f"{topology.n_nodes} nodes")
+        if pod is not None and pod.n_ranks != topology.n_pods:
+            raise ValueError(
+                f"pod tier spans {pod.n_ranks} ranks but topology has "
+                f"{topology.n_pods} pods")
         self.topology = topology
         self.intra = intra
         self.inter = inter
+        self.pod = pod
 
     # -- structure -------------------------------------------------------------
 
     @property
     def hierarchical(self) -> bool:
-        """True when a collective actually decomposes into two tiers."""
-        return self.intra is not None and self.inter is not None
+        """True when a collective actually decomposes across tiers."""
+        return len(self.comms()) > 1
 
     @property
     def n_ranks(self) -> int:
-        m = self.intra.n_ranks if self.intra is not None else 1
-        n = self.inter.n_ranks if self.inter is not None else 1
-        return m * n
+        r = 1
+        for c in self.comms():
+            r *= c.n_ranks
+        return r
 
     def comms(self) -> Tuple[FlexCommunicator, ...]:
-        return tuple(c for c in (self.intra, self.inter) if c is not None)
+        """Live tier communicators, innermost (fastest fabric) first."""
+        return tuple(c for c in (self.intra, self.inter, self.pod)
+                     if c is not None)
 
-    # -- collectives (call inside shard_map over both axes) --------------------
+    # -- collectives (call inside shard_map over every live axis) --------------
 
     def all_reduce(self, x: jax.Array, accumulate=None) -> jax.Array:
-        if self.inter is None:
-            return self.intra.all_reduce(x, accumulate)
-        if self.intra is None:
-            return self.inter.all_reduce(x, accumulate)
-        m = self.intra.n_ranks
+        tiers = self.comms()
+        if len(tiers) == 1:
+            return tiers[0].all_reduce(x, accumulate)
+        down, top = tiers[:-1], tiers[-1]
+        k = 1
+        for c in down:
+            k *= c.n_ranks
         flat = x.reshape(-1)
-        pad = (-flat.shape[0]) % m
+        pad = (-flat.shape[0]) % k
         if pad:
             flat = jnp.pad(flat, (0, pad))
-        shard = self.intra.reduce_scatter(flat, accumulate)   # [L/m]
-        red = self.inter.all_reduce(shard, accumulate)
-        full = self.intra.all_gather(red, tiled=True)         # [L]
+        shard = flat
+        for c in down:
+            shard = c.reduce_scatter(shard, accumulate)   # [L / prod]
+        red = top.all_reduce(shard, accumulate)
+        for c in reversed(down):
+            red = c.all_gather(red, tiled=True)           # back to [L]
         if pad:
-            full = full[:-pad]
-        return full.reshape(x.shape)
+            red = red[:-pad]
+        return red.reshape(x.shape)
 
     def all_gather(self, x: jax.Array, tiled: bool = True) -> jax.Array:
-        if self.inter is None:
-            return self.intra.all_gather(x, tiled=tiled)
-        if self.intra is None:
-            return self.inter.all_gather(x, tiled=tiled)
-        g = self.intra.all_gather(x, tiled=False)       # [m, *x]
-        g2 = self.inter.all_gather(g, tiled=False)      # [n, m, *x]
-        stacked = g2.reshape((self.n_ranks,) + x.shape)  # node-major
+        tiers = self.comms()
+        if len(tiers) == 1:
+            return tiers[0].all_gather(x, tiled=tiled)
+        g = x
+        for c in tiers:
+            g = c.all_gather(g, tiled=False)   # prepend that tier's axis
+        stacked = g.reshape((self.n_ranks,) + x.shape)  # outermost-major
         if not tiled:
             return stacked
         if x.ndim:
@@ -116,33 +146,138 @@ class ClusterCommunicator:
         return stacked.reshape(-1)
 
     def reduce_scatter(self, x: jax.Array, accumulate=None) -> jax.Array:
-        """Leading dim must divide m*n.  Rank (node, i) receives global
-        segment ``i * n_nodes + node`` (see module docstring)."""
-        if self.inter is None:
-            return self.intra.reduce_scatter(x, accumulate)
-        if self.intra is None:
-            return self.inter.reduce_scatter(x, accumulate)
+        """Leading dim must divide the cluster rank count.  Rank
+        (pod, node, i) receives global segment ``(i * n + node) * p +
+        pod`` (see module docstring); with no pod tier that is the
+        2-tier ``i * n + node`` contract unchanged."""
+        tiers = self.comms()
+        if len(tiers) == 1:
+            return tiers[0].reduce_scatter(x, accumulate)
         if x.shape[0] % self.n_ranks != 0:
             raise ValueError(
                 f"leading dim {x.shape[0]} must divide the cluster rank "
                 f"count {self.n_ranks}")
-        s1 = self.intra.reduce_scatter(x, accumulate)   # [lead/m, ...]
-        return self.inter.reduce_scatter(s1, accumulate)
+        out = x
+        for c in tiers:
+            out = c.reduce_scatter(out, accumulate)
+        return out
+
+    def ep_all_to_all(self, x: jax.Array, split_axis: int = 0,
+                      concat_axis: int = 0) -> jax.Array:
+        """Rail-local expert all_to_all (DESIGN.md §15).
+
+        Decomposes the flat all_to_all over the combined
+        (pod, node, intra) axes into one per-tier all_to_all: the intra
+        shuffle re-sorts payload inside each box over NVLink, the node
+        leg moves each rank's cross-node slice over its OWN rail (rank
+        ``i`` of every node forms the rail-``i`` subgroup — the
+        rail-aligned pairing of ``ClusterTopology.rail_rings``), the pod
+        leg crosses the spine once with only the truly cross-pod bytes.
+        Each leg is an ordinary flex collective, so the node leg's
+        rail-vs-spine split is Stage-1/Stage-2 tuned per size bucket.
+
+        Bit-exact vs the flat reference: with combined rank order
+        ``g = (pod * n + node) * m + i`` (outermost-major, matching the
+        mesh axis order), the per-tier transposes commute and compose to
+        exactly the flat all_to_all's permutation.
+        """
+        tiers = self.comms()
+        if split_axis != concat_axis:
+            raise NotImplementedError(
+                "ep_all_to_all requires split_axis == concat_axis "
+                f"(got {split_axis} != {concat_axis})")
+        if len(tiers) == 1:
+            return tiers[0].all_to_all(x, split_axis, concat_axis)
+        N = self.n_ranks
+        moved = jnp.moveaxis(x, split_axis, 0)
+        if moved.shape[0] % N != 0:
+            raise ValueError(
+                f"split axis length {moved.shape[0]} must divide the "
+                f"cluster rank count {N}")
+        c = moved.shape[0] // N
+        sizes = tuple(t.n_ranks for t in reversed(tiers))  # (p, n, m)
+        shaped = moved.reshape(sizes + (c,) + moved.shape[1:])
+        k = len(tiers)
+        for i, t in enumerate(tiers):
+            ax = k - 1 - i       # intra transposes the innermost block axis
+            shaped = t.all_to_all(shaped, split_axis=ax, concat_axis=ax)
+        out = shaped.reshape(moved.shape)
+        return jnp.moveaxis(out, 0, split_axis)
 
     # -- control-plane plumbing ------------------------------------------------
 
     def plan_signature(self) -> Tuple:
         return tuple((c.axis_name, c.plan_signature()) for c in self.comms())
 
+    def a2a_report(self) -> Dict[str, object]:
+        """The ``a2a`` block of the cluster report: where expert-dispatch
+        bytes actually went.  Rail-local bytes are the node leg's
+        rail-share of its logged all_to_all payload; spine bytes are the
+        rest of the node leg plus everything the pod leg moved.  When no
+        replay log exists (``runtime_balancing=False`` dryruns) the slot
+        footprint prices one bucket-sized call per touched slot instead
+        — flagged ``"estimated"`` so consumers can tell the difference.
+        """
+        out: Dict[str, object] = {
+            "rail_local_bytes": 0, "spine_bytes": 0, "intra_bytes": 0,
+            "rail_balance": None, "source": "replay",
+        }
+        legs = [("intra", self.intra), ("inter", self.inter),
+                ("pod", self.pod)]
+        estimated = False
+        for tier, comm in legs:
+            if comm is None:
+                continue
+            total = comm.replayed_bytes(Collective.ALL_TO_ALL)
+            if total == 0:
+                buckets = comm.touched_buckets(Collective.ALL_TO_ALL)
+                if buckets:
+                    total = sum(buckets)
+                    estimated = True
+            if total == 0:
+                continue
+            if tier == "intra":
+                out["intra_bytes"] += total
+                continue
+            if tier == "pod":
+                # every cross-pod byte rides the spine by definition
+                out["spine_bytes"] += total
+                continue
+            # the node leg: split by the tuned rail-vs-spine fractions,
+            # bucket by bucket, and report the rail member balance
+            rail_frac_total = 0.0
+            weight = 0
+            primary = comm.profile.primary.name
+            for (op, bucket), sc in comm._slots.items():
+                if op is not Collective.ALL_TO_ALL:
+                    continue
+                fr = sc.fractions().get(primary, 0.0)
+                rail_frac_total += fr * bucket
+                weight += bucket
+                weights = sc.member_weights().get(primary)
+                if weights:
+                    w = list(weights.values())
+                    hi = max(w)
+                    out["rail_balance"] = (min(w) / hi) if hi else None
+            frac = (rail_frac_total / weight) if weight else 1.0
+            rail = int(total * frac)
+            out["rail_local_bytes"] += rail
+            out["spine_bytes"] += total - rail
+        if estimated:
+            out["source"] = "estimated"
+        return out
+
     def summary(self) -> Dict[str, object]:
-        """Topology + cross-tier rollup only — what ``ctx.comm_report()``
-        embeds, since it already carries each tier communicator's full
-        report under its axis key (duplicating them here would double
-        both the JSON and the per-slot describe() work)."""
+        """Topology + cross-tier rollup + a2a accounting — what
+        ``ctx.comm_report()`` embeds, since it already carries each tier
+        communicator's full report under its axis key (duplicating them
+        here would double both the JSON and the per-slot describe()
+        work)."""
         return {
             "topology": self.topology.describe(),
             "rollup": SlotController.rollup(
                 sc for c in self.comms() for sc in c.slot_controllers()),
+            "a2a": self.a2a_report(),
         }
 
     def report(self) -> Dict[str, object]:

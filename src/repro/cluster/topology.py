@@ -19,7 +19,13 @@ This module makes the node count a first-class axis:
   tier profile's name;
 * ``flatten()`` is the N=1 view — the bare node profile — so every
   existing single-node code path is the degenerate special case, not a
-  parallel implementation.
+  parallel implementation;
+* at pod scale (DESIGN.md §15) a third **pod/DCN tier** composes on top:
+  ``pods`` pods of ``n_nodes`` nodes each, joined by oversubscribed
+  spine uplinks expressed as yet another ``NodeProfile``
+  (``tier="pod"``), so the same Stage-1/Stage-2 machinery, member
+  drains, codecs and fault timelines apply to the cross-pod fabric
+  unchanged.  ``pods=1`` is bit-identical to the 2-tier view.
 
 Tier profiles are synthesized deterministically from their parameters and
 registered in ``links.PROFILES`` under ``<cluster>:nic``, so
@@ -31,7 +37,7 @@ for a box.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.links import (LinkKind, LinkSpec, NodeProfile, PROFILES,
                               degrade_profile, parse_degrade,
@@ -56,15 +62,43 @@ TCP_STEP_US = 20.0
 TCP_FIXED_US = 50.0
 INTER_HOP_US = 2.0              # per-ring-step switch traversal
 
+#: pod/DCN tier constants (DESIGN.md §15) — same physically-motivated
+#: discipline.  A pod's uplinks terminate on the datacenter spine: a
+#: cross-pod hop pays multiple switch traversals (leaf -> spine -> leaf)
+#: and the spine is *oversubscribed* — the provisioned cross-pod
+#: bisection is a fraction of the sum of pod uplink line rates.  The
+#: cross-spine-block detour and the frontend WAN path are the tier's
+#: secondary routes.
+SPINE_STEP_US = 8.0
+SPINE_FIXED_US = 40.0
+SPINE_EFFICIENCY = 0.35         # effective / raw for the spine uplinks
+XSPINE_STEP_US = 15.0
+XSPINE_FIXED_US = 80.0
+XSPINE_EFFICIENCY = 0.20
+POD_TCP_RAW_GBPS = 25.0         # frontend NICs again, now pod-aggregate
+POD_TCP_EFFECTIVE_GBPS = 4.0
+POD_TCP_STEP_US = 40.0
+POD_TCP_FIXED_US = 120.0
+POD_HOP_US = 5.0                # per-ring-step cross-pod switch traversals
+DEFAULT_OVERSUBSCRIPTION = 4.0  # spine oversubscription factor
+
 
 @dataclasses.dataclass(frozen=True)
 class ClusterTopology:
-    """N homogeneous nodes + the NIC tier between them.
+    """N homogeneous nodes + the NIC tier between them (+ a pod tier).
 
     ``nic_tier`` is a synthetic :class:`NodeProfile` (``tier="inter"``)
     whose primary is the rail-aligned NIC path; ``nics_per_node`` rails of
     ``nic_gbit`` Gb/s each, rail-aligned across nodes when
     ``rail_aligned`` (the pairing :meth:`rail_rings` describes).
+
+    ``pod_tier`` (DESIGN.md §15) is the optional third tier: the
+    cross-pod DCN fabric between ``n_pods`` pods of ``n_nodes`` nodes
+    each, another synthetic :class:`NodeProfile` (``tier="pod"``) whose
+    primary is the oversubscribed spine uplink pool.  ``pods=1`` keeps
+    ``pod_tier=None`` and every field at its default — the 2-tier view
+    is bit-identical to a topology built before the pod tier existed
+    (the parity contract the tests pin).
     """
 
     name: str
@@ -74,12 +108,24 @@ class ClusterTopology:
     nics_per_node: int
     nic_gbit: float
     rail_aligned: bool = True
+    n_pods: int = 1
+    pod_tier: Optional[NodeProfile] = None
+    pod_uplinks: int = 0
+    pod_gbit: float = 0.0
+    oversubscription: float = DEFAULT_OVERSUBSCRIPTION
 
     def __post_init__(self):
         if self.n_nodes < 1:
             raise ValueError(f"n_nodes must be >= 1, got {self.n_nodes}")
         if self.nics_per_node < 1:
             raise ValueError("nics_per_node must be >= 1")
+        if self.n_pods < 1:
+            raise ValueError(f"n_pods must be >= 1, got {self.n_pods}")
+        if (self.n_pods > 1) != (self.pod_tier is not None):
+            raise ValueError(
+                "pod_tier must be set exactly when n_pods > 1 "
+                f"(n_pods={self.n_pods}, pod_tier="
+                f"{getattr(self.pod_tier, 'name', None)!r})")
 
     # -- views -----------------------------------------------------------------
 
@@ -90,18 +136,28 @@ class ClusterTopology:
 
     @property
     def hierarchical(self) -> bool:
-        return self.n_nodes > 1
+        return self.n_nodes > 1 or self.n_pods > 1
 
     @property
     def tiers(self) -> Tuple[str, ...]:
-        return ("intra", "inter") if self.hierarchical else ("intra",)
+        out: Tuple[str, ...] = ("intra",)
+        if self.n_nodes > 1:
+            out += ("inter",)
+        if self.n_pods > 1:
+            out += ("pod",)
+        return out
 
     def tier_profile(self, tier: str) -> NodeProfile:
         if tier == "intra":
             return self.node
         if tier == "inter":
             return self.nic_tier
-        raise KeyError(f"unknown tier {tier!r} (intra|inter)")
+        if tier == "pod":
+            if self.pod_tier is None:
+                raise KeyError(
+                    f"cluster {self.name!r} has no pod tier (n_pods=1)")
+            return self.pod_tier
+        raise KeyError(f"unknown tier {tier!r} (intra|inter|pod)")
 
     def rail_rings(self) -> Dict[int, List[Tuple[int, int]]]:
         """Rail-aligned NIC pairing: for each rail, the directed ring
@@ -115,7 +171,7 @@ class ClusterTopology:
         return {rail: list(ring) for rail in range(self.nics_per_node)}
 
     def describe(self) -> Dict[str, object]:
-        return {
+        out: Dict[str, object] = {
             "name": self.name,
             "node_profile": self.node.name,
             "n_nodes": self.n_nodes,
@@ -125,6 +181,17 @@ class ClusterTopology:
             "rail_aligned": self.rail_aligned,
             "tiers": list(self.tiers),
         }
+        # pod keys are additive-only: a pods=1 topology describes itself
+        # byte-identically to the pre-pod 2-tier view (parity contract).
+        if self.n_pods > 1:
+            out.update({
+                "n_pods": self.n_pods,
+                "pod_tier": self.pod_tier.name,
+                "pod_uplinks": self.pod_uplinks,
+                "pod_gbit": self.pod_gbit,
+                "oversubscription": self.oversubscription,
+            })
+        return out
 
 
 def _gbits(gbps: float) -> float:
@@ -185,27 +252,106 @@ def make_nic_tier(node: NodeProfile, *, nics_per_node: int = 4,
                        inter_hop_us=INTER_HOP_US)
 
 
+def pod_tier_name(node_name: str, pod_uplinks: int, pod_gbit: float,
+                  oversubscription: float) -> str:
+    """Deterministic pod-tier profile name — like :func:`nic_tier_name`,
+    a pure function of EVERY parameter the tier's constants derive from
+    (and of nothing else: not the pod count, not the node count — so
+    elastic node loss and resume at a different scale hit the same
+    TuningProfile entries, the ``drop_node`` contract one tier up)."""
+    return (f"{node_name}:pod{pod_uplinks}x{pod_gbit:g}"
+            f"os{oversubscription:g}")
+
+
+def make_pod_tier(node: NodeProfile, *, pod_uplinks: int = 4,
+                  pod_gbit: float = 400.0,
+                  oversubscription: float = DEFAULT_OVERSUBSCRIPTION
+                  ) -> NodeProfile:
+    """Synthesize the pod/DCN tier profile (DESIGN.md §15).
+
+    Three aggregatable cross-pod routes, mapping onto the same
+    (primary, staged, ortho) route slots every tier uses:
+
+      spine   : the pod's spine uplinks in parallel — the tier's primary.
+                Oversubscription divides the *provisioned* (raw)
+                bandwidth: the spine admits 1/oversubscription of the
+                uplink line rate as cross-pod bisection.  One explicit
+                LinkMember per uplink, so member drains, fault timelines
+                and Stage-2 balancing apply to the pod tier unchanged;
+      xspine  : the detour through a neighboring spine block — more
+                switch hops, congestion-discounted bandwidth;
+      pod_tcp : the frontend/WAN path — slow, but idle during
+                collectives.
+    """
+    if pod_uplinks < 1:
+        raise ValueError("pod_uplinks must be >= 1")
+    if oversubscription < 1.0:
+        raise ValueError(
+            f"oversubscription must be >= 1, got {oversubscription}")
+    raw = pod_uplinks * _gbits(pod_gbit) * 2.0 / oversubscription
+    links = (
+        LinkSpec("spine", LinkKind.DCN_SPINE, raw_GBps=raw,
+                 effective_GBps=SPINE_EFFICIENCY * raw,
+                 step_latency_us=SPINE_STEP_US,
+                 fixed_overhead_us=SPINE_FIXED_US).with_members(
+                     [f"spine{i}" for i in range(pod_uplinks)]),
+        LinkSpec("xspine", LinkKind.RDMA, raw_GBps=raw,
+                 effective_GBps=XSPINE_EFFICIENCY * raw,
+                 step_latency_us=XSPINE_STEP_US,
+                 fixed_overhead_us=XSPINE_FIXED_US),
+        LinkSpec("pod_tcp", LinkKind.DCN, raw_GBps=POD_TCP_RAW_GBPS,
+                 effective_GBps=POD_TCP_EFFECTIVE_GBPS,
+                 step_latency_us=POD_TCP_STEP_US,
+                 fixed_overhead_us=POD_TCP_FIXED_US),
+    )
+    return NodeProfile(name=pod_tier_name(node.name, pod_uplinks, pod_gbit,
+                                          oversubscription),
+                       links=links, tier="pod",
+                       inter_hop_us=POD_HOP_US)
+
+
 def make_cluster(node: Union[str, NodeProfile], n_nodes: int, *,
                  nics_per_node: int = 4, nic_gbit: float = 400.0,
                  rail_aligned: bool = True,
+                 pods: int = 1, pod_uplinks: int = 0,
+                 pod_gbit: float = 0.0,
+                 oversubscription: float = DEFAULT_OVERSUBSCRIPTION,
                  name: str = "") -> ClusterTopology:
     """Build (and register the tier profiles of) one cluster topology.
 
     ``node`` is a profile name from ``links.PROFILES`` or a NodeProfile.
-    The NIC tier profile is registered under a deterministic name so
-    ``CommConfig(profile=nic_tier.name)`` resolves in any process that
-    built the same cluster.
+    The tier profiles are registered under deterministic names so
+    ``CommConfig(profile=<tier>.name)`` resolves in any process that
+    built the same cluster.  ``pods=1`` (the default) builds exactly the
+    2-tier topology this function always built — no pod profile is
+    synthesized or registered, and the default cluster name is
+    unchanged.  ``pods>1`` adds the pod tier: ``pod_uplinks`` spine
+    uplinks of ``pod_gbit`` Gb/s per pod (defaulting to the NIC-tier
+    figures), divided by ``oversubscription``.
     """
     prof = PROFILES[node] if isinstance(node, str) else node
     register_profile(prof)
     nic = register_profile(make_nic_tier(prof, nics_per_node=nics_per_node,
                                          nic_gbit=nic_gbit,
                                          rail_aligned=rail_aligned))
+    if pods <= 1:
+        return ClusterTopology(
+            name=name or f"{n_nodes}x{prof.name}",
+            node=prof, n_nodes=n_nodes, nic_tier=nic,
+            nics_per_node=nics_per_node, nic_gbit=nic_gbit,
+            rail_aligned=rail_aligned)
+    pod_uplinks = pod_uplinks or nics_per_node
+    pod_gbit = pod_gbit or nic_gbit
+    pod = register_profile(make_pod_tier(prof, pod_uplinks=pod_uplinks,
+                                         pod_gbit=pod_gbit,
+                                         oversubscription=oversubscription))
     return ClusterTopology(
-        name=name or f"{n_nodes}x{prof.name}",
+        name=name or f"{pods}pod{n_nodes}x{prof.name}",
         node=prof, n_nodes=n_nodes, nic_tier=nic,
         nics_per_node=nics_per_node, nic_gbit=nic_gbit,
-        rail_aligned=rail_aligned)
+        rail_aligned=rail_aligned,
+        n_pods=pods, pod_tier=pod, pod_uplinks=pod_uplinks,
+        pod_gbit=pod_gbit, oversubscription=oversubscription)
 
 
 def degrade_cluster(cluster: ClusterTopology, spec: str) -> ClusterTopology:
@@ -224,6 +370,14 @@ def degrade_cluster(cluster: ClusterTopology, spec: str) -> ClusterTopology:
                                    nic_tier=nic)
     except KeyError:
         pass
+    if cluster.pod_tier is not None:
+        try:
+            pod = degrade_profile(cluster.pod_tier, spec)
+            return dataclasses.replace(cluster,
+                                       name=f"{cluster.name}!{spec}",
+                                       pod_tier=pod)
+        except KeyError:
+            pass
     node = degrade_profile(cluster.node, spec)   # KeyError if absent there too
     return dataclasses.replace(cluster, name=f"{cluster.name}!{spec}",
                                node=node)
@@ -250,12 +404,15 @@ def drop_node(cluster: ClusterTopology, node_index: int) -> ClusterTopology:
                                n_nodes=cluster.n_nodes - 1)
 
 
-def cluster_for(profile: str, n_nodes: int) -> ClusterTopology:
+def cluster_for(profile: str, n_nodes: int,
+                pods: int = 1) -> ClusterTopology:
     """Default cluster for one intra-node profile — what the launchers
-    synthesize for ``--nodes N`` when no named cluster is given.  GPU
-    boxes get the 4x400Gb rail config; the TPU profile gets a 2x200Gb
-    DCN-class tier."""
+    synthesize for ``--nodes N`` (and ``--pods P``) when no named cluster
+    is given.  GPU boxes get the 4x400Gb rail config; the TPU profile
+    gets a 2x200Gb DCN-class tier.  ``pods>1`` adds the default pod tier
+    (uplinks/Gb mirroring the NIC tier, 4:1 oversubscription)."""
     if profile.startswith("tpu"):
         return make_cluster(profile, n_nodes, nics_per_node=2,
-                            nic_gbit=200.0)
-    return make_cluster(profile, n_nodes, nics_per_node=4, nic_gbit=400.0)
+                            nic_gbit=200.0, pods=pods)
+    return make_cluster(profile, n_nodes, nics_per_node=4, nic_gbit=400.0,
+                        pods=pods)

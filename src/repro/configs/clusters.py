@@ -35,6 +35,19 @@ _BUILDERS: Dict[str, Callable[[], ClusterTopology]] = {
     "4xtpu_v5e_dcn": lambda: make_cluster(
         "tpu_v5e", 4, nics_per_node=2, nic_gbit=200.0,
         name="4xtpu_v5e_dcn"),
+    # 3-tier entries (DESIGN.md §15): pods of rail-aligned H800 nodes
+    # joined by an oversubscribed DCN spine.  The CI pod-smoke target:
+    "2pod2xh800_rail4": lambda: make_cluster(
+        "h800", 2, nics_per_node=4, nic_gbit=400.0, pods=2,
+        name="2pod2xh800_rail4"),
+    # the kimi_k2_1t_a32b expert-parallel multi-pod scenario: 4 pods x
+    # 4 nodes of H800 with 4x400Gb rails per node, 8x400Gb spine uplinks
+    # per pod at 4:1 oversubscription — the simulated fabric the
+    # pod_a2a benchmark prices rail-local dispatch against
+    "4pod4xh800_ep": lambda: make_cluster(
+        "h800", 4, nics_per_node=4, nic_gbit=400.0, pods=4,
+        pod_uplinks=8, pod_gbit=400.0, oversubscription=4.0,
+        name="4pod4xh800_ep"),
 }
 
 CLUSTER_IDS: List[str] = sorted(_BUILDERS)
@@ -56,20 +69,23 @@ def all_clusters() -> Dict[str, ClusterTopology]:
     return {n: get_cluster(n) for n in CLUSTER_IDS}
 
 
-def resolve_cluster(cluster_name: str, nodes: int):
-    """Shared launcher logic: (ClusterTopology | None, effective nodes).
+def resolve_cluster(cluster_name: str, nodes: int, pods: int = 0):
+    """Shared launcher logic:
+    ``(ClusterTopology | None, effective nodes, effective pods)``.
 
-    ``nodes <= 0`` means the flag was not given (launchers default
-    ``--nodes`` to 0): a named cluster then implies its node count —
-    silently running it single-node would report a hierarchy that never
-    lowered.  An EXPLICIT ``--nodes`` always wins: ``--nodes 1`` with a
-    cluster is a deliberate flat run on the cluster's node type, and an
-    explicit multi-node count must match the topology (the ParallelCtx
+    ``nodes <= 0`` / ``pods <= 0`` mean the flag was not given (launchers
+    default ``--nodes``/``--pods`` to 0): a named cluster then implies
+    its node AND pod counts — silently running a 3-tier cluster without
+    its pod axis would report a hierarchy that never lowered.  An
+    EXPLICIT flag always wins: ``--nodes 1`` with a cluster is a
+    deliberate flat run on the cluster's node type, and an explicit
+    multi-node/multi-pod count must match the topology (the ParallelCtx
     validation enforces it)."""
     if not cluster_name:
-        return None, max(nodes, 1)
+        return None, max(nodes, 1), max(pods, 1)
     cluster = get_cluster(cluster_name)
-    return cluster, (nodes if nodes > 0 else cluster.n_nodes)
+    return (cluster, (nodes if nodes > 0 else cluster.n_nodes),
+            (pods if pods > 0 else cluster.n_pods))
 
 
 def resolve_degrade(cluster, nodes: int, profile: str, spec: str):
@@ -84,7 +100,7 @@ def resolve_degrade(cluster, nodes: int, profile: str, spec: str):
 
 
 def resolve_faults(cluster, nodes: int, profile: str, *,
-                   degrade: str = "", fault: str = ""):
+                   degrade: str = "", fault: str = "", pods: int = 1):
     """Shared launcher logic for ``--degrade``/``--fault``: returns
     ``(cluster, profile, timeline)`` where ``timeline`` is the
     :class:`~repro.faults.HealthTimeline` of the DYNAMIC events (None
@@ -125,9 +141,14 @@ def resolve_faults(cluster, nodes: int, profile: str, *,
     from repro.cluster.topology import cluster_for, degrade_cluster
     from repro.core.links import PROFILES, degrade_profile
     if cluster is None and nodes > 1:
-        cluster = cluster_for(profile, nodes)
-    tiers = ([cluster.nic_tier, cluster.node] if cluster is not None
-             else [PROFILES[profile]])
+        cluster = cluster_for(profile, nodes, pods=max(pods, 1))
+    if cluster is not None:
+        tiers = [cluster.nic_tier]
+        if cluster.pod_tier is not None:
+            tiers.append(cluster.pod_tier)
+        tiers.append(cluster.node)
+    else:
+        tiers = [PROFILES[profile]]
     n_nodes = cluster.n_nodes if cluster is not None else max(nodes, 1)
     canonical = validate_schedule(events, profiles=tiers, n_nodes=n_nodes)
     static = [ev for ev, can in zip(events, canonical)

@@ -405,6 +405,23 @@ class FlexCommunicator:
         """Default-recorder replay multiset (direct, program-less use)."""
         return self._default_recorder.issued_calls()
 
+    def replayed_bytes(self, op: Collective) -> int:
+        """Total logged payload bytes for one collective across EVERY
+        replay recorder (default + per-program) — the byte accounting
+        behind the cluster report's ``a2a`` block (DESIGN.md §15)."""
+        total = 0
+        for rec in (self._default_recorder, *self._recorders.values()):
+            for o, nbytes, _window in rec.issued_calls():
+                if o is op:
+                    total += int(nbytes)
+        return total
+
+    def touched_buckets(self, op: Collective) -> list:
+        """Size buckets of the live slots for one collective — the
+        footprint fallback when no replay log exists (dryrun runs with
+        ``runtime_balancing=False``, so the log never grows there)."""
+        return sorted(b for (o, b) in self._slots if o is op)
+
     def reset_issued(self) -> None:
         """Clear EVERY replay log — the default recorder and all registered
         program recorders.  Explicit-isolation tool only (tests, retiring a

@@ -33,14 +33,17 @@ class LinkKind(enum.Enum):
     NIC_RAIL = "nic_rail"      # inter-node tier: rail-aligned RDMA NICs —
     #                            the primary fabric of the NIC tier
     #                            (repro.cluster, DESIGN.md §9)
+    DCN_SPINE = "dcn_spine"    # pod tier: the cross-pod spine uplinks —
+    #                            the primary fabric of the pod/DCN tier
+    #                            (repro.cluster, DESIGN.md §15)
 
 
 #: Link kinds that count as the "primary" path (NVLink-centric logic in
 #: Algorithm 1 favors these).  NIC_RAIL is the primary of the *inter-node*
-#: tier: within that tier the rail-aligned rails play the role NVLink plays
-#: inside the box.
+#: tier, DCN_SPINE of the *pod* tier: within each tier the tier's fast
+#: fabric plays the role NVLink plays inside the box.
 PRIMARY_KINDS = frozenset({LinkKind.NVLINK, LinkKind.ICI_PRIMARY,
-                           LinkKind.NIC_RAIL})
+                           LinkKind.NIC_RAIL, LinkKind.DCN_SPINE})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,12 +196,14 @@ class LinkSpec:
 class NodeProfile:
     """A machine profile: the set of aggregatable links + contention rule.
 
-    A profile can describe either fabric *tier* of a cluster
-    (``repro.cluster``, DESIGN.md §9): ``tier="intra"`` is one box's link
-    pool (the seed meaning — every pre-cluster profile), ``tier="inter"``
-    is the NIC tier between boxes, whose "primary" is the rail-aligned
-    NIC path.  ``inter_hop_us`` is the extra per-ring-step latency an
-    inter-node hop pays for switch traversal — zero inside a box.
+    A profile can describe any fabric *tier* of a cluster
+    (``repro.cluster``, DESIGN.md §9, §15): ``tier="intra"`` is one box's
+    link pool (the seed meaning — every pre-cluster profile),
+    ``tier="inter"`` is the NIC tier between boxes, whose "primary" is
+    the rail-aligned NIC path, and ``tier="pod"`` is the cross-pod
+    DCN tier whose primary is the oversubscribed spine uplink pool.
+    ``inter_hop_us`` is the extra per-ring-step latency an inter-node
+    (or cross-pod) hop pays for switch traversal — zero inside a box.
     """
 
     name: str
@@ -206,7 +211,7 @@ class NodeProfile:
     #: bandwidth ceiling (GB/s, unidirectional payload) for all routes with
     #: ``shares_pcie_switch=True`` together; None = no contention.
     pcie_switch_ceiling_GBps: Optional[float] = None
-    #: which cluster tier this profile describes: "intra" | "inter".
+    #: which cluster tier this profile describes: "intra" | "inter" | "pod".
     tier: str = "intra"
     #: per-ring-step switch-traversal latency (us) added by the timing
     #: model on every step — the inter-node hop cost (simulator.py).

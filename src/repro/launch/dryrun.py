@@ -40,22 +40,23 @@ def _sds_batch(cfg, shape, mesh):
     return SH.input_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
 
 
-def default_node_split(nodes: int):
+def default_node_split(nodes: int, pods: int = 1):
     """(data, model) split for an N-node mesh with no --mesh-split: the
     largest power-of-two pod slice that fits the 512 forced CPU devices
-    (nodes * d * m <= 512), model axis first up to the production 16."""
-    budget = max(512 // max(nodes, 1), 1)
+    (pods * nodes * d * m <= 512), model axis first up to the production
+    16."""
+    budget = max(512 // max(nodes * max(pods, 1), 1), 1)
     m = min(budget, 16)
     return (max(budget // m, 1), m)
 
 
-def node_layout(nodes: int, mesh_split):
+def node_layout(nodes: int, mesh_split, pods: int = 1):
     """The (data, model) split an N-node run uses — ONE derivation shared
     by run_one (which builds the mesh from it) and main (which names the
     result-cache file from it), so the cache tag can never describe a
     different layout than the one that actually ran."""
     return (tuple(mesh_split) if mesh_split is not None
-            else default_node_split(nodes))
+            else default_node_split(nodes, pods))
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
@@ -64,7 +65,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             tuning_cache: str = "", secondary_algo: str = "ring",
             nodes: int = 1, cluster_name: str = "",
             degrade: str = "", bucket_mb: float = 0.0,
-            compress: str = "", fault: str = "") -> dict:
+            compress: str = "", fault: str = "",
+            cluster_pods: int = 0) -> dict:
     """mesh_split: optional (data, model) reshape of the 256-chip pod —
     the TP-degree tuning lever of EXPERIMENTS §Perf.  remat: True | False |
     "dots" (selective checkpointing).  tuning_cache: TuningProfile JSON —
@@ -73,6 +75,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     nodes > 1 prepends a simulated "node" axis (repro.cluster): the step
     lowers the two-tier hierarchical gradient sync and the NIC tier's
     slots tune (and warm-start) like any other.
+    cluster_pods > 1 prepends a "pod" axis above the node axis: the step
+    lowers the THREE-level hierarchical sync over the pod/DCN tier and
+    MoE dispatch becomes the rail-local ep all_to_all (DESIGN.md §15).
     degrade: a ``name[:member]=factor`` fault spec (DESIGN.md §10):
     scales one link member's effective bandwidth — the degraded tier
     profile gets a distinct name, so its tuning (which drains exactly the
@@ -84,18 +89,25 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     cfg = get_config(arch)
     shape = SH.SHAPES[shape_name]
     from repro.configs.clusters import resolve_cluster, resolve_faults
-    cluster, nodes = resolve_cluster(cluster_name, nodes)
+    cluster, nodes, cluster_pods = resolve_cluster(cluster_name, nodes,
+                                                   cluster_pods)
     cluster, intra_profile, timeline = resolve_faults(
         cluster, nodes, cluster.node.name if cluster else "tpu_v5e",
-        degrade=degrade, fault=fault)
+        degrade=degrade, fault=fault, pods=cluster_pods)
+    if cluster_pods > 1 and nodes <= 1:
+        raise ValueError("--pods > 1 needs a multi-node run (--nodes or a "
+                         "3-tier --cluster): the pod tier composes above "
+                         "the NIC tier")
     if nodes > 1:
         if multi_pod:
             raise ValueError("--nodes does not combine with the multi-pod "
                              "mesh (pick one outer axis)")
         from repro.launch.mesh import make_cluster_mesh
-        split = node_layout(nodes, mesh_split)
-        mesh = make_cluster_mesh(nodes, *split)
+        split = node_layout(nodes, mesh_split, cluster_pods)
+        mesh = make_cluster_mesh(nodes, *split, pods=cluster_pods)
         mesh_name = f"nodes{nodes}x{split[0]}x{split[1]}"
+        if cluster_pods > 1:
+            mesh_name = f"pods{cluster_pods}-" + mesh_name
     elif mesh_split is not None and not multi_pod:
         import jax as _jax
         mesh = _jax.make_mesh(tuple(mesh_split), ("data", "model"))
@@ -218,6 +230,18 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     wire_scale = (wire_total / wire_logical
                   if compress and wire_logical else 1.0)
 
+    # cluster rollup + MoE-dispatch split (DESIGN.md §15): the composed
+    # tiers' slot rollups ride the record, and the a2a block shows how
+    # dispatch bytes divided between rail-local NIC legs and the spine
+    cluster_rep = (comm_rep.get("cluster")
+                   if isinstance(comm_rep, dict) else None)
+    if isinstance(cluster_rep, dict) and "a2a" in cluster_rep:
+        a2a = cluster_rep["a2a"]
+        print(f"  [a2a] rail_local={a2a['rail_local_bytes']}B "
+              f"spine={a2a['spine_bytes']}B intra={a2a['intra_bytes']}B "
+              f"rail_balance={a2a['rail_balance']:.2f} ({a2a['source']})",
+              flush=True)
+
     cost = compiled.cost_analysis() or {}
     # older JAX returns a one-element list of dicts (one per computation)
     if isinstance(cost, (list, tuple)):
@@ -248,7 +272,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     # the node axis is an outer data-parallel dimension for the analytic
     # cost model (its collective bytes ride the NIC tier, not ICI)
     cm = cost_model(cfg, shape, tp=tp, dp=dp * mesh_nodes(mesh), pods=pods,
-                    backend=backend, remat=remat)
+                    backend=backend, remat=remat,
+                    # 3-tier cluster mesh: experts shard over the full ep
+                    # span, so the pod AR excludes expert params
+                    ep_over_pods=cluster_pods > 1)
     t_compute = cm.flops_total / (chips * PEAK_FLOPS)
     t_memory = cm.hbm_bytes / (chips * HBM_BW)
     t_collective = cm.collective_bytes / (chips * ICI_BW)
@@ -305,6 +332,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "degrade": degrade,
         **({"fault": fault, "faults": fault_proj} if fault else {}),
         **({"compress": compress} if compress else {}),
+        **({"cluster": cluster_rep} if isinstance(cluster_rep, dict)
+           else {}),
         "tuning": tuning_status,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory_analysis": mem_report,
@@ -344,6 +373,12 @@ def main(argv=None) -> int:
     ap.add_argument("--cluster", default="",
                     help="named cluster topology from configs/clusters.py "
                          "(default: synthesized from the tpu_v5e profile)")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="simulated pod count: prepends a 'pod' axis above "
+                         "the node axis so the step lowers the THREE-level "
+                         "hierarchical sync over the pod/DCN tier and the "
+                         "rail-local MoE all_to_all (DESIGN.md §15).  A "
+                         "3-tier --cluster implies its pod count")
     ap.add_argument("--degrade", default="",
                     help="fault injection name[:member]=factor: scale one "
                          "link member's effective bandwidth (e.g. "
@@ -380,7 +415,7 @@ def main(argv=None) -> int:
     mesh_split = (tuple(int(x) for x in args.mesh_split.split(","))
                   if args.mesh_split else None)
     from repro.configs.clusters import resolve_cluster
-    _, nodes = resolve_cluster(args.cluster, args.nodes)
+    _, nodes, pods = resolve_cluster(args.cluster, args.nodes, args.pods)
 
     pairs = []
     archs = sorted(ALIASES) if args.all else [args.arch]
@@ -398,11 +433,13 @@ def main(argv=None) -> int:
     for arch, shape_name, mesh_name in pairs:
         tag = f"{arch}__{shape_name}__{mesh_name}__{args.backend}"
         if nodes > 1:
-            # encode the full layout (base mesh, node count, split, named
-            # cluster) so runs differing in ANY of them never share a
-            # cache file
-            split = node_layout(nodes, mesh_split)
+            # encode the full layout (base mesh, pod/node counts, split,
+            # named cluster) so runs differing in ANY of them never share
+            # a cache file
+            split = node_layout(nodes, mesh_split, pods)
             extra = f"nodes{nodes}x{split[0]}x{split[1]}"
+            if pods > 1:
+                extra = f"pods{pods}-" + extra
             if args.cluster:
                 extra += f"-{args.cluster}"
             tag = (f"{arch}__{shape_name}__{mesh_name}-{extra}__"
@@ -440,7 +477,8 @@ def main(argv=None) -> int:
                           secondary_algo=args.secondary_algo,
                           nodes=nodes, cluster_name=args.cluster,
                           degrade=args.degrade, bucket_mb=args.bucket_mb,
-                          compress=args.compress, fault=args.fault)
+                          compress=args.compress, fault=args.fault,
+                          cluster_pods=pods)
         except Exception as e:
             traceback.print_exc()
             rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,

@@ -6,6 +6,9 @@ pod axis crosses DCN.
 Multi-node: (N, d, m), axes ("node", "data", "model") — the node axis
 crosses the cluster's NIC tier (repro.cluster, DESIGN.md §9); on CPU it
 is simulated by mesh reshape exactly like ``--mesh-split``.
+Multi-pod cluster: (P, N, d, m), axes ("pod", "node", "data", "model") —
+the pod axis crosses the pod/DCN tier of a 3-tier ClusterTopology
+(DESIGN.md §15).
 
 Functions, not module-level constants: importing this module never touches
 jax device state (the dry-run sets XLA_FLAGS before any jax init).
@@ -34,8 +37,14 @@ def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
-def make_cluster_mesh(nodes: int, dp: int, tp: int):
-    """Simulated multi-node mesh: ("node", "data", "model")."""
+def make_cluster_mesh(nodes: int, dp: int, tp: int, pods: int = 1):
+    """Simulated multi-node mesh: ("node", "data", "model"), growing a
+    leading pod axis — ("pod", "node", "data", "model") — when
+    ``pods > 1``.  ``pods=1`` builds exactly the 3-axis mesh this
+    function always built (axis order and all), the parity case."""
+    if pods > 1:
+        return jax.make_mesh((pods, nodes, dp, tp),
+                             ("pod", "node", "data", "model"))
     return jax.make_mesh((nodes, dp, tp), ("node", "data", "model"))
 
 

@@ -103,6 +103,11 @@ def main(argv=None) -> int:
                          "on the ctx.  This launcher itself is "
                          "single-device — the decode wave never crosses "
                          "the NIC tier (launch/shapes.py)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod count for the registered topology: with "
+                         "--nodes > 1 the synthesized cluster grows the "
+                         "pod/DCN tier (DESIGN.md §15) so tuning-cache "
+                         "keys line up with 3-tier launches")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -116,10 +121,10 @@ def main(argv=None) -> int:
     cluster = None
     if args.nodes > 1:
         from repro.cluster.topology import cluster_for
-        cluster = cluster_for(profile, args.nodes)
+        cluster = cluster_for(profile, args.nodes, pods=max(args.pods, 1))
     cluster, profile, timeline = resolve_faults(
         cluster, args.nodes, profile,
-        degrade=args.degrade, fault=args.fault)
+        degrade=args.degrade, fault=args.fault, pods=max(args.pods, 1))
     if timeline is not None and any(e.kind == "node"
                                     for e in timeline.events):
         raise SystemExit("--fault node events need the training loop's "

@@ -77,7 +77,10 @@ def _train_builder(cfg: ArchConfig, mesh: Mesh, *,
     ctx = make_ctx(mesh, comm, cluster=cluster)
     opt = opt or AdamWConfig()
     shape = shape or SH.SHAPES["train_4k"]
-    psp = param_specs(cfg)
+    # the expert dim shards over the ctx's ep span (data, plus node/pod
+    # on a cluster mesh — DESIGN.md §15); ctx and specs must agree on
+    # the combined rank order, so the ctx is the single authority
+    psp = param_specs(cfg, data_axis=ctx.ep_spec_axis() or "data")
     osp = opt_state_specs(psp)
     if bucket_mb > 0 and ctx.ef_codec_name():
         # lossy wire codec + bucketed sync: the opt state is
@@ -138,7 +141,7 @@ def _prefill_builder(cfg: ArchConfig, mesh: Mesh, *,
                      remat: bool, cluster=None):
     ctx = make_ctx(mesh, comm, cluster=cluster)
     shape = shape or SH.SHAPES["prefill_32k"]
-    psp = param_specs(cfg)
+    psp = param_specs(cfg, data_axis=ctx.ep_spec_axis() or "data")
     bsp = _batch_specs(cfg, shape, mesh)
     pods, dp, tp = mesh_dims(mesh)
     ba = SH.batch_axes(pods, mesh_nodes(mesh))
@@ -182,7 +185,7 @@ def _serve_builder(cfg: ArchConfig, mesh: Mesh, shape: SH.InputShape, *,
     ctx = make_ctx(mesh, comm, cluster=cluster)
     pods, dp, tp = mesh_dims(mesh)
     dcfg = SH.decode_config(cfg, shape, tp=tp, dp=dp)
-    psp = param_specs(cfg)
+    psp = param_specs(cfg, data_axis=ctx.ep_spec_axis() or "data")
     isp = SH.input_partition_specs(cfg, shape, tp=tp, dp=dp, pods=pods)
     tok_b = isp["token"][0]
     out_logits = P(tok_b, "model")      # [B, V_local] — vocab stays sharded

@@ -48,6 +48,12 @@ def main(argv=None) -> int:
     ap.add_argument("--cluster", default="",
                     help="named cluster topology from configs/clusters.py "
                          "(default: synthesized from the comm profile)")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="simulated pod count: prepends a 'pod' axis to "
+                         "the cluster mesh; gradient sync becomes the "
+                         "three-level hierarchical AllReduce over the "
+                         "pod/DCN tier (DESIGN.md §15).  A 3-tier "
+                         "--cluster implies its pod count")
     ap.add_argument("--degrade", default="",
                     help="launch-time fault injection name[:member]=factor "
                          "(e.g. rail3=0.25): scale one link member's "
@@ -104,20 +110,25 @@ def main(argv=None) -> int:
     shape = SH.InputShape("cli", "train", args.seq_len, args.batch)
 
     from repro.configs.clusters import resolve_cluster, resolve_faults
-    cluster, n_nodes = resolve_cluster(args.cluster, args.nodes)
+    cluster, n_nodes, n_pods = resolve_cluster(args.cluster, args.nodes,
+                                               args.pods)
     cluster, intra_profile, timeline = resolve_faults(
         cluster, n_nodes, cluster.node.name if cluster else "tpu_v5e",
-        degrade=args.degrade, fault=args.fault)
+        degrade=args.degrade, fault=args.fault, pods=n_pods)
 
     if args.mesh_shape:
         dims = tuple(int(x) for x in args.mesh_shape.split(","))
     else:
         dims = (1, 1)
+    if n_pods > 1 and n_nodes <= 1:
+        raise SystemExit("--pods > 1 needs a multi-node cluster run "
+                         "(--nodes/--cluster): the pod tier composes "
+                         "above the NIC tier")
     if n_nodes > 1:
         if len(dims) != 2:
             raise SystemExit("--nodes combines with a 2-dim (data, model) "
                              "--mesh-shape only")
-        mesh = make_cluster_mesh(n_nodes, *dims)
+        mesh = make_cluster_mesh(n_nodes, *dims, pods=n_pods)
     else:
         mesh = make_mesh(dims, ("data", "model")[-len(dims):]
                          if len(dims) == 2 else ("pod", "data", "model"))

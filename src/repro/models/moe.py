@@ -2,13 +2,18 @@
 
 Two production sharding schemes, selected per-arch (config.MoEConfig.impl):
 
-  ep_a2a : experts sharded over the DATA axis (expert parallelism) with
-           all_to_all dispatch/return, + tensor parallelism *inside* each
-           expert over the model axis (col/row split of the expert FFN with
-           a FlexLink all_reduce).  Used when n_experts %% dp == 0
+  ep_a2a : experts sharded over the EXPERT-PARALLEL span — the data axis,
+           plus the node and pod axes on a cluster mesh
+           (ctx.ep_axes, DESIGN.md §15) — with all_to_all
+           dispatch/return, + tensor parallelism *inside* each expert
+           over the model axis (col/row split of the expert FFN with a
+           FlexLink all_reduce).  Used when n_experts %% ep == 0
            (kimi-k2: 384 experts over dp=16 -> 24 experts/rank).
-           The all_to_all is FlexLink-backed — MoE dispatch is exactly the
-           traffic the paper targets (Fig. 3).
+           The all_to_all is FlexLink-backed — MoE dispatch is exactly
+           the traffic the paper targets (Fig. 3) — and on a cluster
+           mesh it is the RAIL-LOCAL decomposition
+           (ctx.ep_all_to_all): intra shuffle + rail-aligned NIC leg
+           (+ spine leg), bit-exact vs the flat all_to_all.
 
   tp     : experts replicated, every expert's FFN hidden dim sharded over
            the model axis; tokens never leave their rank (no a2a), the
@@ -102,7 +107,7 @@ def combine_from_buffers(buf: jax.Array, slots: jax.Array, keep: jax.Array,
 
 def init_experts(key, cfg: ArchConfig, dtype):
     """GLOBAL shapes [n_experts, d, d_ff]; moe_specs shards the expert dim
-    over data (ep_a2a) and the hidden dim over model."""
+    over the ep span (ep_a2a) and the hidden dim over model."""
     d, f = cfg.d_model, cfg.d_ff
     n = cfg.moe.n_experts
     k1, k2, k3 = jax.random.split(key, 3)
@@ -134,7 +139,10 @@ def init_moe(key, cfg: ArchConfig, dtype):
     }
 
 
-def moe_specs(cfg: ArchConfig, data_axis: str, model_axis: str):
+def moe_specs(cfg: ArchConfig, data_axis, model_axis: str):
+    """``data_axis`` is the expert-dim entry: a bare axis name, or the
+    outermost-major ep axis tuple on a cluster mesh (ctx.ep_spec_axis())
+    — PartitionSpec takes either form unchanged."""
     from jax.sharding import PartitionSpec as P
     e_axis = data_axis if cfg.moe.impl == "ep_a2a" else None
     return {
@@ -160,19 +168,21 @@ def moe_block(p, x: jax.Array, cfg: ArchConfig,
     slots, keep = dispatch_indices(experts.reshape(-1), moe.n_experts, cap)
     buf = gather_to_buffers(xk, slots, keep, moe.n_experts, cap)
 
-    if moe.impl == "ep_a2a" and ctx.dp_size > 1:
-        ep = ctx.dp_size
+    if moe.impl == "ep_a2a" and ctx.ep_size > 1:
+        ep = ctx.ep_size
         n_local = moe.n_experts // ep
-        # [E*cap, D] -> a2a over data: each rank keeps its expert slice of
-        # every peer's buffer -> [ep * n_local * cap, D]
-        sent = ctx.dp_all_to_all(buf, split_axis=0, concat_axis=0)
+        # [E*cap, D] -> a2a over the ep span: each rank keeps its expert
+        # slice of every peer's buffer -> [ep * n_local * cap, D].  On a
+        # cluster mesh this is the rail-local decomposition; single-node
+        # it is the flat data-axis all_to_all, byte-identically.
+        sent = ctx.ep_all_to_all(buf, split_axis=0, concat_axis=0)
         inb = sent.reshape(ep, n_local, cap, d)
         inb = inb.transpose(1, 0, 2, 3).reshape(n_local, ep * cap, d)
         out_loc = expert_ffn(p["experts"], inb)           # TP-sharded d_ff
         out_loc = ctx.tp_all_reduce(out_loc)              # row-parallel
         outb = out_loc.reshape(n_local, ep, cap, d).transpose(1, 0, 2, 3)
         outb = outb.reshape(ep * n_local * cap, d)
-        ret = ctx.dp_all_to_all(outb, split_axis=0, concat_axis=0)
+        ret = ctx.ep_all_to_all(outb, split_axis=0, concat_axis=0)
         buf_out = ret                                     # [E*cap, D]
     else:
         out_loc = expert_ffn(

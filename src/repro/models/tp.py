@@ -48,7 +48,12 @@ class ParallelCtx:
     node_axis  : inter-node axis ("node") — crosses the cluster's NIC tier;
                  gradient reduction becomes the two-tier hierarchical
                  AllReduce of ``repro.cluster`` (DESIGN.md §9)
-    pod_axis   : pod axis for multi-pod meshes (gradient reduction only)
+    pod_axis   : pod axis for multi-pod meshes.  On a cluster mesh (node
+                 axis live) with a pod-tier topology this axis crosses
+                 the pod/DCN tier as its own FlexCommunicator and joins
+                 the hierarchical compositions + the expert-parallel
+                 span (DESIGN.md §15); on the legacy pod-only production
+                 mesh it stays a plain psum (gradient reduction only)
     tp/dp size : static sizes (mesh-derived; needed before tracing)
     cluster    : the ClusterTopology behind the node axis; synthesized
                  from the comm profile (cluster_for) when left None
@@ -71,6 +76,7 @@ class ParallelCtx:
     _tp_comm: Optional[FlexCommunicator] = None
     _dp_comm: Optional[FlexCommunicator] = None
     _node_comm: Optional[FlexCommunicator] = None
+    _pod_comm: Optional[FlexCommunicator] = None
     _cluster_comm: Optional[object] = None  # ClusterCommunicator
 
     def __post_init__(self):
@@ -87,9 +93,11 @@ class ParallelCtx:
             # communicator stack this module fronts
             from repro.cluster.communicator import ClusterCommunicator
             from repro.cluster.topology import cluster_for
+            want_pods = (self.pod_size
+                         if self.pod_axis and self.pod_size > 1 else 1)
             if self.cluster is None:
                 self.cluster = cluster_for(self.comm_config.profile,
-                                           self.node_size)
+                                           self.node_size, pods=want_pods)
             if self.cluster.n_nodes != self.node_size:
                 raise ValueError(
                     f"cluster {self.cluster.name!r} has "
@@ -112,16 +120,32 @@ class ParallelCtx:
             self._node_comm = comm_init_rank(
                 self.node_axis, self.node_size, inter_cfg,
                 ortho_name=ortho)
+            if self.cluster.n_pods > 1 and self.cluster.n_pods != want_pods:
+                raise ValueError(
+                    f"cluster {self.cluster.name!r} has "
+                    f"{self.cluster.n_pods} pods but the mesh's pod axis "
+                    f"spans {want_pods}")
+            if want_pods > 1 and self.cluster.n_pods == want_pods:
+                # the pod/DCN tier is its own communicator too — same
+                # CommConfig knobs against the spine link pool, so the
+                # pod tier tunes, drains, compresses and rekeys exactly
+                # like the tiers below it (DESIGN.md §15)
+                pod_cfg = dataclasses.replace(
+                    self.comm_config, profile=self.cluster.pod_tier.name)
+                self._pod_comm = comm_init_rank(
+                    self.pod_axis, self.pod_size, pod_cfg,
+                    ortho_name=self.node_axis)
             self._cluster_comm = ClusterCommunicator(
-                self.cluster, self._dp_comm, self._node_comm)
+                self.cluster, self._dp_comm, self._node_comm,
+                self._pod_comm)
 
     # -- plan-engine plumbing -------------------------------------------------
 
     def comms(self) -> Tuple[FlexCommunicator, ...]:
         """The live communicators behind this ctx (tp, dp, then the
-        cluster's NIC tier)."""
+        cluster's NIC tier, then its pod tier)."""
         return tuple(c for c in (self._tp_comm, self._dp_comm,
-                                 self._node_comm)
+                                 self._node_comm, self._pod_comm)
                      if c is not None)
 
     def observe_executed_step(self) -> bool:
@@ -237,15 +261,26 @@ class ParallelCtx:
 
         legs = []   # (communicator, collective, payload bytes) traversed
         if expert:
-            if self._node_comm is not None:
-                legs.append((self._node_comm, Collective.ALL_REDUCE, nbytes))
+            # ep_a2a expert grads are pre-accumulated by the backward
+            # all_to_all over every ep tier (data + node + pod when
+            # live); the only remaining reduce is a plain psum over
+            # whatever gradient axis the ep span excludes — no wire
+            # codec ever touches them, so EF stays off.  The historical
+            # node-tier AR leg existed only while experts were sharded
+            # over the data axis alone.
+            pass
         elif self._cluster_comm is not None:
             cc = self._cluster_comm
             if cc.hierarchical:
-                shard = max(nbytes // cc.intra.n_ranks, 1)
-                legs = [(cc.intra, Collective.REDUCE_SCATTER, nbytes),
-                        (cc.inter, Collective.ALL_REDUCE, shard),
-                        (cc.intra, Collective.ALL_GATHER, shard)]
+                tiers = cc.comms()
+                nb = nbytes
+                for t in tiers[:-1]:
+                    legs.append((t, Collective.REDUCE_SCATTER, nb))
+                    nb = max(nb // t.n_ranks, 1)
+                legs.append((tiers[-1], Collective.ALL_REDUCE, nb))
+                for t in reversed(tiers[:-1]):
+                    legs.append((t, Collective.ALL_GATHER, nb))
+                    nb *= t.n_ranks
             else:
                 legs = [(c, Collective.ALL_REDUCE, nbytes)
                         for c in cc.comms()]
@@ -366,6 +401,58 @@ class ParallelCtx:
             return x
         return self._dp_comm.all_to_all(x, split_axis, concat_axis)
 
+    # -- expert-parallel span (MoE ep_a2a dispatch, DESIGN.md §15) -------------
+
+    @property
+    def ep_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the expert dimension shards over, outermost first
+        (pod, node, data) — exactly the tiers whose communicators the
+        cluster composition spans, so ``ep_all_to_all`` and the expert
+        PartitionSpec always agree on the combined rank order."""
+        axes = []
+        if self._pod_comm is not None:
+            axes.append(self.pod_axis)
+        if self._node_comm is not None:
+            axes.append(self.node_axis)
+        if self._dp_comm is not None:
+            axes.append(self.dp_axis)
+        elif self.dp_axis and self.dp_size > 1:
+            axes.append(self.dp_axis)
+        return tuple(axes)
+
+    @property
+    def ep_size(self) -> int:
+        """Total expert-parallel ways: the product of the ep axes."""
+        sizes = {self.pod_axis: self.pod_size, self.node_axis:
+                 self.node_size, self.dp_axis: self.dp_size}
+        s = 1
+        for a in self.ep_axes:
+            s *= sizes[a]
+        return s
+
+    def ep_spec_axis(self):
+        """The expert-dim PartitionSpec entry: None / a bare axis name /
+        the outermost-major axis tuple — what ``param_specs`` shards the
+        expert dimension by."""
+        axes = self.ep_axes
+        if not axes:
+            return None
+        if len(axes) == 1:
+            return axes[0]
+        return axes
+
+    def ep_all_to_all(self, x: jax.Array, split_axis: int,
+                      concat_axis: int) -> jax.Array:
+        """Expert-dispatch all_to_all over the full ep span.  On a
+        cluster mesh this is the rail-local decomposition of
+        ``ClusterCommunicator.ep_all_to_all`` (intra shuffle + rail-
+        aligned NIC leg + spine leg); single-node meshes keep the flat
+        FlexLink-backed data-axis all_to_all, byte-identically."""
+        if self._cluster_comm is not None:
+            return self._cluster_comm.ep_all_to_all(x, split_axis,
+                                                    concat_axis)
+        return self.dp_all_to_all(x, split_axis, concat_axis)
+
     def dp_psum(self, x: jax.Array) -> jax.Array:
         if self.dp_axis is None or self.dp_size <= 1:
             return x
@@ -387,8 +474,10 @@ class ParallelCtx:
         return lax.pmax(x, self.dp_axis)
 
     def pod_psum(self, x: jax.Array) -> jax.Array:
-        """Pod-axis (DCN) reduction — its own link class, not aggregatable
-        with intra-pod paths, so it stays a plain psum."""
+        """Plain pod-axis (DCN) reduction — the legacy pod-only
+        production mesh, where the pod tier has no modeled link pool.
+        On a 3-tier cluster mesh the pod axis rides its own flex
+        communicator instead (see grad_all_reduce / ep_all_to_all)."""
         if self.pod_axis is None or self.pod_size <= 1:
             return x
         return lax.psum(x, self.pod_axis)
@@ -447,21 +536,44 @@ class ParallelCtx:
     def grad_all_reduce(self, grads):
         """Gradient reduction over data, node and pod axes.
 
-        With a node axis this is the two-tier hierarchical AllReduce
-        (DESIGN.md §9): intra-node flex reduce-scatter over the data
-        axis, NIC-tier flex all-reduce over the node axis on the 1/m
-        shard, intra-node flex all-gather — each tier its own RoutePlan.
+        With a node axis this is the hierarchical AllReduce of
+        ``repro.cluster`` (DESIGN.md §9, §15): per-tier flex
+        reduce-scatter down the chain, top-tier flex all-reduce on the
+        smallest shard, per-tier flex all-gather back — each leg its own
+        RoutePlan.  When the pod tier has its own communicator the pod
+        axis is part of that composition; otherwise (legacy pod-only
+        mesh, or no pod axis) any pod reduction stays a plain psum.
         Single-node meshes keep the flat FlexLink-backed data-axis
-        reduce; the pod axis stays a plain psum (see pod_psum)."""
+        reduce."""
         def red(g):
             if self._cluster_comm is not None:
                 g = self._cluster_comm.all_reduce(g)
-            elif self._dp_comm is not None:
+                if self._pod_comm is None:
+                    g = self.pod_psum(g)
+                return g
+            if self._dp_comm is not None:
                 g = self._dp_comm.all_reduce(g)
             elif self.dp_axis and self.dp_size > 1:
                 g = lax.psum(g, self.dp_axis)
             return self.pod_psum(g)
         return jax.tree.map(red, grads)
+
+    def expert_grad_reduce(self, g: jax.Array) -> jax.Array:
+        """Reduce one ep_a2a expert grad over the gradient axes OUTSIDE
+        the expert-parallel span.  The backward all_to_all already
+        accumulated expert grads across every ep tier (data, plus node
+        and pod when their communicators are live), so only the
+        remaining replicated axes need a reduce — and each is a plain
+        psum (there is no modeled link pool behind them by
+        construction).  Single-node ep keeps the legacy behavior: no
+        node axis, pod stays a psum."""
+        if self._node_comm is None:
+            # ep spans the data axis only — node (absent) and pod
+            # (legacy production mesh) are replicated axes
+            return self.pod_psum(g)
+        if self._pod_comm is None:
+            return self.pod_psum(g)
+        return g
 
     # -- sizing helpers --------------------------------------------------------
 

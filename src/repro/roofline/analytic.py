@@ -157,7 +157,13 @@ def param_count(cfg: ArchConfig, active_only: bool = False) -> float:
 
 def cost_model(cfg: ArchConfig, shape: InputShape, *, tp: int, dp: int,
                pods: int = 1, backend: str = "flexlink",
-               remat=True) -> CostBreakdown:
+               remat=True, ep_over_pods: bool = False) -> CostBreakdown:
+    """``ep_over_pods=True`` models the 3-tier cluster mesh (DESIGN.md
+    §15): experts shard over the full (pod, node, data) ep span, so the
+    pod-tier gradient AllReduce carries only the NON-expert params (the
+    expert grads are pre-accumulated by the backward all_to_all).  The
+    default False keeps the legacy (pod, data, model) production-mesh
+    arithmetic — and every existing record — byte-identical."""
     d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
     dt = _dtype_bytes(cfg)
     chips = tp * dp * pods
@@ -291,8 +297,9 @@ def cost_model(cfg: ArchConfig, shape: InputShape, *, tp: int, dp: int,
                 "all_reduce", "data",
                 (sync_params / tp) * 4 * chips / (dp * pods)))
         if pods > 1:
+            pod_sync = sync_params if ep_over_pods else params
             colls.append(CollOp(
-                "all_reduce", "pod", (params / tp) * 4 * chips / pods))
+                "all_reduce", "pod", (pod_sync / tp) * 4 * chips / pods))
         # HBM: weights fwd+bwd+remat reads + grad write/read + adamw state
         hbm += (2 + remat_factor) * w_bytes + 2 * params * 4
         hbm += 3 * params * 4 * 2                  # mu, nu, p fp32 update rw

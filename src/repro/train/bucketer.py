@@ -16,9 +16,10 @@ Packing rules:
     the target — for scanned ``[L, ...]`` parameter stacks that is
     per-layer granularity, taken from the END of the stack first;
   * buckets are dtype-homogeneous (pieces concatenate into one flat
-    payload) and kind-homogeneous: ep_a2a expert grads reduce over
-    node+pod only (their data-axis sum already happened in the backward
-    all_to_all), so they never share a plan with dense grads;
+    payload) and kind-homogeneous: ep_a2a expert grads reduce over the
+    replicated axes outside the ep span only (their ep-axis sum already
+    happened in the backward all_to_all — ctx.expert_grad_reduce), so
+    they never share a plan with dense grads;
   * a piece larger than the target gets a bucket of its own.
 
 Bucketed and monolithic sync are bit-exact: the reduce is elementwise
@@ -59,8 +60,8 @@ from repro.kernels import ops as kops
 
 
 def is_expert_param(path) -> bool:
-    """ep_a2a expert leaves — grads already summed over data ranks by the
-    backward all_to_all (train_step docstring)."""
+    """ep_a2a expert leaves — grads already summed over the ep ranks by
+    the backward all_to_all (train_step docstring)."""
     return any(getattr(k, "key", None) == "experts" for k in path)
 
 
@@ -229,7 +230,7 @@ class GradBucketer:
                     # definition — must not perturb the exact transfer
                     new_res = jnp.zeros_like(flat)
                 if b.expert:
-                    red = ctx.pod_psum(ctx.node_all_reduce(flat))
+                    red = ctx.expert_grad_reduce(flat)
                 else:
                     red = ctx.grad_all_reduce(flat)
             off = 0

@@ -7,9 +7,11 @@ Gradient-sync topology (DESIGN.md §5, §9):
     "DP gradient all-reduce" the paper's Fig. 3 targets; with a node axis
     the data+node reduce is the two-tier hierarchical AllReduce of
     ``repro.cluster``);
-  * ep_a2a expert params are SHARDED over the data axis -> the backward
-    all_to_all already accumulated their gradients across data ranks; they
-    reduce over the node axis (NIC-tier flex) and psum over the pod axis.
+  * ep_a2a expert params are SHARDED over the full expert-parallel span
+    (data, plus node and pod on a cluster mesh — DESIGN.md §15) -> the
+    backward all_to_all already accumulated their gradients across every
+    ep rank; any remaining replicated axis is a plain psum
+    (ctx.expert_grad_reduce).
 The local loss is pre-scaled by 1/(dp*nodes*pods) so every reduce lands
 directly on the global-mean gradient.
 
@@ -59,7 +61,7 @@ def sync_grads(grads, cfg: ArchConfig, ctx: ParallelCtx, *,
 
     def sync(path, g):
         if ep and is_expert_param(path):
-            return ctx.pod_psum(ctx.node_all_reduce(g))
+            return ctx.expert_grad_reduce(g)
         return ctx.grad_all_reduce(g)
 
     return jax.tree_util.tree_map_with_path(sync, grads)
